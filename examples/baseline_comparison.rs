@@ -1,0 +1,97 @@
+//! Table-1-style comparison on one benchmark: uncompressed, Deep
+//! Compression, Bayesian Compression, MIRACLE (lowest error) and MIRACLE
+//! (highest compression).
+//!
+//! ```text
+//! cargo run --release --example baseline_comparison [-- --model tiny_mlp]
+//! ```
+//! `--model lenet_synth` runs the paper-scale benchmark (several minutes).
+
+use miracle::baselines::bayescomp::BayesCompCfg;
+use miracle::baselines::deepcomp::DeepCompCfg;
+use miracle::baselines::runner;
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::data;
+use miracle::metrics::{fmt_size, Table};
+use miracle::runtime::{self, Runtime};
+use miracle::util::args::Args;
+use miracle::util::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[])?;
+    let model = args.str("model", "tiny_mlp");
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &model)?;
+    let dense_name = if model == "tiny_mlp" {
+        "tiny_mlp".to_string()
+    } else {
+        format!("{model}_dense")
+    };
+    let dense_arts = runtime::load(&rt, &dense_name)?;
+
+    let (train, test) = if model.starts_with("conv") {
+        (
+            data::synth_cifar(2048, 16, 16, 1234),
+            data::synth_cifar(1024, 16, 16, 99),
+        )
+    } else if model.starts_with("lenet") {
+        (data::synth_mnist(4096, 1234), data::synth_mnist(2048, 99))
+    } else {
+        (
+            data::synth_protos(512, 16, 4, 1234),
+            data::synth_protos(512, 16, 4, 99),
+        )
+    };
+    let fast = model == "tiny_mlp";
+    let (i0, steps_dense) = if fast { (1500, 800) } else { (4000, 3000) };
+    let lr = if fast { 5e-3 } else { 2e-3 };
+
+    let n_bits_fp32 = dense_arts.meta.n_total * 32;
+    let mut table = Table::new(
+        &format!("Table 1 (ours) — {model}"),
+        &["Compression", "Size", "Ratio", "Test error"],
+    );
+    let mut add = |label: &str, bits: usize, err: f64| {
+        table.row(vec![
+            label.to_string(),
+            fmt_size(bits as f64 / 8.0),
+            format!("{:.0}x", n_bits_fp32 as f64 / bits as f64),
+            format!("{:.2} %", err * 100.0),
+        ]);
+    };
+
+    // baselines on the dense net
+    let post =
+        runner::train_dense(&dense_arts, &train, steps_dense, lr, train.len() as f32, 7)?;
+    let suite = runner::baseline_suite(
+        &dense_arts,
+        &post,
+        &test,
+        &DeepCompCfg { sparsity: 0.9, clusters: 16, ..Default::default() },
+        &BayesCompCfg::default(),
+    )?;
+    for p in &suite {
+        add(&p.label, p.bits, p.test_error);
+    }
+
+    // MIRACLE at two operating points
+    for (tag, bits) in [("MIRACLE (lowest error)", 14u8), ("MIRACLE (highest compression)", 6)] {
+        let cfg = MiracleCfg {
+            c_loc_bits: bits,
+            i0,
+            i_intermediate: 1,
+            lr,
+            beta0: 1e-4,
+            eps_beta: 0.01,
+            data_scale: train.len() as f32,
+            ..Default::default()
+        };
+        let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+        add(tag, r.total_bits, r.test_error);
+    }
+
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Pareto frontier sweep (Figure 1 driver, small-scale interactive version).
+//!
+//! Sweeps the per-block coding budget `C_loc` — exactly how the paper traces
+//! its trade-off curve for VGG ("C_loc was varied between 15 and 5 bits, B
+//! kept constant") — and prints the (size, test error) series for MIRACLE
+//! next to the Deep-Compression and Bayesian-Compression baselines.
+//!
+//! ```text
+//! cargo run --release --example pareto_sweep [-- --model tiny_mlp --fast]
+//! ```
+//! Use `--model lenet_synth` for the paper-scale benchmark (a few minutes).
+
+use miracle::baselines::runner;
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::data;
+use miracle::metrics::{fmt_size, Table};
+use miracle::runtime::{self, Runtime};
+use miracle::util::args::Args;
+use miracle::util::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fast"])?;
+    let model = args.str("model", "tiny_mlp");
+    let fast = args.flag("fast") || model == "tiny_mlp";
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &model)?;
+    let dense_name = if model == "tiny_mlp" {
+        "tiny_mlp".to_string()
+    } else {
+        format!("{model}_dense")
+    };
+    let dense_arts = runtime::load(&rt, &dense_name)?;
+
+    let (train, test) = if model.starts_with("conv") {
+        (
+            data::synth_cifar(2048, 16, 16, 1234),
+            data::synth_cifar(1024, 16, 16, 99),
+        )
+    } else if model.starts_with("lenet") {
+        (data::synth_mnist(4096, 1234), data::synth_mnist(2048, 99))
+    } else {
+        (
+            data::synth_protos(512, 16, 4, 1234),
+            data::synth_protos(512, 16, 4, 99),
+        )
+    };
+
+    let (i0, i_int, steps_dense) = if fast { (1200, 1, 600) } else { (4000, 1, 3000) };
+
+    let mut table = Table::new(
+        &format!("Pareto sweep — {model}"),
+        &["method", "size", "bits", "test error %"],
+    );
+
+    // MIRACLE series: sweep C_loc at fixed B (the paper's VGG protocol)
+    let budgets: &[u8] = if fast { &[6, 10, 14] } else { &[5, 8, 10, 12, 14] };
+    for &bits in budgets {
+        let cfg = MiracleCfg {
+            c_loc_bits: bits,
+            i0,
+            i_intermediate: i_int,
+            lr: if model == "tiny_mlp" { 5e-3 } else { 2e-3 },
+            beta0: 1e-4,
+            eps_beta: 0.01,
+            data_scale: train.len() as f32,
+            ..Default::default()
+        };
+        let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+        table.row(vec![
+            format!("MIRACLE C_loc={bits}b"),
+            fmt_size(r.total_bits as f64 / 8.0),
+            r.total_bits.to_string(),
+            format!("{:.2}", r.test_error * 100.0),
+        ]);
+    }
+
+    // baselines on the dense (no-hashing) net
+    let post = runner::train_dense(
+        &dense_arts,
+        &train,
+        steps_dense,
+        2e-3,
+        train.len() as f32,
+        7,
+    )?;
+    let un = miracle::baselines::uncompressed(&post.mu_full, false);
+    table.row(vec![
+        "Uncompressed fp32".into(),
+        fmt_size(un.bits as f64 / 8.0),
+        un.bits.to_string(),
+        format!(
+            "{:.2}",
+            coordinator::eval_error_full(&dense_arts, &un.weights, &test)? * 100.0
+        ),
+    ]);
+    for p in runner::deepcomp_sweep(
+        &dense_arts,
+        &post,
+        &test,
+        &[(0.5, 32), (0.8, 16), (0.95, 8)],
+    )? {
+        table.row(vec![
+            p.label,
+            fmt_size(p.bits as f64 / 8.0),
+            p.bits.to_string(),
+            format!("{:.2}", p.test_error * 100.0),
+        ]);
+    }
+    for p in runner::bayescomp_sweep(&dense_arts, &post, &test, &[0.5, 1.0, 2.0])? {
+        table.row(vec![
+            p.label,
+            fmt_size(p.bits as f64 / 8.0),
+            p.bits.to_string(),
+            format!("{:.2}", p.test_error * 100.0),
+        ]);
+    }
+
+    print!("{}", table.render());
+    Ok(())
+}

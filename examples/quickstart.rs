@@ -1,0 +1,69 @@
+//! Quickstart: compress a small model with MIRACLE end to end.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Trains a variational MLP on a synthetic 4-class task, runs Algorithm 2
+//! (block-wise minimal random coding), writes the `.mrc`, decodes it back
+//! and reports size + test error.
+
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::data;
+use miracle::metrics::fmt_size;
+use miracle::runtime::{self, Runtime};
+use miracle::util::Result;
+
+fn main() -> Result<()> {
+    // 1. PJRT runtime + AOT artifacts (built once by `make artifacts`)
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, "tiny_mlp")?;
+
+    // 2. synthetic benchmark data (train/test disjoint by seed)
+    let train = data::synth_protos(512, 16, 4, 1234);
+    let test = data::synth_protos(512, 16, 4, 1234 ^ 0x7E57);
+
+    // 3. MIRACLE hyper-parameters: a 10-bit-per-block coding goal
+    let cfg = MiracleCfg {
+        c_loc_bits: 10,
+        i0: 1500,
+        i_intermediate: 2,
+        lr: 5e-3,
+        beta0: 1e-3,
+        eps_beta: 0.02,
+        data_scale: train.len() as f32,
+        ..Default::default()
+    };
+
+    // 4. compress = train + encode (Algorithm 2)
+    let result = coordinator::compress(&arts, &train, &test, &cfg)?;
+    let n = arts.meta.n_total;
+
+    println!("--- MIRACLE quickstart ---");
+    println!("weights:     {n}");
+    println!("uncompressed {}", fmt_size(n as f64 * 4.0));
+    println!(
+        "compressed   {} ({:.0}x)",
+        fmt_size(result.total_bits as f64 / 8.0),
+        (n * 32) as f64 / result.total_bits as f64
+    );
+    println!("test error   {:.2}%", result.test_error * 100.0);
+    println!(
+        "block KL     {:.2} bits (goal {})",
+        result.mean_block_kl_bits, cfg.c_loc_bits
+    );
+
+    // 5. the .mrc round-trips: decode is pure shared-randomness replay
+    let path = std::env::temp_dir().join("quickstart.mrc");
+    result.mrc.save(path.to_str().unwrap())?;
+    let loaded = miracle::codec::MrcFile::load(path.to_str().unwrap())?;
+    let w = coordinator::decode_model(&arts, &loaded)?;
+    let layout = miracle::model::Layout::generate(&arts.meta, loaded.layout_seed);
+    let err = coordinator::eval_error(&arts, &layout.assemble_map, &w, &test)?;
+    assert_eq!(
+        err, result.test_error,
+        "decode must reproduce the encoder's weights"
+    );
+    println!("round-trip OK: decoded model scores identically");
+    Ok(())
+}

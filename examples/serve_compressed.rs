@@ -1,0 +1,90 @@
+//! Edge-deployment scenario: compress once, then serve predictions straight
+//! from the `.mrc` — the paper §5 "inference machine" that reconstructs
+//! weights from the pseudo-random generator instead of storing them.
+//!
+//! ```text
+//! cargo run --release --example serve_compressed [-- --clients 8 --requests 64]
+//! ```
+//!
+//! Reports decode time, end-to-end request latency percentiles, batching
+//! behaviour and throughput.
+
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::data;
+use miracle::metrics::fmt_size;
+use miracle::runtime::{self, Runtime};
+use miracle::server::{spawn_clients, Server, ServerCfg};
+use miracle::util::args::Args;
+use miracle::util::Result;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["lazy"])?;
+    let n_clients = args.usize("clients", 8)?;
+    let per_client = args.usize("requests", 64)?;
+    let max_batch = args.usize("max-batch", 64)?;
+    let lazy = args.flag("lazy");
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, "tiny_mlp")?;
+    let train = data::synth_protos(512, 16, 4, 1234);
+    let test = data::synth_protos(512, 16, 4, 99);
+
+    // 1. compress (fast settings; quality matters less than the serving demo)
+    let cfg = MiracleCfg {
+        c_loc_bits: 10,
+        i0: 800,
+        i_intermediate: 1,
+        lr: 5e-3,
+        beta0: 1e-3,
+        eps_beta: 0.02,
+        data_scale: train.len() as f32,
+        ..Default::default()
+    };
+    let result = coordinator::compress(&arts, &train, &test, &cfg)?;
+    println!(
+        "compressed model: {} (error {:.2}%)",
+        fmt_size(result.total_bits as f64 / 8.0),
+        result.test_error * 100.0
+    );
+
+    // 2. serve it: router + dynamic batcher over the mpsc channel
+    let server_cfg = ServerCfg {
+        max_batch,
+        batch_window: Duration::from_millis(2),
+        lazy_decode: lazy,
+    };
+    let mut server = Server::new(&arts, &result.mrc, server_cfg)?;
+    let feat = test.feature_dim();
+    let examples: Vec<Vec<f32>> = (0..test.len())
+        .map(|i| test.x[i * feat..(i + 1) * feat].to_vec())
+        .collect();
+    let (rx, clients) = spawn_clients(examples, n_clients, per_client, Duration::ZERO);
+    let stats = server.run(rx)?;
+    let responses = clients.join().expect("clients");
+
+    println!("--- serving stats ---");
+    println!(
+        "requests:    {} over {} batches ({:.1} avg batch)",
+        stats.served,
+        stats.batches,
+        stats.served as f64 / stats.batches.max(1) as f64
+    );
+    println!(
+        "throughput:  {:.0} req/s",
+        stats.served as f64 / stats.wall_secs
+    );
+    println!(
+        "latency ms:  p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+        stats.latency.p50 * 1e3,
+        stats.latency.p95 * 1e3,
+        stats.latency.p99 * 1e3,
+        stats.latency.max * 1e3
+    );
+    println!("exec/batch:  {:.2} ms", stats.exec_time.mean * 1e3);
+    println!("decode:      {:.3} s for {} blocks", stats.decode_secs, result.mrc.b);
+    let agree = responses.iter().filter(|r| r.pred < 4).count();
+    assert_eq!(agree, responses.len());
+    Ok(())
+}

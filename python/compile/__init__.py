@@ -1,0 +1,1 @@
+"""Build-time python package: JAX model + Pallas kernels + AOT lowering."""

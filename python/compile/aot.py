@@ -1,0 +1,107 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+re-assigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --config ../configs/tiny_mlp.json \
+        [--config ...] --out ../artifacts
+
+Artifacts land in ``<out>/<config-name>/<entry>.hlo.txt`` plus a single
+``<out>/<config-name>/manifest.json`` describing every entry point's input
+and output shapes/dtypes (the rust runtime validates against it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import load_config
+from .model import entry_points
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": _DTYPE_NAMES[str(s.dtype)]}
+
+
+def lower_config(cfg_path: str, out_root: str) -> dict:
+    cfg = load_config(cfg_path)
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+    for name, (fn, example_args) in entry_points(cfg).items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entries[name] = {
+            "file": fname,
+            "inputs": [_spec_json(a) for a in example_args],
+            "outputs": [_spec_json(o) for o in out_shapes],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  {cfg.name}/{name}: {len(text)} chars")
+    manifest = {
+        "config": cfg.name,
+        "config_sha256": _file_sha(cfg_path),
+        "n_total": cfg.n_total,
+        "n_slots": cfg.n_slots,
+        "n_layers": cfg.n_layers,
+        "B": cfg.B,
+        "S": cfg.S,
+        "k_chunk": cfg.k_chunk,
+        "batch": cfg.batch,
+        "eval_batch": cfg.eval_batch,
+        "classes": cfg.classes,
+        "layer_slots": list(cfg.layer_slots),
+        "layer_counts": [l.count for l in cfg.layers],
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def _file_sha(path: str) -> str:
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", required=True,
+                    help="config json path (repeatable)")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    for cfg_path in args.config:
+        print(f"lowering {cfg_path} ...")
+        lower_config(cfg_path, args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

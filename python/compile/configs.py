@@ -1,0 +1,157 @@
+"""Model/compression configuration shared between the python compile path and
+the rust coordinator.
+
+A config JSON (see ``configs/*.json`` at the repo root) fully determines the
+AOT artifact shapes:
+
+* ``arch``         — network architecture (mlp or conv+mlp head).
+* ``layer_slots``  — number of *trainable slots* per layer after the hashing
+                     trick (slots <= raw parameter count; rust generates the
+                     actual position->slot hash map at runtime).
+* ``blocks``       — ``B`` blocks of ``S`` slots each; ``B*S >= sum(layer_slots)``
+                     (the tail is padding, masked out of KL and scoring).
+* ``k_chunk``      — candidates scored per artifact invocation; the total
+                     sample budget ``K = 2**bits`` is swept at runtime by
+                     invoking more chunks.
+
+Both sides agree on the *layer parameter layout*: layers are enumerated in
+forward order, and each layer contributes ``W`` then ``b`` to the flat
+parameter vector.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One parameterized layer: weight shape + bias shape + flat offsets."""
+
+    kind: str  # "dense" | "conv"
+    w_shape: tuple
+    b_shape: tuple
+    offset: int  # offset of W in the flat parameter vector
+
+    @property
+    def w_count(self) -> int:
+        return int(math.prod(self.w_shape))
+
+    @property
+    def b_count(self) -> int:
+        return int(math.prod(self.b_shape))
+
+    @property
+    def count(self) -> int:
+        return self.w_count + self.b_count
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: dict
+    image: dict
+    layer_slots: tuple
+    B: int
+    S: int
+    k_chunk: int
+    batch: int
+    eval_batch: int
+    layers: tuple = field(default=())  # tuple[LayerSpec]
+
+    @property
+    def n_total(self) -> int:
+        return sum(l.count for l in self.layers)
+
+    @property
+    def n_slots(self) -> int:
+        return sum(self.layer_slots)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def classes(self) -> int:
+        return int(self.arch["classes"])
+
+    @property
+    def input_shape(self) -> tuple:
+        """Per-example input shape fed to the forward pass."""
+        if self.arch["type"] == "mlp":
+            return (int(self.arch["input_dim"]),)
+        img = self.arch["image"]
+        return (int(img["h"]), int(img["w"]), int(img["c"]))
+
+
+def _mlp_layers(arch: dict) -> list:
+    dims = [int(arch["input_dim"])] + [int(h) for h in arch["hidden"]] + [
+        int(arch["classes"])
+    ]
+    layers, off = [], 0
+    for i in range(len(dims) - 1):
+        spec = LayerSpec("dense", (dims[i], dims[i + 1]), (dims[i + 1],), off)
+        layers.append(spec)
+        off += spec.count
+    return layers
+
+
+def _conv_layers(arch: dict) -> list:
+    img = arch["image"]
+    h, w, c = int(img["h"]), int(img["w"]), int(img["c"])
+    layers, off = [], 0
+    for conv in arch["conv"]:
+        k, cout = int(conv["k"]), int(conv["out"])
+        spec = LayerSpec("conv", (k, k, c, cout), (cout,), off)
+        layers.append(spec)
+        off += spec.count
+        c = cout
+        h, w = h // 2, w // 2  # each conv is followed by 2x2 maxpool
+    dims = [h * w * c] + [int(d) for d in arch["hidden"]] + [int(arch["classes"])]
+    for i in range(len(dims) - 1):
+        spec = LayerSpec("dense", (dims[i], dims[i + 1]), (dims[i + 1],), off)
+        layers.append(spec)
+        off += spec.count
+    return layers
+
+
+def load_config(path: str) -> ModelConfig:
+    with open(path) as f:
+        raw = json.load(f)
+    arch = raw["arch"]
+    layers = _mlp_layers(arch) if arch["type"] == "mlp" else _conv_layers(arch)
+    cfg = ModelConfig(
+        name=raw["name"],
+        arch=arch,
+        image=raw["image"],
+        layer_slots=tuple(int(x) for x in raw["layer_slots"]),
+        B=int(raw["blocks"]["B"]),
+        S=int(raw["blocks"]["S"]),
+        k_chunk=int(raw["k_chunk"]),
+        batch=int(raw["batch"]),
+        eval_batch=int(raw["eval_batch"]),
+        layers=tuple(layers),
+    )
+    validate(cfg)
+    return cfg
+
+
+def validate(cfg: ModelConfig) -> None:
+    if len(cfg.layer_slots) != cfg.n_layers:
+        raise ValueError(
+            f"{cfg.name}: layer_slots has {len(cfg.layer_slots)} entries, "
+            f"arch has {cfg.n_layers} layers"
+        )
+    for spec, m in zip(cfg.layers, cfg.layer_slots):
+        if not (0 < m <= spec.count):
+            raise ValueError(
+                f"{cfg.name}: layer slots {m} outside (0, {spec.count}]"
+            )
+    if cfg.B * cfg.S < cfg.n_slots:
+        raise ValueError(
+            f"{cfg.name}: B*S={cfg.B * cfg.S} < total slots {cfg.n_slots}"
+        )
+    if cfg.k_chunk <= 0 or cfg.k_chunk & (cfg.k_chunk - 1):
+        raise ValueError(f"{cfg.name}: k_chunk must be a power of two")

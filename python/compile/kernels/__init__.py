@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for MIRACLE's compute hot-spots + pure-jnp oracles."""
+
+from .importance import importance_logits
+from .kl import block_kl
+from .sample_linear import sample_linear
+
+__all__ = ["importance_logits", "block_kl", "sample_linear"]

@@ -1,0 +1,99 @@
+"""Structural performance analysis of the Pallas kernels.
+
+interpret=True gives CPU-numpy timings only, so TPU efficiency is *estimated*
+from the BlockSpec structure (DESIGN.md §3/§7): VMEM footprint per grid step,
+arithmetic intensity against the HBM stream, and the implied roofline bound
+on a reference TPU core (v4-like numbers: 275 TFLOP/s bf16 MXU, ~1.2 TB/s
+HBM, 16 MiB VMEM). Usage::
+
+    python -m compile.kernels.analysis          # print report
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# reference TPU core (v4-ish, per-core)
+HBM_BW = 1.2e12  # B/s
+VMEM_BYTES = 16 * 2**20
+VPU_FLOPS = 4.4e12  # f32 vector unit
+MXU_FLOPS = 137e12  # bf16 matmul per core
+
+
+@dataclass
+class KernelReport:
+    name: str
+    vmem_bytes: int
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops_per_step / self.hbm_bytes_per_step
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    def roofline_flops(self, peak: float) -> float:
+        """Attainable FLOP/s = min(peak, intensity * HBM bandwidth)."""
+        return min(peak, self.intensity * HBM_BW)
+
+    def efficiency(self, peak: float) -> float:
+        return self.roofline_flops(peak) / peak
+
+
+def importance_report(k_tile: int, s: int, dtype_bytes: int = 4) -> KernelReport:
+    """score kernel: [K_tile, S] candidate panel, elementwise + row reduce.
+
+    ~9 flops per element (exp x2, mul/add chain, masked sum). The z panel
+    streams from HBM once; parameter rows stay resident; logits stream out.
+    """
+    vmem = (k_tile * s + 4 * s + k_tile) * dtype_bytes
+    flops = 9.0 * k_tile * s
+    hbm = (k_tile * s + k_tile) * dtype_bytes
+    return KernelReport("importance_logits", vmem, flops, hbm)
+
+
+def kl_report(b_tile: int, s: int, dtype_bytes: int = 4) -> KernelReport:
+    """block-KL kernel: 4 [B_tile, S] panels in, [B_tile] out, ~8 flops/elem."""
+    vmem = (4 * b_tile * s + b_tile) * dtype_bytes
+    flops = 8.0 * b_tile * s
+    hbm = (4 * b_tile * s + b_tile) * dtype_bytes
+    return KernelReport("block_kl", vmem, flops, hbm)
+
+
+def sample_linear_report(
+    batch: int, d_in: int, o_tile: int, dtype_bytes: int = 4
+) -> KernelReport:
+    """fused reparameterized matmul: 3 [d_in, o_tile] panels (mu, ls, eps)
+    + x [batch, d_in]; 2*batch*d_in*o_tile matmul flops on the MXU plus
+    2 flops/weight for the fused sample."""
+    vmem = (batch * d_in + 3 * d_in * o_tile + batch * o_tile + o_tile) * dtype_bytes
+    flops = 2.0 * batch * d_in * o_tile + 2.0 * d_in * o_tile
+    hbm = (3 * d_in * o_tile + batch * o_tile) * dtype_bytes  # x resident
+    return KernelReport("sample_linear", vmem, flops, hbm)
+
+
+def report() -> list:
+    return [
+        importance_report(k_tile=256, s=16),
+        kl_report(b_tile=128, s=16),
+        sample_linear_report(batch=128, d_in=784, o_tile=128),
+    ]
+
+
+def main() -> None:
+    print(f"{'kernel':<20} {'VMEM':>10} {'AI f/B':>8} {'roofline':>12} {'eff':>6}")
+    for r in report():
+        peak = MXU_FLOPS if r.name == "sample_linear" else VPU_FLOPS
+        print(
+            f"{r.name:<20} {r.vmem_bytes / 1024:>8.1f}Ki "
+            f"{r.intensity:>8.2f} {r.roofline_flops(peak) / 1e12:>10.2f}T "
+            f"{r.efficiency(peak) * 100:>5.1f}%"
+            + ("" if r.vmem_ok else "  !! exceeds VMEM")
+        )
+
+
+if __name__ == "__main__":
+    main()

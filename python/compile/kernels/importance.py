@@ -1,0 +1,73 @@
+"""Pallas kernel: importance-weight scoring of candidate weight blocks.
+
+This is the compute hot-spot of MIRACLE's encoder (Algorithm 1, line 4): for a
+block of ``S`` weights, score ``K`` candidates ``w_k = sigma_p * z_k`` drawn
+from the encoding distribution ``p`` with the *shared* random generator, where
+the score is the log importance weight ``log a_k = log q(w_k) - log p(w_k)``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks K in tiles of
+``K_TILE`` rows; each step holds a ``[K_TILE, S]`` candidate panel plus the
+``[1, S]`` parameter rows in VMEM and performs an elementwise log-density
+evaluation followed by a lane reduction over S — a VPU-shaped panel sweep (the
+original GPU implementation's threadblock loop over samples). There is no data
+reuse across K tiles, so double-buffering the z panel is the only HBM schedule
+that matters; ``BlockSpec`` expresses exactly that.
+
+The kernel is encode-path only (no autodiff needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HALF_LOG_2PI = 0.9189385332046727
+
+
+def _score_kernel(z_ref, mu_ref, lsq_ref, lsp_ref, mask_ref, out_ref):
+    z = z_ref[...]  # [K_TILE, S]
+    mu = mu_ref[...]  # [1, S]
+    lsq = lsq_ref[...]
+    lsp = lsp_ref[...]
+    mask = mask_ref[...]
+    w = jnp.exp(lsp) * z
+    # log q - log p; the 0.5*log(2*pi) terms cancel.
+    zq = (w - mu) * jnp.exp(-lsq)
+    term = (-0.5 * zq * zq - lsq) - (-0.5 * z * z - lsp)
+    out_ref[...] = jnp.sum(mask * term, axis=1)
+
+
+def _pick_tile(k: int, cap: int = 256) -> int:
+    tile = min(k, cap)
+    while k % tile:
+        tile //= 2
+    return max(tile, 1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def importance_logits(z, mu_q, log_sigma_q, log_sigma_p, mask):
+    """Pallas-tiled version of :func:`ref.importance_logits_ref`.
+
+    Shapes: z [K, S]; mu_q/log_sigma_q/log_sigma_p/mask [S]. Returns [K].
+    """
+    k, s = z.shape
+    k_tile = _pick_tile(k)
+    row = lambda a: a.reshape(1, s)
+    grid = (k // k_tile,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_tile, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), z.dtype),
+        interpret=True,
+    )(z, row(mu_q), row(log_sigma_q), row(log_sigma_p), row(mask))

@@ -1,0 +1,75 @@
+"""Pallas kernel: per-block Gaussian KL(q||p), with an analytic custom VJP.
+
+Used inside ``train_step`` — the KL vector both feeds the annealed penalty
+term of the objective (Eq. 3 / Algorithm 2) and is returned to the rust
+coordinator, whose beta controller compares it against the local coding goal
+``C_loc``. The forward pass runs as a Pallas panel reduction; the backward
+pass uses the closed-form gradients so ``jax.grad`` works through it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kl_kernel(mu_ref, lsq_ref, lsp_ref, mask_ref, out_ref):
+    mu = mu_ref[...]  # [B_TILE, S]
+    lsq = lsq_ref[...]
+    lsp = lsp_ref[...]
+    mask = mask_ref[...]
+    var_ratio = jnp.exp(2.0 * (lsq - lsp))
+    mu_term = (mu * jnp.exp(-lsp)) ** 2
+    elem = lsp - lsq + 0.5 * (var_ratio + mu_term) - 0.5
+    out_ref[...] = jnp.sum(mask * elem, axis=1)
+
+
+def _pick_tile(b: int, cap: int = 128) -> int:
+    tile = min(b, cap)
+    while b % tile:
+        tile -= 1
+    return max(tile, 1)
+
+
+def _kl_pallas(mu_q, log_sigma_q, log_sigma_p, mask):
+    b, s = mu_q.shape
+    b_tile = _pick_tile(b)
+    spec = pl.BlockSpec((b_tile, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kl_kernel,
+        grid=(b // b_tile,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((b_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), mu_q.dtype),
+        interpret=True,
+    )(mu_q, log_sigma_q, log_sigma_p, mask)
+
+
+@jax.custom_vjp
+def block_kl(mu_q, log_sigma_q, log_sigma_p, mask):
+    """[B] KL(q_b || p_b); Pallas forward, analytic backward."""
+    return _kl_pallas(mu_q, log_sigma_q, log_sigma_p, mask)
+
+
+def _fwd(mu_q, log_sigma_q, log_sigma_p, mask):
+    return _kl_pallas(mu_q, log_sigma_q, log_sigma_p, mask), (
+        mu_q,
+        log_sigma_q,
+        log_sigma_p,
+        mask,
+    )
+
+
+def _bwd(res, g):
+    mu_q, lsq, lsp, mask = res
+    gb = g[:, None]  # [B, 1] cotangent per block
+    inv_vp = jnp.exp(-2.0 * lsp)
+    var_ratio = jnp.exp(2.0 * (lsq - lsp))
+    d_mu = mask * mu_q * inv_vp * gb
+    d_lsq = mask * (var_ratio - 1.0) * gb
+    d_lsp = mask * (1.0 - var_ratio - mu_q * mu_q * inv_vp) * gb
+    return d_mu, d_lsq, d_lsp, None
+
+
+block_kl.defvjp(_fwd, _bwd)

@@ -1,0 +1,334 @@
+"""L2: MIRACLE's variational model and training/encoding graphs in JAX.
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text and then driven from
+the rust coordinator — python is never on the hot path. The graphs are generic
+over the runtime maps (hashing trick, random block permutation), which rust
+generates and feeds as ordinary int32/float32 inputs:
+
+* ``assemble_map`` [N_total] — flat-parameter position -> index into the
+  block-layout slot vector ``blocks_flat`` [B*S]. It composes the hashing
+  trick (position -> slot) with the random block permutation (slot ->
+  position in block layout), so weight assembly is a single gather.
+* ``layer_map``  [B, S] — layer id of each block element (p's stddev is
+  shared per layer; blocks mix layers because the split is random).
+* ``slot_mask``  [B, S] — 1.0 for real slots, 0.0 for the padding tail.
+
+Variational family (§3.3): fully factorized Gaussian q with free mean and
+stddev per slot; encoding distribution p is a zero-mean Gaussian with one
+learned stddev per layer. Both are trained jointly by in-graph Adam on the
+beta-annealed objective (Eq. 3) with per-block penalties (Algorithm 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import block_kl, sample_linear
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _assemble_full(blocks_flat, assemble_map):
+    """Gather the flat parameter vector from block-layout slots."""
+    return jnp.take(blocks_flat, assemble_map, axis=0)
+
+
+def _layer_params(cfg: ModelConfig, w_full):
+    """Slice the flat parameter vector into per-layer (W, b) tensors."""
+    out = []
+    for spec in cfg.layers:
+        w = w_full[spec.offset:spec.offset + spec.w_count].reshape(spec.w_shape)
+        b = w_full[spec.offset + spec.w_count:spec.offset + spec.count].reshape(
+            spec.b_shape
+        )
+        out.append((w, b))
+    return out
+
+
+def _maxpool2(x):
+    """2x2 max pooling, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(cfg: ModelConfig, w_full, x):
+    """Deterministic forward pass with explicit weights. Returns logits."""
+    params = _layer_params(cfg, w_full)
+    h = x
+    li = 0
+    if cfg.arch["type"] == "conv":
+        for _ in cfg.arch["conv"]:
+            w, b = params[li]
+            li += 1
+            h = jax.lax.conv_general_dilated(
+                h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            ) + b
+            h = jax.nn.relu(h)
+            h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+    for i in range(li, cfg.n_layers):
+        w, b = params[i]
+        h = h @ w + b
+        if i != cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_sampled(cfg: ModelConfig, w_full, x):
+    """Forward pass where dense layers run through the fused Pallas kernel.
+
+    ``w_full`` here is a *tuple* (mu_full, lsq_full, eps_full) so that the
+    sample+matmul fusion sees the raw variational parameters. Conv layers (and
+    biases) use the pre-sampled values in ``eps`` form as well, composed with
+    plain jnp since conv is not a Pallas target on this substrate.
+    """
+    mu_full, lsq_full, eps_full = w_full
+    w_sampled = mu_full + jnp.exp(lsq_full) * eps_full
+    params_mu = _layer_params(cfg, mu_full)
+    params_lsq = _layer_params(cfg, lsq_full)
+    params_eps = _layer_params(cfg, eps_full)
+    params_w = _layer_params(cfg, w_sampled)
+    h = x
+    li = 0
+    if cfg.arch["type"] == "conv":
+        for _ in cfg.arch["conv"]:
+            w, b = params_w[li]
+            li += 1
+            h = jax.lax.conv_general_dilated(
+                h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            ) + b
+            h = jax.nn.relu(h)
+            h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+    for i in range(li, cfg.n_layers):
+        mu_w, b_mu = params_mu[i]
+        lsq_w, b_lsq = params_lsq[i]
+        eps_w, b_eps = params_eps[i]
+        b = b_mu + jnp.exp(b_lsq) * b_eps
+        h = sample_linear(h, mu_w, lsq_w, eps_w, b)
+        if i != cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# objective + train step
+# ---------------------------------------------------------------------------
+
+def _ce_and_acc(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return ce, acc
+
+
+def _effective_blocks(mu, rho, eps, frozen_mask, frozen_w):
+    """Per-block weights: encoded blocks are pinned to their decoded values."""
+    sampled = mu + jnp.exp(rho) * eps
+    fm = frozen_mask[:, None]
+    return fm * frozen_w + (1.0 - fm) * sampled
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build the jittable train-step function (one Adam update of Eq. 3)."""
+
+    def loss_fn(tr, eps, x, y, beta, frozen_mask, frozen_w,
+                assemble_map, layer_map, slot_mask, data_scale):
+        mu, rho, lsp = tr  # trainable leaves
+        lsp_elems = jnp.take(lsp, layer_map.reshape(-1), axis=0).reshape(
+            layer_map.shape
+        )
+        kl_b = block_kl(mu, rho, lsp_elems, slot_mask)
+        # frozen blocks: no KL penalty (their weights are already coded)
+        kl_pen = jnp.sum(beta * (1.0 - frozen_mask) * kl_b)
+
+        fm = frozen_mask[:, None]
+        # variational parameters in block layout, with frozen blocks pinned:
+        # mean <- frozen value, stddev <- 0 (via eps masking)
+        mu_eff = fm * frozen_w + (1.0 - fm) * mu
+        eps_eff = (1.0 - fm) * eps * slot_mask
+        mu_full = _assemble_full(mu_eff.reshape(-1), assemble_map)
+        lsq_full = _assemble_full(rho.reshape(-1), assemble_map)
+        eps_full = _assemble_full(eps_eff.reshape(-1), assemble_map)
+        logits = forward_sampled(cfg, (mu_full, lsq_full, eps_full), x)
+        ce, acc = _ce_and_acc(logits, y)
+        loss = data_scale * ce + kl_pen
+        return loss, (ce, acc, kl_b)
+
+    def train_step(mu, rho, lsp,
+                   m_mu, v_mu, m_rho, v_rho, m_lsp, v_lsp, step,
+                   x, y, beta, frozen_mask, frozen_w, seed,
+                   assemble_map, layer_map, slot_mask,
+                   data_scale, lsp_train, lr):
+        key = jax.random.PRNGKey(seed)
+        eps = jax.random.normal(key, (cfg.B, cfg.S), dtype=jnp.float32)
+
+        grad_fn = jax.grad(loss_fn, argnums=0, has_aux=True)
+        grads, (ce, acc, kl_b) = grad_fn(
+            (mu, rho, lsp), eps, x, y, beta, frozen_mask,
+            frozen_w, assemble_map, layer_map, slot_mask, data_scale
+        )
+        g_mu, g_rho, g_lsp = grads
+
+        # mask: frozen blocks must not move; padding slots must not move
+        live = (1.0 - frozen_mask)[:, None] * slot_mask
+        g_mu = g_mu * live
+        g_rho = g_rho * live
+        g_lsp = g_lsp * lsp_train
+
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - ADAM_B1 ** t
+        bc2 = 1.0 - ADAM_B2 ** t
+
+        def adam(p, g, m, v, mask=None):
+            m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+            v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+            upd = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+            if mask is not None:
+                upd = upd * mask
+            return p - upd, m2, v2
+
+        mu2, m_mu2, v_mu2 = adam(mu, g_mu, m_mu, v_mu, live)
+        rho2, m_rho2, v_rho2 = adam(rho, g_rho, m_rho, v_rho, live)
+        lsp2, m_lsp2, v_lsp2 = adam(lsp, g_lsp, m_lsp, v_lsp, lsp_train)
+
+        loss = data_scale * ce + jnp.sum(beta * (1.0 - frozen_mask) * kl_b)
+        return (mu2, rho2, lsp2, m_mu2, v_mu2, m_rho2, v_rho2, m_lsp2,
+                v_lsp2, loss, ce, acc, kl_b)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# coding-path graphs (Algorithm 1): shared-randomness candidate generation
+# ---------------------------------------------------------------------------
+
+def _chunk_candidates(cfg: ModelConfig, seed, block_id, chunk_id):
+    """The shared random generator: z ~ N(0, I), [K_chunk, S].
+
+    The derivation key = fold_in(fold_in(PRNGKey(seed), block_id), chunk_id)
+    is THE protocol constant shared by encoder and decoder: both sides replay
+    this exact graph, so candidates are bit-identical by construction.
+    """
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, block_id)
+    key = jax.random.fold_in(key, chunk_id)
+    return jax.random.normal(key, (cfg.k_chunk, cfg.S), dtype=jnp.float32)
+
+
+def make_score_chunk(cfg: ModelConfig):
+    """logits[K_chunk] of candidates for one block (Pallas hot-spot)."""
+    from .kernels import importance_logits
+
+    def score_chunk(seed, block_id, chunk_id, mu_b, rho_b, lsp_b, mask_b):
+        z = _chunk_candidates(cfg, seed, block_id, chunk_id)
+        return (importance_logits(z, mu_b, rho_b, lsp_b, mask_b),)
+
+    return score_chunk
+
+
+def make_decode_chunk(cfg: ModelConfig):
+    """candidates[K_chunk, S] = sigma_p * z for one block chunk."""
+
+    def decode_chunk(seed, block_id, chunk_id, lsp_b):
+        z = _chunk_candidates(cfg, seed, block_id, chunk_id)
+        return (jnp.exp(lsp_b)[None, :] * z,)
+
+    return decode_chunk
+
+
+# ---------------------------------------------------------------------------
+# evaluation graphs
+# ---------------------------------------------------------------------------
+
+def make_eval_batch(cfg: ModelConfig):
+    """logits[eval_batch, classes] from explicit block-layout weights."""
+
+    def eval_batch(w_blocks, assemble_map, x):
+        w_full = _assemble_full(w_blocks.reshape(-1), assemble_map)
+        return (forward(cfg, w_full, x),)
+
+    return eval_batch
+
+
+def make_eval_full(cfg: ModelConfig):
+    """logits from a raw flat weight vector (baselines bypass the hashed
+    block layout entirely — pruned/quantized weight-sets are positionally
+    free)."""
+
+    def eval_full(w_full, x):
+        return (forward(cfg, w_full, x),)
+
+    return eval_full
+
+
+def make_sample_weights(cfg: ModelConfig):
+    """Draw one block-layout weight-set from q (frozen blocks pinned)."""
+
+    def sample_weights(mu, rho, frozen_mask, frozen_w, seed):
+        key = jax.random.PRNGKey(seed)
+        eps = jax.random.normal(key, (cfg.B, cfg.S), dtype=jnp.float32)
+        return (_effective_blocks(mu, rho, eps, frozen_mask, frozen_w),)
+
+    return sample_weights
+
+
+# ---------------------------------------------------------------------------
+# example-input builders (shapes/dtypes for AOT lowering + the manifest)
+# ---------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points(cfg: ModelConfig):
+    """name -> (fn, example_args) for every AOT artifact of this config."""
+    bs = (cfg.B, cfg.S)
+    x_shape = (cfg.batch,) + cfg.input_shape
+    xe_shape = (cfg.eval_batch,) + cfg.input_shape
+    return {
+        "train_step": (
+            make_train_step(cfg),
+            (
+                _f32(*bs), _f32(*bs), _f32(cfg.n_layers),          # mu rho lsp
+                _f32(*bs), _f32(*bs), _f32(*bs), _f32(*bs),        # adam mu/rho
+                _f32(cfg.n_layers), _f32(cfg.n_layers), _i32(),    # adam lsp, t
+                _f32(*x_shape), _i32(cfg.batch),                   # batch
+                _f32(cfg.B), _f32(cfg.B), _f32(*bs), _i32(),       # beta fm fw seed
+                _i32(cfg.n_total), _i32(*bs), _f32(*bs),           # maps
+                _f32(), _f32(), _f32(),                            # scale lsp_tr lr
+            ),
+        ),
+        "score_chunk": (
+            make_score_chunk(cfg),
+            (_i32(), _i32(), _i32(), _f32(cfg.S), _f32(cfg.S), _f32(cfg.S),
+             _f32(cfg.S)),
+        ),
+        "decode_chunk": (
+            make_decode_chunk(cfg),
+            (_i32(), _i32(), _i32(), _f32(cfg.S)),
+        ),
+        "eval_batch": (
+            make_eval_batch(cfg),
+            (_f32(*bs), _i32(cfg.n_total), _f32(*xe_shape)),
+        ),
+        "eval_full": (
+            make_eval_full(cfg),
+            (_f32(cfg.n_total), _f32(*xe_shape)),
+        ),
+        "sample_weights": (
+            make_sample_weights(cfg),
+            (_f32(*bs), _f32(*bs), _f32(cfg.B), _f32(*bs), _i32()),
+        ),
+    }

@@ -1,0 +1,10 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def config_path(name: str) -> str:
+    return os.path.join(REPO, "configs", f"{name}.json")

@@ -1,0 +1,64 @@
+"""AOT pipeline: manifest correctness, HLO text sanity, determinism."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import lower_config
+from compile.configs import load_config
+from .conftest import config_path
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = lower_config(config_path("tiny_mlp"), out)
+    return out, manifest
+
+
+def test_manifest_fields(lowered):
+    _, m = lowered
+    cfg = load_config(config_path("tiny_mlp"))
+    assert m["B"] == cfg.B and m["S"] == cfg.S
+    assert m["n_total"] == cfg.n_total
+    assert m["n_slots"] == sum(cfg.layer_slots)
+    assert set(m["entries"]) == {"train_step", "score_chunk", "decode_chunk",
+                                 "eval_batch", "eval_full", "sample_weights"}
+
+
+def test_hlo_text_is_parseable_hlo(lowered):
+    out, m = lowered
+    for name, e in m["entries"].items():
+        path = os.path.join(out, "tiny_mlp", e["file"])
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, name
+
+
+def test_train_step_io_counts(lowered):
+    _, m = lowered
+    e = m["entries"]["train_step"]
+    assert len(e["inputs"]) == 22
+    assert len(e["outputs"]) == 13
+
+
+def test_score_chunk_shapes(lowered):
+    _, m = lowered
+    cfg = load_config(config_path("tiny_mlp"))
+    e = m["entries"]["score_chunk"]
+    assert e["outputs"][0]["shape"] == [cfg.k_chunk]
+    e = m["entries"]["decode_chunk"]
+    assert e["outputs"][0]["shape"] == [cfg.k_chunk, cfg.S]
+
+
+def test_lowering_is_deterministic(lowered, tmp_path):
+    out, m = lowered
+    m2 = lower_config(config_path("tiny_mlp"), str(tmp_path))
+    for name in m["entries"]:
+        assert m["entries"][name]["sha256"] == m2["entries"][name]["sha256"], name
+
+
+def test_manifest_json_on_disk_matches(lowered):
+    out, m = lowered
+    disk = json.load(open(os.path.join(out, "tiny_mlp", "manifest.json")))
+    assert disk == m

@@ -1,0 +1,44 @@
+"""Structural perf model sanity checks (the L1 'profile' substitute —
+interpret-mode wallclock is not a TPU proxy, the BlockSpec structure is)."""
+
+from compile.kernels import analysis
+
+
+def test_default_tiles_fit_vmem():
+    for r in analysis.report():
+        assert r.vmem_ok, f"{r.name} exceeds VMEM: {r.vmem_bytes}"
+
+
+def test_importance_is_bandwidth_bound():
+    # elementwise + reduce: ~2.25 flops/byte -> far below the VPU ridge
+    r = analysis.importance_report(256, 16)
+    assert 1.0 < r.intensity < 4.0
+    assert r.roofline_flops(analysis.VPU_FLOPS) < analysis.VPU_FLOPS
+
+
+def test_bigger_tiles_dont_change_intensity_much():
+    a = analysis.importance_report(64, 16)
+    b = analysis.importance_report(1024, 16)
+    assert abs(a.intensity - b.intensity) / a.intensity < 0.05
+
+
+def test_sample_linear_is_compute_bound_for_big_tiles():
+    r = analysis.sample_linear_report(batch=128, d_in=784, o_tile=128)
+    # matmul reuse across the batch drives intensity above the MXU ridge
+    ridge = analysis.MXU_FLOPS / analysis.HBM_BW
+    # batch=128 bounds weight-panel reuse: ~18% of MXU roofline, an order
+    # of magnitude above the elementwise kernels
+    assert r.intensity > ridge * 0.15
+    assert r.efficiency(analysis.MXU_FLOPS) > 0.15
+    kl = analysis.kl_report(128, 16)
+    assert r.intensity > 10 * kl.intensity
+
+
+def test_vmem_overflow_detected():
+    r = analysis.importance_report(k_tile=2**20, s=64)
+    assert not r.vmem_ok
+
+
+def test_kl_kernel_streams_all_inputs():
+    r = analysis.kl_report(128, 16)
+    assert r.hbm_bytes_per_step >= 4 * 128 * 16 * 4

@@ -1,0 +1,69 @@
+"""Pallas importance-scoring kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import importance_logits
+from compile.kernels.ref import importance_logits_ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def _mk(rng, k, s):
+    z = rng.normal(size=(k, s)).astype(np.float32)
+    mu = rng.normal(size=s).astype(np.float32)
+    lsq = (rng.normal(size=s) * 0.5 - 1.0).astype(np.float32)
+    lsp = (rng.normal(size=s) * 0.5 - 1.0).astype(np.float32)
+    mask = (rng.random(s) > 0.25).astype(np.float32)
+    return z, mu, lsq, lsp, mask
+
+
+@given(
+    k=st.sampled_from([1, 2, 8, 64, 256, 512]),
+    s=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_matches_ref(k, s, seed):
+    rng = np.random.default_rng(seed)
+    args = _mk(rng, k, s)
+    got = np.asarray(importance_logits(*args))
+    want = np.asarray(importance_logits_ref(*args))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_all_masked_gives_zero():
+    rng = np.random.default_rng(0)
+    z, mu, lsq, lsp, _ = _mk(rng, 16, 7)
+    mask = np.zeros(7, dtype=np.float32)
+    got = np.asarray(importance_logits(z, mu, lsq, lsp, mask))
+    np.testing.assert_allclose(got, np.zeros(16), atol=1e-6)
+
+
+def test_q_equals_p_gives_zero():
+    """If q == p the importance weights are exactly uniform (log a_k = 0
+    iff the candidate equals... no: log q/p at w = sigma_p z with mu=0,
+    sq=sp gives identically zero)."""
+    rng = np.random.default_rng(1)
+    s = 9
+    z = rng.normal(size=(32, s)).astype(np.float32)
+    lsp = (rng.normal(size=s) * 0.3).astype(np.float32)
+    mu = np.zeros(s, dtype=np.float32)
+    mask = np.ones(s, dtype=np.float32)
+    got = np.asarray(importance_logits(z, mu, lsp, lsp, mask))
+    np.testing.assert_allclose(got, np.zeros(32), atol=1e-5)
+
+
+def test_shift_invariance_in_best_candidate():
+    """The candidate closest to mu/sigma_p direction should win when
+    sigma_q is small: argmax of logits == argmax of -||sigma_p z - mu||^2."""
+    rng = np.random.default_rng(2)
+    s = 6
+    z = rng.normal(size=(128, s)).astype(np.float32)
+    mu = rng.normal(size=s).astype(np.float32)
+    lsq = np.full(s, -3.0, dtype=np.float32)  # tiny q stddev
+    lsp = np.zeros(s, dtype=np.float32)
+    mask = np.ones(s, dtype=np.float32)
+    logits = np.asarray(importance_logits(z, mu, lsq, lsp, mask))
+    dist = np.sum((z - mu[None, :]) ** 2, axis=1)
+    assert np.argmax(logits) == np.argmin(dist)

@@ -1,0 +1,205 @@
+"""L2 graph tests: train_step learns, freezing works, encode/decode agree."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile.configs import load_config
+from compile.model import (
+    entry_points,
+    make_decode_chunk,
+    make_eval_batch,
+    make_sample_weights,
+    make_score_chunk,
+    make_train_step,
+)
+from compile.kernels.ref import importance_logits_ref
+from .conftest import config_path
+
+CFG = load_config(config_path("tiny_mlp"))
+
+
+def _runtime_maps(cfg, rng):
+    """Mimic the rust-side map generation: identity hash, random permutation."""
+    n_pad = cfg.B * cfg.S
+    perm = rng.permutation(n_pad).astype(np.int32)  # slot -> block position
+    # identity hash for the test: flat position i -> slot i (slot layout is
+    # layers concatenated, truncated per-layer to layer_slots)
+    pos_to_slot = np.zeros(cfg.n_total, dtype=np.int32)
+    slot_layer = np.zeros(n_pad, dtype=np.int32)
+    slot_base = 0
+    off = 0
+    for li, (spec, m) in enumerate(zip(cfg.layers, cfg.layer_slots)):
+        idx = np.arange(spec.count)
+        pos_to_slot[off:off + spec.count] = slot_base + (idx % m)
+        off += spec.count
+        slot_base += m
+    assemble_map = perm[pos_to_slot]  # flat position -> block-layout index
+    inv = np.empty(n_pad, dtype=np.int64)
+    inv[perm] = np.arange(n_pad)
+    # layer of each slot
+    slot_id = 0
+    for li, m in enumerate(cfg.layer_slots):
+        slot_layer[slot_id:slot_id + m] = li
+        slot_id += m
+    layer_map = np.zeros(n_pad, dtype=np.int32)
+    layer_map[perm] = slot_layer  # block position -> layer id
+    slot_mask = np.zeros(n_pad, dtype=np.float32)
+    real = np.zeros(n_pad, dtype=np.float32)
+    real[:cfg.n_slots] = 1.0
+    slot_mask[perm] = real
+    return (assemble_map,
+            layer_map.reshape(cfg.B, cfg.S),
+            slot_mask.reshape(cfg.B, cfg.S))
+
+
+def _init_state(cfg, rng):
+    bs = (cfg.B, cfg.S)
+    mu = (rng.normal(size=bs) * 0.1).astype(np.float32)
+    rho = np.full(bs, -3.0, dtype=np.float32)
+    lsp = np.full(cfg.n_layers, -1.0, dtype=np.float32)
+    zeros = lambda s: np.zeros(s, dtype=np.float32)
+    return dict(
+        mu=mu, rho=rho, lsp=lsp,
+        m_mu=zeros(bs), v_mu=zeros(bs), m_rho=zeros(bs), v_rho=zeros(bs),
+        m_lsp=zeros(cfg.n_layers), v_lsp=zeros(cfg.n_layers),
+    )
+
+
+def _toy_batch(cfg, rng, n):
+    """Linearly separable-ish toy task."""
+    x = rng.normal(size=(n, cfg.arch["input_dim"])).astype(np.float32)
+    w_true = rng.normal(size=(cfg.arch["input_dim"], cfg.classes))
+    y = np.argmax(x @ w_true, axis=1).astype(np.int32)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(7)
+    maps = _runtime_maps(CFG, rng)
+    st = _init_state(CFG, rng)
+    x, y = _toy_batch(CFG, rng, CFG.batch)
+    step_fn = jax.jit(make_train_step(CFG))
+    return rng, maps, st, x, y, step_fn
+
+
+def _run_steps(setup, n_steps, beta_val=1e-6, frozen=None, lr=1e-3):
+    rng, maps, st0, x, y, step_fn = setup
+    st = {k: v.copy() for k, v in st0.items()}
+    assemble_map, layer_map, slot_mask = maps
+    beta = np.full(CFG.B, beta_val, dtype=np.float32)
+    if frozen is None:
+        fm = np.zeros(CFG.B, dtype=np.float32)
+    else:
+        fm = frozen
+    fw = np.zeros((CFG.B, CFG.S), dtype=np.float32)
+    losses, kls = [], None
+    for t in range(1, n_steps + 1):
+        out = step_fn(
+            st["mu"], st["rho"], st["lsp"],
+            st["m_mu"], st["v_mu"], st["m_rho"], st["v_rho"],
+            st["m_lsp"], st["v_lsp"], np.int32(t),
+            x, y, beta, fm, fw, np.int32(t),
+            assemble_map, layer_map, slot_mask,
+            np.float32(1.0), np.float32(1.0), np.float32(lr),
+        )
+        (st["mu"], st["rho"], st["lsp"], st["m_mu"], st["v_mu"],
+         st["m_rho"], st["v_rho"], st["m_lsp"], st["v_lsp"],
+         loss, ce, acc, kl_b) = out
+        losses.append(float(loss))
+        kls = np.asarray(kl_b)
+    return st, losses, kls, float(acc)
+
+
+def test_train_step_reduces_loss(setup):
+    _, losses, _, acc = _run_steps(setup, 150, lr=1e-2)
+    assert losses[-1] < losses[0] * 0.5, losses[::30]
+    assert acc > 0.5
+
+
+def test_frozen_blocks_do_not_move(setup):
+    rng, maps, st0, x, y, step_fn = setup
+    fm = np.zeros(CFG.B, dtype=np.float32)
+    fm[:5] = 1.0
+    st, _, kls, _ = _run_steps(setup, 10, frozen=fm)
+    np.testing.assert_array_equal(st["mu"][:5], st0["mu"][:5])
+    np.testing.assert_array_equal(st["rho"][:5], st0["rho"][:5])
+    assert not np.allclose(st["mu"][5:], st0["mu"][5:])
+
+
+def test_high_beta_crushes_kl(setup):
+    _, _, kl_low, _ = _run_steps(setup, 40, beta_val=1e-8)
+    _, _, kl_high, _ = _run_steps(setup, 40, beta_val=10.0)
+    assert kl_high.mean() < kl_low.mean()
+
+
+def test_score_decode_consistency(setup):
+    """score_chunk logits must equal ref-scoring of decode_chunk candidates —
+    the encoder/decoder shared-randomness contract."""
+    rng, maps, st, *_ = setup
+    _, layer_map, slot_mask = maps
+    score = jax.jit(make_score_chunk(CFG))
+    decode = jax.jit(make_decode_chunk(CFG))
+    b = 3
+    lsp_b = st["lsp"][layer_map[b]].astype(np.float32)
+    mu_b = st["mu"][b]
+    rho_b = st["rho"][b]
+    mask_b = slot_mask[b]
+    for chunk in (0, 1, 7):
+        logits = np.asarray(score(np.int32(99), np.int32(b), np.int32(chunk),
+                                  mu_b, rho_b, lsp_b, mask_b)[0])
+        cand = np.asarray(decode(np.int32(99), np.int32(b), np.int32(chunk),
+                                 lsp_b)[0])
+        z = cand / np.exp(lsp_b)[None, :]
+        want = np.asarray(importance_logits_ref(z, mu_b, rho_b, lsp_b, mask_b))
+        np.testing.assert_allclose(logits, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_chunks_differ_by_block_and_chunk(setup):
+    decode = jax.jit(make_decode_chunk(CFG))
+    lsp_b = np.zeros(CFG.S, dtype=np.float32)
+    a = np.asarray(decode(np.int32(1), np.int32(0), np.int32(0), lsp_b)[0])
+    b = np.asarray(decode(np.int32(1), np.int32(1), np.int32(0), lsp_b)[0])
+    c = np.asarray(decode(np.int32(1), np.int32(0), np.int32(1), lsp_b)[0])
+    d = np.asarray(decode(np.int32(2), np.int32(0), np.int32(0), lsp_b)[0])
+    assert not np.allclose(a, b)
+    assert not np.allclose(a, c)
+    assert not np.allclose(a, d)
+    # determinism
+    a2 = np.asarray(decode(np.int32(1), np.int32(0), np.int32(0), lsp_b)[0])
+    np.testing.assert_array_equal(a, a2)
+
+
+def test_eval_batch_matches_forward(setup):
+    rng, maps, st, x, y, _ = setup
+    assemble_map, _, _ = maps
+    ev = jax.jit(make_eval_batch(CFG))
+    w_blocks = st["mu"]
+    xe = np.zeros((CFG.eval_batch,) + CFG.input_shape, dtype=np.float32)
+    xe[: x.shape[0]] = x
+    logits = np.asarray(ev(w_blocks, assemble_map, xe)[0])
+    assert logits.shape == (CFG.eval_batch, CFG.classes)
+    assert np.isfinite(logits).all()
+
+
+def test_sample_weights_respects_freezing(setup):
+    rng, maps, st, *_ = setup
+    sw = jax.jit(make_sample_weights(CFG))
+    fm = np.zeros(CFG.B, dtype=np.float32)
+    fm[2] = 1.0
+    fw = np.full((CFG.B, CFG.S), 42.0, dtype=np.float32)
+    w = np.asarray(sw(st["mu"], st["rho"], fm, fw, np.int32(5))[0])
+    np.testing.assert_array_equal(w[2], fw[2])
+    assert not np.allclose(w[3], fw[3])
+    # seeded determinism
+    w2 = np.asarray(sw(st["mu"], st["rho"], fm, fw, np.int32(5))[0])
+    np.testing.assert_array_equal(w, w2)
+    w3 = np.asarray(sw(st["mu"], st["rho"], fm, fw, np.int32(6))[0])
+    assert not np.allclose(w, w3)
+
+
+def test_entry_points_complete():
+    eps = entry_points(CFG)
+    assert set(eps) == {"train_step", "score_chunk", "decode_chunk",
+                        "eval_batch", "eval_full", "sample_weights"}

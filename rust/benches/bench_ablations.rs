@@ -1,0 +1,108 @@
+//! Ablations the paper calls out in §3.3/§4:
+//!
+//! * **A1 — hashing trick**: §3.3 reports ~1.5x better compression at equal
+//!   quality. We compare the hashed config against the dense config at the
+//!   same total coding budget and report error + effective ratio.
+//! * **A2 — intermediate iterations I**: "crucial for good performance" —
+//!   sweep I ∈ {0, 1, 5} and report error at fixed budget.
+//! * **A3 — local budget C_loc**: K = 2^C_loc grows exponentially (encode
+//!   time) while quality improves — the practical-tractability trade-off of
+//!   §3.3. Reports encode wall time per block alongside error.
+
+mod common;
+
+use common::{banner, datasets_for, miracle_iters, scale};
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::metrics::{fmt_size, Table};
+use miracle::runtime::{self, Runtime};
+use miracle::util::Result;
+
+fn cfg_base(i0: usize, i: usize, bits: u8, train_len: usize) -> MiracleCfg {
+    MiracleCfg {
+        c_loc_bits: bits,
+        i0,
+        i_intermediate: i,
+        lr: 2e-3,
+        beta0: 1e-4,
+        eps_beta: 0.01,
+        data_scale: train_len as f32,
+        ..Default::default()
+    }
+}
+
+fn main() -> Result<()> {
+    banner("Ablations — hashing trick, intermediate iterations, C_loc");
+    let s = scale();
+    let rt = Runtime::cpu()?;
+    let (i0, _) = miracle_iters(s);
+
+    // ---- A1: hashing trick (hashed vs dense parameterization) ----
+    {
+        let (train, test) = datasets_for("lenet_synth", s);
+        let mut t = Table::new(
+            "A1 — hashing trick (lenet_synth, C_loc=12b)",
+            &["variant", "slots", "size", "test error %"],
+        );
+        for (name, label) in [("lenet_synth", "hashed (~3.7x fewer slots)"),
+                              ("lenet_synth_dense", "dense (no hashing)")] {
+            let arts = runtime::load(&rt, name)?;
+            let cfg = cfg_base(i0, 1, 12, train.len());
+            let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+            t.row(vec![
+                label.to_string(),
+                arts.meta.n_slots.to_string(),
+                fmt_size(r.total_bits as f64 / 8.0),
+                format!("{:.2}", r.test_error * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("bench_ablation_hashing.csv")?;
+    }
+
+    // ---- A2: intermediate iterations I ----
+    {
+        let arts = runtime::load(&rt, "lenet_synth")?;
+        let (train, test) = datasets_for("lenet_synth", s);
+        // the tight-budget regime is where compensating for earlier coded
+        // blocks matters (paper: "crucial for good performance")
+        let mut t = Table::new(
+            "A2 — intermediate variational iterations (lenet_synth, C_loc=3b)",
+            &["I", "test error %", "mean block KL bits"],
+        );
+        for i in [0usize, 1, 5] {
+            let cfg = cfg_base(i0, i, 3, train.len());
+            let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+            t.row(vec![
+                i.to_string(),
+                format!("{:.2}", r.test_error * 100.0),
+                format!("{:.2}", r.mean_block_kl_bits),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("bench_ablation_intermediate.csv")?;
+    }
+
+    // ---- A3: C_loc / K trade-off ----
+    {
+        let arts = runtime::load(&rt, "lenet_synth")?;
+        let (train, test) = datasets_for("lenet_synth", s);
+        let mut t = Table::new(
+            "A3 — local budget C_loc (K = 2^C_loc candidates/block)",
+            &["C_loc bits", "K", "encode ms/block", "size", "test error %"],
+        );
+        for bits in [6u8, 10, 14] {
+            let cfg = cfg_base(i0, 1, bits, train.len());
+            let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+            t.row(vec![
+                bits.to_string(),
+                (1u64 << bits).to_string(),
+                format!("{:.2}", r.encode_secs * 1e3 / r.mrc.b as f64),
+                fmt_size(r.total_bits as f64 / 8.0),
+                format!("{:.2}", r.test_error * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv("bench_ablation_cloc.csv")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! Theory benches (§3.2 Theorem 3.2 + Appendix A):
+//!
+//! * **C1** — bias of the proxy distribution q̃ vs the sample budget
+//!   K = exp(KL + t): |E_q̃[f] − E_q[f]| should fall as t grows and is
+//!   already small at t = 0 (the paper's operating point K = exp(KL)).
+//! * **C2** — greedy rejection sampling (Algorithm 3): expected prefix-free
+//!   code length obeys E|l(i*)| ≤ KL + 2 log(KL + 1) + O(1) (Eq. 15), and
+//!   the empirical sample distribution matches q (unbiasedness).
+//! * **C3** — Algorithm 1 vs Algorithm 3 code lengths across a KL sweep:
+//!   both track the KL lower bound; Alg 1 pays a fixed C_loc, Alg 3 pays
+//!   the VL-coded stopping index.
+
+use miracle::grc::{greedy_rejection_sample, minimal_random_code_sample, Discrete};
+use miracle::metrics::Table;
+use miracle::prng::Pcg64;
+use miracle::util::Result;
+
+fn qp_with_kl(target_kl_nats: f64, n: usize) -> (Discrete, Discrete, f64) {
+    // shift a discretized Gaussian against a unit one until KL matches
+    let p = Discrete::gauss(n, 0.0, 1.0, 6.0);
+    let mut lo = 0.0f64;
+    let mut hi = 6.0f64;
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let q = Discrete::gauss(n, mid, 0.6, 6.0);
+        if q.kl(&p) < target_kl_nats {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let q = Discrete::gauss(n, 0.5 * (lo + hi), 0.6, 6.0);
+    let kl = q.kl(&p);
+    (q, p, kl)
+}
+
+fn c1_proxy_bias() -> Result<()> {
+    let mut t = Table::new(
+        "C1 — Theorem 3.2: proxy bias |E_q̃[f]-E_q[f]| vs t  (K=exp(KL+t))",
+        &["t (nats)", "K", "mean |bias|", "rel. to f-range"],
+    );
+    let (q, p, kl) = qp_with_kl(3.0, 256);
+    let f = |w: usize| (w as f64 / 255.0) * 2.0 - 1.0; // f in [-1,1]
+    let e_q: f64 = q.p.iter().enumerate().map(|(w, &qq)| f(w) * qq).sum();
+    for &t_nats in &[-1.0f64, 0.0, 1.0, 2.0, 3.0] {
+        let k = ((kl + t_nats).exp().ceil() as usize).max(1);
+        let trials = 400;
+        let mut bias = 0.0;
+        for trial in 0..trials {
+            let mut rng = Pcg64::seed(1000 + trial);
+            let (_, _, wts, cands) = minimal_random_code_sample(&q, &p, k, &mut rng);
+            let e: f64 = wts.iter().zip(&cands).map(|(&w, &c)| w * f(c)).sum();
+            bias += (e - e_q).abs();
+        }
+        bias /= trials as f64;
+        t.row(vec![
+            format!("{t_nats:+.0}"),
+            k.to_string(),
+            format!("{bias:.4}"),
+            format!("{:.2}%", bias / 2.0 * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_theory_c1.csv")?;
+    Ok(())
+}
+
+fn c2_grc_bounds() -> Result<()> {
+    let mut t = Table::new(
+        "C2 — Algorithm 3 (greedy rejection): code length vs Eq. 15 bound",
+        &["KL bits", "E[l(i*)] bits", "bound KL+2log(KL+1)+4", "TV(samples, q)"],
+    );
+    for &kl_target in &[1.0f64, 2.0, 4.0, 6.0] {
+        let (q, p, kl) = qp_with_kl(kl_target * std::f64::consts::LN_2, 64);
+        let kl_bits = kl / std::f64::consts::LN_2;
+        let mut rng = Pcg64::seed(5);
+        let trials = 3000;
+        let mut bits = 0.0;
+        let mut counts = vec![0f64; q.p.len()];
+        for _ in 0..trials {
+            let s = greedy_rejection_sample(&q, &p, &mut rng);
+            bits += s.code_bits as f64;
+            counts[s.value] += 1.0;
+        }
+        bits /= trials as f64;
+        let tv: f64 = counts
+            .iter()
+            .zip(&q.p)
+            .map(|(&c, &qq)| (c / trials as f64 - qq).abs())
+            .sum::<f64>()
+            / 2.0;
+        let bound = kl_bits + 2.0 * (kl_bits + 1.0).log2() + 4.0;
+        t.row(vec![
+            format!("{kl_bits:.2}"),
+            format!("{bits:.2}"),
+            format!("{bound:.2}"),
+            format!("{tv:.3}"),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_theory_c2.csv")?;
+    Ok(())
+}
+
+fn c3_alg1_vs_alg3() -> Result<()> {
+    let mut t = Table::new(
+        "C3 — Algorithm 1 (fixed C_loc) vs Algorithm 3 (VL index) code cost",
+        &["KL bits", "Alg1 bits (K=e^KL)", "Alg3 E[bits]", "lower bound (KL)"],
+    );
+    for &kl_target in &[2.0f64, 4.0, 6.0, 8.0] {
+        let (q, p, kl) = qp_with_kl(kl_target * std::f64::consts::LN_2, 64);
+        let kl_bits = kl / std::f64::consts::LN_2;
+        // Algorithm 1: index into K = exp(KL) candidates -> log2 K bits
+        let alg1_bits = (kl.exp().ceil()).log2();
+        let mut rng = Pcg64::seed(11);
+        let trials = 1500;
+        let alg3_bits: f64 = (0..trials)
+            .map(|_| greedy_rejection_sample(&q, &p, &mut rng).code_bits as f64)
+            .sum::<f64>()
+            / trials as f64;
+        t.row(vec![
+            format!("{kl_bits:.2}"),
+            format!("{alg1_bits:.2}"),
+            format!("{alg3_bits:.2}"),
+            format!("{kl_bits:.2}"),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_theory_c3.csv")?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    println!("\n############################################################");
+    println!("# Coding-theory benches (Theorem 3.2, Appendix A)");
+    println!("############################################################");
+    c1_proxy_bias()?;
+    c2_grc_bounds()?;
+    c3_alg1_vs_alg3()?;
+    Ok(())
+}

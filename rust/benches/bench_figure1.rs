@@ -1,0 +1,116 @@
+//! Regenerates **Figure 1**: test-error vs compressed-size trade-off curves
+//! for both benchmarks. MIRACLE's series comes from sweeping the per-block
+//! budget `C_loc` at fixed B (the paper's protocol for VGG); baseline series
+//! from sweeping their own operating knobs.
+//!
+//! Expected shape (paper): the MIRACLE curve lies down-and-left of every
+//! baseline curve (Pareto dominance); error rises as size shrinks.
+
+mod common;
+
+use common::{banner, datasets_for, dense_steps, miracle_iters, scale, Scale};
+use miracle::baselines::runner;
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::metrics::Table;
+use miracle::runtime::{self, Runtime};
+use miracle::util::Result;
+
+fn series_for(rt: &Runtime, model: &str, lr: f32) -> Result<Table> {
+    let s = scale();
+    let arts = runtime::load(rt, model)?;
+    let dense_arts = runtime::load(rt, &format!("{model}_dense"))?;
+    let (train, test) = datasets_for(model, s);
+    let (i0, i_int) = miracle_iters(s);
+
+    let mut t = Table::new(
+        &format!("Figure 1 — {model} (error vs size)"),
+        &["series", "point", "size bits", "test error %"],
+    );
+
+    // the interesting regime on this substrate sits at very tight budgets:
+    // >=6 bits/block is already lossless on the synthetic tasks
+    let budgets: &[u8] = match s {
+        Scale::Quick => &[2, 3, 4, 6, 10],
+        Scale::Full => &[2, 3, 4, 5, 6, 8, 10, 14],
+    };
+    for &bits in budgets {
+        let cfg = MiracleCfg {
+            c_loc_bits: bits,
+            i0,
+            i_intermediate: i_int,
+            lr,
+            beta0: 1e-4,
+            eps_beta: 0.01,
+            data_scale: train.len() as f32,
+            ..Default::default()
+        };
+        let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+        t.row(vec![
+            "MIRACLE".into(),
+            format!("C_loc={bits}b"),
+            r.total_bits.to_string(),
+            format!("{:.2}", r.test_error * 100.0),
+        ]);
+    }
+
+    let post = runner::train_dense(
+        &dense_arts,
+        &train,
+        dense_steps(s),
+        lr,
+        train.len() as f32,
+        7,
+    )?;
+    let dc_points: &[(f64, usize)] = match s {
+        Scale::Quick => &[(0.5, 32), (0.8, 16), (0.95, 8)],
+        Scale::Full => &[(0.3, 64), (0.5, 32), (0.7, 32), (0.8, 16), (0.9, 16), (0.95, 8)],
+    };
+    for p in runner::deepcomp_sweep(&dense_arts, &post, &test, dc_points)? {
+        t.row(vec![
+            "DeepComp".into(),
+            p.label,
+            p.bits.to_string(),
+            format!("{:.2}", p.test_error * 100.0),
+        ]);
+    }
+    let bc_points: &[f32] = match s {
+        Scale::Quick => &[0.5, 1.0, 2.0],
+        Scale::Full => &[0.25, 0.5, 1.0, 1.5, 2.0, 3.0],
+    };
+    for p in runner::bayescomp_sweep(&dense_arts, &post, &test, bc_points)? {
+        t.row(vec![
+            "BayesComp".into(),
+            p.label,
+            p.bits.to_string(),
+            format!("{:.2}", p.test_error * 100.0),
+        ]);
+    }
+    let wl_points: &[(f64, usize, u32)] = match s {
+        Scale::Quick => &[(0.8, 16, 6), (0.95, 8, 4)],
+        Scale::Full => &[(0.5, 32, 8), (0.8, 16, 6), (0.9, 16, 4), (0.95, 8, 4)],
+    };
+    for p in runner::weightless_sweep(&dense_arts, &post, &test, wl_points)? {
+        t.row(vec![
+            "Weightless".into(),
+            p.label,
+            p.bits.to_string(),
+            format!("{:.2}", p.test_error * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+fn main() -> Result<()> {
+    banner("Figure 1 — error vs compression trade-off curves");
+    let rt = Runtime::cpu()?;
+    for (model, csv) in [
+        ("lenet_synth", "bench_figure1_lenet.csv"),
+        ("conv_synth", "bench_figure1_conv.csv"),
+    ] {
+        let t = series_for(&rt, model, 2e-3)?;
+        print!("{}", t.render());
+        t.save_csv(csv)?;
+    }
+    println!("\nCSV written: bench_figure1_lenet.csv bench_figure1_conv.csv");
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! L3 hot-path microbenches (§Perf of EXPERIMENTS.md):
+//!
+//! * PJRT invocation overhead + latency of each AOT entry (train_step,
+//!   score_chunk, decode_chunk, eval_batch)
+//! * encode throughput (blocks/s) and candidate-scoring throughput
+//!   (candidates/s) — the paper's compute hot-spot
+//! * bitstream + Huffman coder throughput
+//! * server throughput / latency under closed-loop clients
+
+mod common;
+
+use miracle::bitstream::huffman;
+use miracle::bitstream::{BitReader, BitWriter};
+use miracle::codec::MrcFile;
+use miracle::coordinator::{encoder, MiracleCfg, Session};
+use miracle::data;
+use miracle::prng::Pcg64;
+use miracle::runtime::{self, Runtime};
+use miracle::server::{spawn_clients, Server, ServerCfg};
+use miracle::util::stats::{bench_fn, report_bench};
+use miracle::util::Result;
+
+fn bench_artifacts(rt: &Runtime) -> Result<()> {
+    println!("\n-- AOT entry latency (tiny_mlp) --");
+    let arts = runtime::load(rt, "tiny_mlp")?;
+    let train = data::synth_protos(512, 16, 4, 1);
+    let cfg = MiracleCfg { i0: 0, data_scale: 512.0, ..Default::default() };
+    let mut session = Session::new(&arts, &train, &cfg)?;
+    let samples = bench_fn(3, 30, || {
+        session.train_step(true).unwrap();
+    });
+    report_bench("train_step (B=22,S=8,batch=32)", &samples, None);
+
+    let mut b = 0usize;
+    let samples = bench_fn(3, 30, || {
+        // rotate blocks so freezing doesn't accumulate into the timing
+        session.frozen_mask[b % 22] = 0.0;
+        let _ = encoder::encode_block(&mut session, b % 22).unwrap();
+        b += 1;
+    });
+    let k = 1u64 << cfg.c_loc_bits;
+    report_bench(
+        &format!("encode_block (K={k}, k_chunk=64)"),
+        &samples,
+        Some((k as f64, "candidates")),
+    );
+
+    let lsp = vec![-2.0f32; arts.meta.s];
+    let samples = bench_fn(3, 50, || {
+        let _ = encoder::decode_block_row(&arts, 7, 3, 17, &lsp).unwrap();
+    });
+    report_bench("decode_block_row", &samples, None);
+    Ok(())
+}
+
+fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
+    println!("\n-- paper-scale hot path (lenet_synth) --");
+    let arts = runtime::load(rt, "lenet_synth")?;
+    let train = data::synth_mnist(1024, 1);
+    let cfg = MiracleCfg { i0: 0, c_loc_bits: 12, data_scale: 1024.0, ..Default::default() };
+    let mut session = Session::new(&arts, &train, &cfg)?;
+    let samples = bench_fn(2, 15, || {
+        session.train_step(true).unwrap();
+    });
+    report_bench("train_step (B=1417,S=16,batch=128)", &samples, None);
+
+    let mut b = 0usize;
+    let samples = bench_fn(2, 15, || {
+        session.frozen_mask[b % 1417] = 0.0;
+        let _ = encoder::encode_block(&mut session, b % 1417).unwrap();
+        b += 1;
+    });
+    let k = 1u64 << cfg.c_loc_bits;
+    report_bench(
+        &format!("encode_block (K={k}, k_chunk=1024)"),
+        &samples,
+        Some((k as f64, "candidates")),
+    );
+    // per-entry cumulative stats gathered by the runtime
+    for (name, n, secs) in arts.invocation_stats() {
+        if n > 0 {
+            println!(
+                "   {name:<24} {n:>6} calls  {:>8.3} ms/call",
+                secs * 1e3 / n as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+fn bench_bitstream() {
+    println!("\n-- bitstream / huffman substrate --");
+    let mut rng = Pcg64::seed(3);
+    let vals: Vec<u64> = (0..10_000).map(|_| rng.next_u64() & 0xfff).collect();
+    let samples = bench_fn(3, 50, || {
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.write_bits(v, 12);
+        }
+        std::hint::black_box(w.finish());
+    });
+    report_bench("bitwriter 10k x 12-bit", &samples, Some((10_000.0, "sym")));
+
+    let mut w = BitWriter::new();
+    for &v in &vals {
+        w.write_bits(v, 12);
+    }
+    let bytes = w.finish();
+    let samples = bench_fn(3, 50, || {
+        let mut r = BitReader::new(&bytes);
+        let mut acc = 0u64;
+        for _ in 0..vals.len() {
+            acc ^= r.read_bits(12).unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    report_bench("bitreader 10k x 12-bit", &samples, Some((10_000.0, "sym")));
+
+    let syms: Vec<u32> = (0..20_000)
+        .map(|_| {
+            // geometric-ish
+            let mut s = 0u32;
+            while rng.next_f64() < 0.5 && s < 15 {
+                s += 1;
+            }
+            s
+        })
+        .collect();
+    let samples = bench_fn(2, 20, || {
+        let _ = huffman::encode_stream(&syms).unwrap();
+    });
+    report_bench("huffman build+encode 20k syms", &samples, Some((20_000.0, "sym")));
+}
+
+fn bench_server(rt: &Runtime) -> Result<()> {
+    println!("\n-- inference server (tiny_mlp, closed-loop clients) --");
+    let arts = runtime::load(rt, "tiny_mlp")?;
+    let mrc = MrcFile {
+        model: "tiny_mlp".into(),
+        layout_seed: 0xABCD,
+        protocol_seed: 7,
+        b: arts.meta.b,
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: 10,
+        lsp: vec![-2.0f32; arts.meta.n_layers],
+        indices: (0..arts.meta.b as u64).map(|i| (i * 37) % 1024).collect(),
+    };
+    let test = data::synth_protos(256, 16, 4, 9);
+    let feat = test.feature_dim();
+    let examples: Vec<Vec<f32>> = (0..test.len())
+        .map(|i| test.x[i * feat..(i + 1) * feat].to_vec())
+        .collect();
+    for clients in [1usize, 4, 16] {
+        let mut server = Server::new(&arts, &mrc, ServerCfg::default())?;
+        let (rx, join) = spawn_clients(
+            examples.clone(),
+            clients,
+            256 / clients,
+            std::time::Duration::ZERO,
+        );
+        let stats = server.run(rx)?;
+        let _ = join.join();
+        println!(
+            "   {clients:>2} clients: {:>7.0} req/s   p50 {:>7.2} ms   p99 {:>7.2} ms   avg batch {:.1}",
+            stats.served as f64 / stats.wall_secs,
+            stats.latency.p50 * 1e3,
+            stats.latency.p99 * 1e3,
+            stats.served as f64 / stats.batches.max(1) as f64,
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    common::banner("Runtime perf microbenches");
+    let rt = Runtime::cpu()?;
+    bench_artifacts(&rt)?;
+    bench_lenet_hotpath(&rt)?;
+    bench_bitstream();
+    bench_server(&rt)?;
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Regenerates **Table 1** of the paper: size / ratio / test-error rows for
+//! Uncompressed, Deep Compression, Bayesian Compression and MIRACLE at two
+//! operating points, on both benchmarks (synth-MNIST MLP, synth-CIFAR conv).
+//!
+//! Expected *shape* (paper): MIRACLE rows Pareto-dominate — the low-error
+//! point beats every baseline's error at smaller size, the high-compression
+//! point reaches ratios no baseline attains at comparable error.
+//!
+//! `MIRACLE_BENCH_SCALE=full cargo bench --bench bench_table1` for the long
+//! version; default quick scale finishes in a few minutes.
+
+mod common;
+
+use common::{banner, datasets_for, dense_steps, miracle_iters, scale};
+use miracle::baselines::bayescomp::BayesCompCfg;
+use miracle::baselines::deepcomp::DeepCompCfg;
+use miracle::baselines::runner;
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::metrics::{fmt_size, Table};
+use miracle::runtime::{self, Runtime};
+use miracle::util::Result;
+
+fn bench_model(rt: &Runtime, model: &str, lr: f32) -> Result<Table> {
+    let s = scale();
+    let arts = runtime::load(rt, model)?;
+    let dense_arts = runtime::load(rt, &format!("{model}_dense"))?;
+    let (train, test) = datasets_for(model, s);
+    let (i0, i_int) = miracle_iters(s);
+
+    let n_bits_fp32 = dense_arts.meta.n_total * 32;
+    let mut table = Table::new(
+        &format!("Table 1 — {model}"),
+        &["Compression", "Size", "Ratio", "Test error"],
+    );
+
+    let post = runner::train_dense(
+        &dense_arts,
+        &train,
+        dense_steps(s),
+        lr,
+        train.len() as f32,
+        7,
+    )?;
+    let suite = runner::baseline_suite(
+        &dense_arts,
+        &post,
+        &test,
+        &DeepCompCfg { sparsity: 0.9, clusters: 16, ..Default::default() },
+        &BayesCompCfg::default(),
+    )?;
+    for p in &suite {
+        table.row(vec![
+            p.label.clone(),
+            fmt_size(p.bits as f64 / 8.0),
+            format!("{:.0}x", n_bits_fp32 as f64 / p.bits as f64),
+            format!("{:.2} %", p.test_error * 100.0),
+        ]);
+    }
+
+    for (tag, bits) in [
+        ("MIRACLE (lowest error)", 12u8),
+        ("MIRACLE (highest compression)", 3),
+    ] {
+        let cfg = MiracleCfg {
+            c_loc_bits: bits,
+            i0,
+            i_intermediate: i_int,
+            lr,
+            beta0: 1e-4,
+            eps_beta: 0.01,
+            data_scale: train.len() as f32,
+            ..Default::default()
+        };
+        let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+        table.row(vec![
+            tag.to_string(),
+            fmt_size(r.total_bits as f64 / 8.0),
+            format!("{:.0}x", n_bits_fp32 as f64 / r.total_bits as f64),
+            format!("{:.2} %", r.test_error * 100.0),
+        ]);
+    }
+    Ok(table)
+}
+
+fn main() -> Result<()> {
+    banner("Table 1 — compression method comparison");
+    let rt = Runtime::cpu()?;
+    let t1 = bench_model(&rt, "lenet_synth", 2e-3)?;
+    print!("{}", t1.render());
+    t1.save_csv("bench_table1_lenet.csv")?;
+    let t2 = bench_model(&rt, "conv_synth", 2e-3)?;
+    print!("{}", t2.render());
+    t2.save_csv("bench_table1_conv.csv")?;
+    println!("\nCSV written: bench_table1_lenet.csv bench_table1_conv.csv");
+    Ok(())
+}

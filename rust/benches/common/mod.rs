@@ -1,0 +1,66 @@
+//! Shared helpers for the bench binaries (criterion substitute).
+#![allow(dead_code)] // each bench binary uses a subset
+//!
+//! Scale control: `MIRACLE_BENCH_SCALE=full` runs paper-scale settings
+//! (minutes per bench); the default `quick` scale keeps every bench under
+//! ~1-2 minutes on one CPU core so `cargo bench` completes end to end.
+
+use miracle::data::{self, Dataset};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("MIRACLE_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Quick,
+    }
+}
+
+/// Datasets for a model config name.
+pub fn datasets_for(model: &str, s: Scale) -> (Dataset, Dataset) {
+    let (nt, ne) = match s {
+        Scale::Quick => (2048, 1024),
+        Scale::Full => (8192, 2048),
+    };
+    if model.starts_with("conv") {
+        (
+            data::synth_cifar(nt, 16, 16, 1234),
+            data::synth_cifar(ne, 16, 16, 1234 ^ 0x7E57),
+        )
+    } else if model.starts_with("lenet") {
+        (
+            data::synth_mnist(nt, 1234),
+            data::synth_mnist(ne, 1234 ^ 0x7E57),
+        )
+    } else {
+        (
+            data::synth_protos(512, 16, 4, 1234),
+            data::synth_protos(512, 16, 4, 1234 ^ 0x7E57),
+        )
+    }
+}
+
+/// MIRACLE iteration budget per scale.
+pub fn miracle_iters(s: Scale) -> (usize, usize) {
+    match s {
+        Scale::Quick => (2500, 1), // (i0, intermediate I)
+        Scale::Full => (6000, 1),
+    }
+}
+
+pub fn dense_steps(s: Scale) -> usize {
+    match s {
+        Scale::Quick => 1500,
+        Scale::Full => 4000,
+    }
+}
+
+pub fn banner(name: &str) {
+    println!("\n############################################################");
+    println!("# {name}   (scale: {:?})", scale());
+    println!("############################################################");
+}

@@ -1,0 +1,186 @@
+//! Bayesian-Compression-style baseline (Louizos et al., 2017, simplified):
+//! given a trained variational posterior (mu, sigma) per weight, (1) prune
+//! weights with low signal-to-noise |mu|/sigma, (2) round surviving means to
+//! a precision derived from their posterior stddev (high variance -> fewer
+//! bits), (3) Shannon-code the quantized values. Produces a *deterministic*
+//! weight-set — exactly the point-measure coding scheme §2 of the paper
+//! argues is dominated by MIRACLE's random coding.
+
+use std::collections::BTreeMap;
+
+use super::sparse::encode_sparse;
+use super::CompressedWeights;
+use crate::util::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BayesCompCfg {
+    /// prune weights with |mu|/sigma below this
+    pub snr_threshold: f32,
+    /// quantization step = step_scale * sigma (posterior-variance-aware
+    /// rounding: noisier weights get coarser grids)
+    pub step_scale: f32,
+}
+
+impl Default for BayesCompCfg {
+    fn default() -> BayesCompCfg {
+        BayesCompCfg { snr_threshold: 1.0, step_scale: 1.0 }
+    }
+}
+
+/// Compress a variational posterior into a deterministic coded weight-set.
+/// `mu`/`sigma` are per-weight (flat layout).
+pub fn bayes_compress(
+    mu: &[f32],
+    sigma: &[f32],
+    cfg: &BayesCompCfg,
+) -> Result<CompressedWeights> {
+    assert_eq!(mu.len(), sigma.len());
+    let n = mu.len();
+    // global grid step from the median surviving sigma (shared quantizer so
+    // the decoder needs one f32, not one per weight)
+    let mut survivors: Vec<usize> = (0..n)
+        .filter(|&i| sigma[i] > 0.0 && mu[i].abs() / sigma[i] > cfg.snr_threshold)
+        .collect();
+    if survivors.is_empty() {
+        // degenerate: everything pruned
+        return Ok(CompressedWeights {
+            weights: vec![0.0; n],
+            bits: 64,
+            descr: format!("bayes-comp snr>{} (all pruned)", cfg.snr_threshold),
+        });
+    }
+    let mut sig_sorted: Vec<f32> = survivors.iter().map(|&i| sigma[i]).collect();
+    sig_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let step = (cfg.step_scale * sig_sorted[sig_sorted.len() / 2]).max(1e-6);
+
+    // quantize survivors onto the grid; symbol = signed grid index, offset
+    // to be non-negative for the coder
+    let q_idx: Vec<i64> = survivors
+        .iter()
+        .map(|&i| (mu[i] / step).round() as i64)
+        .collect();
+    let min_idx = *q_idx.iter().min().unwrap();
+    let symbols: Vec<u32> = q_idx.iter().map(|&q| (q - min_idx) as u32).collect();
+    // drop survivors that quantize to zero (they carry no information)
+    let mut occupancy = vec![false; n];
+    let mut kept_syms = Vec::new();
+    for (k, &i) in survivors.iter().enumerate() {
+        if q_idx[k] != 0 {
+            occupancy[i] = true;
+            kept_syms.push(symbols[k]);
+        }
+    }
+    survivors.retain(|&i| occupancy[i]);
+    if kept_syms.is_empty() {
+        return Ok(CompressedWeights {
+            weights: vec![0.0; n],
+            bits: 64,
+            descr: format!("bayes-comp snr>{} (all zero)", cfg.snr_threshold),
+        });
+    }
+    let coded = encode_sparse(&occupancy, &kept_syms)?;
+    // decode to produce the deterministic weight-set
+    let (occ2, syms2) = coded.decode()?;
+    let mut weights = vec![0f32; n];
+    let mut si = 0usize;
+    for (i, &occ) in occ2.iter().enumerate() {
+        if occ {
+            weights[i] = ((syms2[si] as i64 + min_idx) as f32) * step;
+            si += 1;
+        }
+    }
+    let header_bits = 32 + 64 + 64; // step, min_idx, counts
+    Ok(CompressedWeights {
+        weights,
+        bits: coded.total_bits() + header_bits,
+        descr: format!(
+            "bayes-comp snr>{} step={:.4}",
+            cfg.snr_threshold, step
+        ),
+    })
+}
+
+/// Entropy of the quantized symbol stream (diagnostics / ablations).
+pub fn symbol_entropy(symbols: &[u32]) -> f64 {
+    let mut freqs: BTreeMap<u32, usize> = BTreeMap::new();
+    for &s in symbols {
+        *freqs.entry(s).or_insert(0) += 1;
+    }
+    let n = symbols.len() as f64;
+    freqs
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn posterior(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seed(9);
+        let mu: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.next_f64() < 0.15 {
+                    rng.next_normal() as f32 * 1.5 // informative weight
+                } else {
+                    rng.next_normal() as f32 * 0.02 // noise weight
+                }
+            })
+            .collect();
+        let sigma: Vec<f32> = mu
+            .iter()
+            .map(|&m| if m.abs() > 0.3 { 0.05 } else { 0.5 })
+            .collect();
+        (mu, sigma)
+    }
+
+    #[test]
+    fn prunes_low_snr_keeps_high_snr() {
+        let (mu, sigma) = posterior(2000);
+        let c = bayes_compress(&mu, &sigma, &BayesCompCfg::default()).unwrap();
+        for i in 0..mu.len() {
+            if mu[i].abs() / sigma[i] < 1.0 {
+                assert_eq!(c.weights[i], 0.0, "low SNR weight survived");
+            } else if mu[i].abs() > 0.5 {
+                assert!(
+                    (c.weights[i] - mu[i]).abs() < 0.2,
+                    "{} -> {}",
+                    mu[i],
+                    c.weights[i]
+                );
+            }
+        }
+        assert!(c.ratio_vs_fp32(mu.len()) > 5.0, "ratio {}", c.ratio_vs_fp32(mu.len()));
+    }
+
+    #[test]
+    fn stricter_threshold_compresses_more() {
+        let (mu, sigma) = posterior(2000);
+        let a = bayes_compress(&mu, &sigma, &BayesCompCfg { snr_threshold: 0.5, step_scale: 0.5 })
+            .unwrap();
+        let b = bayes_compress(&mu, &sigma, &BayesCompCfg { snr_threshold: 3.0, step_scale: 0.5 })
+            .unwrap();
+        assert!(b.bits <= a.bits);
+    }
+
+    #[test]
+    fn degenerate_all_pruned() {
+        let mu = vec![0.001f32; 50];
+        let sigma = vec![1.0f32; 50];
+        let c = bayes_compress(&mu, &sigma, &BayesCompCfg::default()).unwrap();
+        assert!(c.weights.iter().all(|&w| w == 0.0));
+        assert!(c.bits <= 64);
+    }
+
+    #[test]
+    fn entropy_sane() {
+        assert_eq!(symbol_entropy(&[1, 1, 1, 1]), 0.0);
+        let e = symbol_entropy(&[0, 1, 2, 3]);
+        assert!((e - 2.0).abs() < 1e-12);
+    }
+}

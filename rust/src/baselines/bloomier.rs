@@ -1,0 +1,222 @@
+//! Bloomier filter — the data structure behind the Weightless baseline
+//! (Reagen et al., 2018).
+//!
+//! An immutable approximate key->value map: `n` keys are stored in
+//! `m ≈ 1.23 n` cells of `b + t` bits (value + tag) using 3-way hashing and
+//! peeling construction (as in XOR filters). Queries for stored keys return
+//! the exact value; queries for other keys fail the tag check with
+//! probability `1 - 2^-t` (returning None) and otherwise return junk — the
+//! controlled lossiness Weightless exploits for weight matrices.
+
+use crate::prng::mix64;
+use crate::util::{Error, Result};
+
+/// Immutable Bloomier filter storing `value_bits`-bit values with
+/// `tag_bits`-bit false-positive protection.
+#[derive(Debug, Clone)]
+pub struct Bloomier {
+    cells: Vec<u32>,
+    seed: u64,
+    pub value_bits: u32,
+    pub tag_bits: u32,
+}
+
+fn hashes(seed: u64, key: u64, m: usize) -> [usize; 3] {
+    // three independent positions via double hashing on mix64
+    let h = mix64(seed ^ key);
+    let a = (h >> 0) as u32 as u64;
+    let b = (h >> 32) as u32 as u64;
+    let c = mix64(h) as u32 as u64;
+    [
+        (a % m as u64) as usize,
+        (b % m as u64) as usize,
+        (c % m as u64) as usize,
+    ]
+}
+
+fn tag_of(seed: u64, key: u64, tag_bits: u32) -> u32 {
+    if tag_bits == 0 {
+        0
+    } else {
+        (mix64(seed ^ key.rotate_left(17) ^ 0x7A6) as u32) & ((1 << tag_bits) - 1)
+    }
+}
+
+impl Bloomier {
+    /// Build from (key, value) pairs; values must fit in `value_bits`.
+    /// Retries with different seeds until the peeling succeeds.
+    pub fn build(
+        pairs: &[(u64, u32)],
+        value_bits: u32,
+        tag_bits: u32,
+    ) -> Result<Bloomier> {
+        if value_bits + tag_bits > 32 {
+            return Err(Error::msg("value_bits + tag_bits must be <= 32"));
+        }
+        for v in pairs {
+            if value_bits < 32 && v.1 >= (1 << value_bits) {
+                return Err(Error::msg(format!("value {} exceeds {value_bits} bits", v.1)));
+            }
+        }
+        let n = pairs.len();
+        let m = ((n as f64 * 1.23).ceil() as usize + 32).max(8);
+        'seed: for attempt in 0..64u64 {
+            let seed = mix64(0xB100_311E ^ attempt);
+            // peeling: count key occurrences per cell
+            let mut count = vec![0u32; m];
+            let mut xorkey = vec![0usize; m]; // xor of pair indices
+            for (i, &(k, _)) in pairs.iter().enumerate() {
+                for h in hashes(seed, k, m) {
+                    count[h] += 1;
+                    xorkey[h] ^= i;
+                }
+            }
+            let mut stack = Vec::with_capacity(n);
+            let mut queue: Vec<usize> =
+                (0..m).filter(|&c| count[c] == 1).collect();
+            let mut placed = vec![false; n];
+            while let Some(c) = queue.pop() {
+                if count[c] != 1 {
+                    continue;
+                }
+                let i = xorkey[c];
+                if placed[i] {
+                    continue;
+                }
+                placed[i] = true;
+                stack.push((i, c));
+                let (k, _) = pairs[i];
+                for h in hashes(seed, k, m) {
+                    count[h] -= 1;
+                    xorkey[h] ^= i;
+                    if count[h] == 1 {
+                        queue.push(h);
+                    }
+                }
+            }
+            if stack.len() != n {
+                continue 'seed; // peeling failed; retry with a new seed
+            }
+            // assign cells in reverse peel order
+            let mut cells = vec![0u32; m];
+            for &(i, home) in stack.iter().rev() {
+                let (k, v) = pairs[i];
+                let payload = (v << tag_bits) | tag_of(seed, k, tag_bits);
+                let mut acc = payload;
+                for h in hashes(seed, k, m) {
+                    if h != home {
+                        acc ^= cells[h];
+                    }
+                }
+                cells[home] = acc;
+            }
+            return Ok(Bloomier { cells, seed, value_bits, tag_bits });
+        }
+        Err(Error::msg("bloomier: peeling failed for all seeds"))
+    }
+
+    /// Query: Some(value) if the tag matches (always true for stored keys,
+    /// probability 2^-tag_bits for others), None otherwise.
+    pub fn query(&self, key: u64) -> Option<u32> {
+        let m = self.cells.len();
+        let mut acc = 0u32;
+        for h in hashes(self.seed, key, m) {
+            acc ^= self.cells[h];
+        }
+        let tag_mask = if self.tag_bits == 0 {
+            0
+        } else {
+            (1u32 << self.tag_bits) - 1
+        };
+        if acc & tag_mask == tag_of(self.seed, key, self.tag_bits) {
+            Some(acc >> self.tag_bits)
+        } else {
+            None
+        }
+    }
+
+    /// Storage size in bits (cells only; the seed is 8 bytes of header).
+    pub fn bits(&self) -> usize {
+        self.cells.len() * (self.value_bits + self.tag_bits) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::util::quickprop;
+
+    #[test]
+    fn stored_keys_exact() {
+        let pairs: Vec<(u64, u32)> = (0..500u64).map(|k| (k * 7 + 1, (k % 16) as u32)).collect();
+        let f = Bloomier::build(&pairs, 4, 8).unwrap();
+        for &(k, v) in &pairs {
+            assert_eq!(f.query(k), Some(v), "key {k}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_near_2_pow_minus_t() {
+        let pairs: Vec<(u64, u32)> = (0..2000u64).map(|k| (k, (k % 8) as u32)).collect();
+        for t in [4u32, 8] {
+            let f = Bloomier::build(&pairs, 3, t).unwrap();
+            let mut fp = 0usize;
+            let trials = 20000u64;
+            for k in 0..trials {
+                if f.query(1_000_000 + k).is_some() {
+                    fp += 1;
+                }
+            }
+            let rate = fp as f64 / trials as f64;
+            let expect = 2f64.powi(-(t as i32));
+            assert!(
+                (rate - expect).abs() < expect * 0.5 + 0.002,
+                "t={t}: rate {rate} expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn size_is_1_23_n_cells() {
+        let pairs: Vec<(u64, u32)> = (0..1000u64).map(|k| (k, 1)).collect();
+        let f = Bloomier::build(&pairs, 4, 4).unwrap();
+        let cells = f.bits() / 8;
+        assert!(cells >= 1230 && cells < 1400, "{cells}");
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let f = Bloomier::build(&[], 4, 4).unwrap();
+        assert_eq!(f.query(42), None);
+        let f = Bloomier::build(&[(9, 3)], 4, 4).unwrap();
+        assert_eq!(f.query(9), Some(3));
+    }
+
+    #[test]
+    fn rejects_oversized_values() {
+        assert!(Bloomier::build(&[(1, 16)], 4, 4).is_err());
+        assert!(Bloomier::build(&[(1, 1)], 20, 20).is_err());
+    }
+
+    #[test]
+    fn random_key_sets_round_trip() {
+        quickprop::check("bloomier round trip", 25, |g| {
+            let n = g.usize_in(1, 800);
+            let vbits = g.usize_in(1, 8) as u32;
+            let mut rng = Pcg64::seed(g.rng.next_u64());
+            let mut keys = std::collections::BTreeSet::new();
+            while keys.len() < n {
+                keys.insert(rng.next_u64());
+            }
+            let pairs: Vec<(u64, u32)> = keys
+                .into_iter()
+                .map(|k| (k, (rng.next_u64() & ((1 << vbits) - 1) as u64) as u32))
+                .collect();
+            let f = Bloomier::build(&pairs, vbits, 6).unwrap();
+            for &(k, v) in &pairs {
+                assert_eq!(f.query(k), Some(v));
+            }
+        });
+    }
+}

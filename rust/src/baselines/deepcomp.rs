@@ -1,0 +1,135 @@
+//! Deep Compression pipeline (Han et al., 2016): magnitude pruning →
+//! k-means quantization → Huffman coding of cluster indices and sparse
+//! run lengths. Operates on a trained deterministic weight vector.
+
+use super::kmeans::{kmeans_1d, reconstruct};
+use super::prune::magnitude_prune;
+use super::sparse::encode_sparse;
+use super::CompressedWeights;
+use crate::util::Result;
+
+/// Operating point of the pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct DeepCompCfg {
+    /// fraction of weights zeroed by magnitude pruning
+    pub sparsity: f64,
+    /// number of k-means clusters for the survivors
+    pub clusters: usize,
+    /// Lloyd iterations
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for DeepCompCfg {
+    fn default() -> DeepCompCfg {
+        DeepCompCfg { sparsity: 0.9, clusters: 32, kmeans_iters: 25, seed: 0 }
+    }
+}
+
+/// Run the full pipeline; size accounting covers Huffman payload, both code
+/// books, the centroid table (fp32 each) and the header.
+pub fn deep_compress(weights: &[f32], cfg: &DeepCompCfg) -> Result<CompressedWeights> {
+    let (pruned, _survivors) = magnitude_prune(weights, cfg.sparsity);
+    let (centroids, assign) = kmeans_1d(&pruned, cfg.clusters, cfg.kmeans_iters, cfg.seed);
+    let occupancy: Vec<bool> = pruned.iter().map(|&w| w != 0.0).collect();
+    let symbols: Vec<u32> = assign
+        .iter()
+        .cloned()
+        .filter(|&a| a != u32::MAX)
+        .collect();
+
+    let (bits, decoded) = if symbols.is_empty() {
+        (64, vec![0f32; weights.len()])
+    } else {
+        let coded = encode_sparse(&occupancy, &symbols)?;
+        // verify decodability and reconstruct from the *decoded* stream
+        let (occ2, syms2) = coded.decode()?;
+        let mut full_assign = vec![u32::MAX; weights.len()];
+        let mut si = 0usize;
+        for (i, &occ) in occ2.iter().enumerate() {
+            if occ {
+                full_assign[i] = syms2[si];
+                si += 1;
+            }
+        }
+        let decoded = reconstruct(&centroids, &full_assign);
+        let centroid_bits = centroids.len() * 32;
+        let header_bits = 64; // n, counts
+        (
+            coded.total_bits() + centroid_bits + header_bits,
+            decoded,
+        )
+    };
+    Ok(CompressedWeights {
+        weights: decoded,
+        bits,
+        descr: format!(
+            "deep-compression sparsity={:.2} clusters={}",
+            cfg.sparsity, cfg.clusters
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn toy_weights(n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::seed(3);
+        (0..n)
+            .map(|_| {
+                // heavy-tailed: most weights tiny, few large (prunable)
+                let v = rng.next_normal() as f32;
+                if rng.next_f64() < 0.1 {
+                    v * 2.0
+                } else {
+                    v * 0.05
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn compresses_and_reconstructs() {
+        let w = toy_weights(2000);
+        let c = deep_compress(&w, &DeepCompCfg::default()).unwrap();
+        assert_eq!(c.weights.len(), w.len());
+        assert!(c.ratio_vs_fp32(w.len()) > 5.0, "ratio {}", c.ratio_vs_fp32(w.len()));
+        // surviving large weights approximated decently
+        for (x, y) in w.iter().zip(&c.weights) {
+            if x.abs() > 1.0 {
+                assert!((x - y).abs() < 0.5, "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn higher_sparsity_smaller() {
+        let w = toy_weights(3000);
+        let lo = deep_compress(&w, &DeepCompCfg { sparsity: 0.5, ..Default::default() })
+            .unwrap();
+        let hi = deep_compress(&w, &DeepCompCfg { sparsity: 0.95, ..Default::default() })
+            .unwrap();
+        assert!(hi.bits < lo.bits);
+    }
+
+    #[test]
+    fn fewer_clusters_smaller_but_lossier() {
+        let w = toy_weights(3000);
+        let fine =
+            deep_compress(&w, &DeepCompCfg { clusters: 64, sparsity: 0.8, ..Default::default() })
+                .unwrap();
+        let coarse =
+            deep_compress(&w, &DeepCompCfg { clusters: 4, sparsity: 0.8, ..Default::default() })
+                .unwrap();
+        assert!(coarse.bits < fine.bits);
+        let err = |c: &CompressedWeights| -> f64 {
+            w.iter()
+                .zip(&c.weights)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum()
+        };
+        assert!(err(&coarse) >= err(&fine));
+    }
+}

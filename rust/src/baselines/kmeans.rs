@@ -1,0 +1,148 @@
+//! 1-D k-means (Lloyd) weight clustering — Deep Compression's quantizer.
+
+use crate::prng::Pcg64;
+
+/// Cluster nonzero weights into `k` centroids. Returns (centroids,
+/// assignment per input index; pruned zeros keep assignment `u32::MAX`).
+pub fn kmeans_1d(
+    weights: &[f32],
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<u32>) {
+    let nz: Vec<f32> = weights.iter().cloned().filter(|&w| w != 0.0).collect();
+    if nz.is_empty() || k == 0 {
+        return (vec![], vec![u32::MAX; weights.len()]);
+    }
+    let k = k.min(nz.len());
+    // linear init across the weight range (Deep Compression's linear init)
+    let (lo, hi) = nz
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &w| {
+            (l.min(w), h.max(w))
+        });
+    let mut centroids: Vec<f32> = (0..k)
+        .map(|i| lo + (hi - lo) * (i as f32 + 0.5) / k as f32)
+        .collect();
+    let mut rng = Pcg64::seed(seed);
+    let mut assign = vec![0u32; nz.len()];
+    for _ in 0..iters {
+        // assignment step (centroids are sorted -> binary search)
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, &w) in nz.iter().enumerate() {
+            assign[i] = nearest(&centroids, w) as u32;
+        }
+        // update step
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, &w) in nz.iter().enumerate() {
+            sums[assign[i] as usize] += w as f64;
+            counts[assign[i] as usize] += 1;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                centroids[c] = (sums[c] / counts[c] as f64) as f32;
+            } else {
+                // re-seed empty cluster at a random weight
+                centroids[c] = nz[rng.below(nz.len() as u64) as usize];
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // final assignment over all weights
+    let mut full_assign = vec![u32::MAX; weights.len()];
+    for (i, &w) in weights.iter().enumerate() {
+        if w != 0.0 {
+            full_assign[i] = nearest(&centroids, w) as u32;
+        }
+    }
+    (centroids, full_assign)
+}
+
+fn nearest(sorted: &[f32], w: f32) -> usize {
+    match sorted.binary_search_by(|c| c.partial_cmp(&w).unwrap()) {
+        Ok(i) => i,
+        Err(i) => {
+            if i == 0 {
+                0
+            } else if i >= sorted.len() {
+                sorted.len() - 1
+            } else if (w - sorted[i - 1]).abs() <= (sorted[i] - w).abs() {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+/// Reconstruct weights from centroids + assignments.
+pub fn reconstruct(centroids: &[f32], assign: &[u32]) -> Vec<f32> {
+    assign
+        .iter()
+        .map(|&a| {
+            if a == u32::MAX {
+                0.0
+            } else {
+                centroids[a as usize]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    #[test]
+    fn separates_clear_clusters() {
+        let mut w = vec![1.0f32; 50];
+        w.extend(vec![-1.0f32; 50]);
+        w.extend(vec![5.0f32; 50]);
+        let (c, a) = kmeans_1d(&w, 3, 20, 0);
+        assert_eq!(c.len(), 3);
+        let rec = reconstruct(&c, &a);
+        for (x, y) in w.iter().zip(&rec) {
+            assert!((x - y).abs() < 0.05, "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let w = [0.0f32, 1.0, 0.0, 2.0];
+        let (c, a) = kmeans_1d(&w, 2, 10, 0);
+        let rec = reconstruct(&c, &a);
+        assert_eq!(rec[0], 0.0);
+        assert_eq!(rec[2], 0.0);
+        assert!(a[0] == u32::MAX);
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_k() {
+        quickprop::check("kmeans error vs k", 10, |g| {
+            let n = 400;
+            let w = g.vec_f32(n, -2.0, 2.0);
+            let err = |k: usize| {
+                let (c, a) = kmeans_1d(&w, k, 15, 1);
+                let rec = reconstruct(&c, &a);
+                w.iter()
+                    .zip(&rec)
+                    .map(|(x, y)| ((x - y) * (x - y)) as f64)
+                    .sum::<f64>()
+            };
+            let e2 = err(2);
+            let e16 = err(16);
+            assert!(e16 <= e2 + 1e-9, "e2={e2} e16={e16}");
+        });
+    }
+
+    #[test]
+    fn assignments_in_range() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        let (c, a) = kmeans_1d(&w, 8, 10, 2);
+        for &x in &a {
+            assert!(x == u32::MAX || (x as usize) < c.len());
+        }
+    }
+}

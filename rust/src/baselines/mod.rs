@@ -1,0 +1,122 @@
+//! Baseline compressors implemented for the Table 1 / Figure 1 comparison.
+//!
+//! The paper quotes Deep Compression (Han et al., 2016), Weightless (Reagen
+//! et al., 2018) and Bayesian Compression (Louizos et al., 2017) from their
+//! source papers; since our benchmark substrate differs (synthetic data,
+//! scaled models), we *implement* the baseline pipelines and measure them on
+//! the same workloads (DESIGN.md §4):
+//!
+//! * [`deepcomp`]  — magnitude pruning → k-means weight clustering → Huffman
+//!   coding of cluster indices + sparse run lengths.
+//! * [`bayescomp`] — variational posterior → precision-aware deterministic
+//!   rounding + sparsification by signal-to-noise, then the same
+//!   Shannon-style back end (this is the "deterministic weight-set from q"
+//!   scheme §2 argues is restricted to point-measure coding).
+//! * `fp32` / `fp16` uncompressed reference sizes.
+
+pub mod bayescomp;
+pub mod bloomier;
+pub mod deepcomp;
+pub mod kmeans;
+pub mod prune;
+pub mod runner;
+pub mod sparse;
+pub mod weightless;
+
+/// A compressed deterministic weight-set: decoded values + honest size.
+#[derive(Debug, Clone)]
+pub struct CompressedWeights {
+    /// decompressed flat weights (same layout the encoder saw)
+    pub weights: Vec<f32>,
+    /// total coded size in bits (payload + tables + container overhead)
+    pub bits: usize,
+    /// human-readable description of the operating point
+    pub descr: String,
+}
+
+impl CompressedWeights {
+    pub fn bytes(&self) -> f64 {
+        self.bits as f64 / 8.0
+    }
+
+    pub fn ratio_vs_fp32(&self, n_weights: usize) -> f64 {
+        (n_weights * 32) as f64 / self.bits as f64
+    }
+}
+
+/// Uncompressed reference (fp32 or fp16 cast).
+pub fn uncompressed(weights: &[f32], half: bool) -> CompressedWeights {
+    if half {
+        let dec: Vec<f32> = weights
+            .iter()
+            .map(|&w| f32::from_bits(half_round_trip(w)))
+            .collect();
+        CompressedWeights {
+            weights: dec,
+            bits: weights.len() * 16,
+            descr: "fp16".into(),
+        }
+    } else {
+        CompressedWeights {
+            weights: weights.to_vec(),
+            bits: weights.len() * 32,
+            descr: "fp32".into(),
+        }
+    }
+}
+
+/// f32 -> f16 -> f32 round trip (software; no `half` crate offline).
+fn half_round_trip(x: f32) -> u32 {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    // to f16
+    let (h_exp, h_frac) = if exp == 0xff {
+        (0x1f, if frac != 0 { 0x200 } else { 0 })
+    } else {
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            (0x1f, 0) // overflow -> inf
+        } else if unbiased < -14 {
+            (0, 0) // flush subnormal to zero (fine for weights)
+        } else {
+            ((unbiased + 15) as u32, frac >> 13)
+        }
+    };
+    // back to f32
+    if h_exp == 0 {
+        return sign << 31;
+    }
+    if h_exp == 0x1f {
+        return (sign << 31) | 0x7f80_0000 | (h_frac << 13);
+    }
+    let r_exp = (h_exp as i32 - 15 + 127) as u32;
+    (sign << 31) | (r_exp << 23) | (h_frac << 13)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncompressed_sizes() {
+        let w = vec![1.0f32; 100];
+        assert_eq!(uncompressed(&w, false).bits, 3200);
+        assert_eq!(uncompressed(&w, true).bits, 1600);
+    }
+
+    #[test]
+    fn fp16_round_trip_accuracy() {
+        for &x in &[0.0f32, 1.0, -1.5, 0.1, 100.0, -0.003] {
+            let y = f32::from_bits(half_round_trip(x));
+            assert!((x - y).abs() <= x.abs() * 1e-3 + 1e-4, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn ratio() {
+        let c = CompressedWeights { weights: vec![], bits: 32, descr: "".into() };
+        assert_eq!(c.ratio_vs_fp32(10), 10.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Magnitude-based weight pruning (Han et al., 2015).
+
+/// Zero out the smallest-magnitude fraction `sparsity` of weights.
+/// Returns the pruned copy and the surviving count.
+pub fn magnitude_prune(weights: &[f32], sparsity: f64) -> (Vec<f32>, usize) {
+    assert!((0.0..1.0).contains(&sparsity) || sparsity == 0.0);
+    let n = weights.len();
+    let keep = n - ((n as f64) * sparsity).round() as usize;
+    if keep == n {
+        return (weights.to_vec(), n);
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = if keep == 0 { f32::INFINITY } else { mags[n - keep] };
+    let mut survivors = 0usize;
+    let out: Vec<f32> = weights
+        .iter()
+        .map(|&w| {
+            if w.abs() >= threshold && survivors < keep {
+                survivors += 1;
+                w
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (out, survivors)
+}
+
+/// Prune by explicit threshold on |w|.
+pub fn threshold_prune(weights: &[f32], threshold: f32) -> (Vec<f32>, usize) {
+    let mut survivors = 0usize;
+    let out: Vec<f32> = weights
+        .iter()
+        .map(|&w| {
+            if w.abs() > threshold {
+                survivors += 1;
+                w
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (out, survivors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    #[test]
+    fn prunes_smallest() {
+        let w = [0.1f32, -5.0, 0.01, 3.0, -0.2, 0.0];
+        let (out, kept) = magnitude_prune(&w, 0.5);
+        assert_eq!(kept, 3);
+        assert_eq!(out[1], -5.0);
+        assert_eq!(out[3], 3.0);
+        assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let w = [1.0f32, 2.0, 3.0];
+        let (out, kept) = magnitude_prune(&w, 0.0);
+        assert_eq!(out, w);
+        assert_eq!(kept, 3);
+    }
+
+    #[test]
+    fn survivor_count_matches_request() {
+        quickprop::check("prune count", 50, |g| {
+            let n = g.usize_in(1, 500);
+            let w = g.vec_f32(n, -1.0, 1.0);
+            let s = g.f64_in(0.0, 0.95);
+            let keep = n - ((n as f64) * s).round() as usize;
+            let (_, kept) = magnitude_prune(&w, s);
+            assert_eq!(kept, keep.min(n));
+        });
+    }
+
+    #[test]
+    fn threshold_variant() {
+        let w = [0.5f32, -0.05, 2.0];
+        let (out, kept) = threshold_prune(&w, 0.1);
+        assert_eq!(kept, 2);
+        assert_eq!(out, vec![0.5, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Baseline experiment driver: train a deterministic / variational net on a
+//! *dense* (no-hashing) config, then push it through each baseline
+//! compressor and measure (size, test error) — the rows Table 1 and the
+//! curves Figure 1 compare MIRACLE against.
+
+use crate::coordinator::{eval_error_full, MiracleCfg, Session};
+use crate::data::Dataset;
+use crate::runtime::ModelArtifacts;
+use crate::util::Result;
+
+use super::bayescomp::{bayes_compress, BayesCompCfg};
+use super::deepcomp::{deep_compress, DeepCompCfg};
+use super::weightless::{weightless_compress, WeightlessCfg};
+use super::{uncompressed, CompressedWeights};
+
+/// A (label, size bits, test error) measurement.
+#[derive(Debug, Clone)]
+pub struct BaselinePoint {
+    pub label: String,
+    pub bits: usize,
+    pub test_error: f64,
+}
+
+/// Trained posterior on the dense config: per-position mean and stddev.
+pub struct DensePosterior {
+    pub mu_full: Vec<f32>,
+    pub sigma_full: Vec<f32>,
+}
+
+/// Train the dense config variationally (mild KL pressure so sigmas are
+/// informative for Bayes-Compression; the means alone are the deterministic
+/// net for Deep Compression).
+pub fn train_dense(
+    arts: &ModelArtifacts,
+    train: &Dataset,
+    steps: usize,
+    lr: f32,
+    data_scale: f32,
+    seed: u64,
+) -> Result<DensePosterior> {
+    let cfg = MiracleCfg {
+        c_loc_bits: 16,         // generous budget: mild KL pressure
+        i0: steps,
+        i_intermediate: 0,
+        lr,
+        beta0: 1e-6,
+        eps_beta: 2e-3,
+        data_scale,
+        layout_seed: seed ^ 0xDE,
+        protocol_seed: 5,
+        train_seed: seed,
+    };
+    let mut session = Session::new(arts, train, &cfg)?;
+    for _ in 0..steps {
+        session.train_step(true)?;
+    }
+    // assemble flat mean / sigma through the (bijective, dense) layout
+    let mu_full = session.layout.assemble(&session.state.mu);
+    let sigma_blocks: Vec<f32> = session.state.rho.iter().map(|r| r.exp()).collect();
+    let sigma_full = session.layout.assemble(&sigma_blocks);
+    Ok(DensePosterior { mu_full, sigma_full })
+}
+
+/// Evaluate one compressed weight-set.
+pub fn measure(
+    arts: &ModelArtifacts,
+    c: &CompressedWeights,
+    test: &Dataset,
+) -> Result<BaselinePoint> {
+    let err = eval_error_full(arts, &c.weights, test)?;
+    Ok(BaselinePoint { label: c.descr.clone(), bits: c.bits, test_error: err })
+}
+
+/// The standard baseline suite at one operating point each.
+pub fn baseline_suite(
+    arts: &ModelArtifacts,
+    post: &DensePosterior,
+    test: &Dataset,
+    deep_cfg: &DeepCompCfg,
+    bayes_cfg: &BayesCompCfg,
+) -> Result<Vec<BaselinePoint>> {
+    let mut out = Vec::new();
+    let un = uncompressed(&post.mu_full, false);
+    out.push(BaselinePoint {
+        label: "Uncompressed (fp32)".into(),
+        bits: un.bits,
+        test_error: eval_error_full(arts, &un.weights, test)?,
+    });
+    let dc = deep_compress(&post.mu_full, deep_cfg)?;
+    out.push(measure(arts, &dc, test)?);
+    let wl = weightless_compress(
+        &post.mu_full,
+        &WeightlessCfg {
+            sparsity: deep_cfg.sparsity,
+            clusters: deep_cfg.clusters,
+            ..Default::default()
+        },
+    )?;
+    out.push(measure(arts, &wl, test)?);
+    let bc = bayes_compress(&post.mu_full, &post.sigma_full, bayes_cfg)?;
+    out.push(measure(arts, &bc, test)?);
+    Ok(out)
+}
+
+/// Sweep Weightless operating points (Figure 1 series).
+pub fn weightless_sweep(
+    arts: &ModelArtifacts,
+    post: &DensePosterior,
+    test: &Dataset,
+    points: &[(f64, usize, u32)], // (sparsity, clusters, tag_bits)
+) -> Result<Vec<BaselinePoint>> {
+    points
+        .iter()
+        .map(|&(sparsity, clusters, tag_bits)| {
+            let c = weightless_compress(
+                &post.mu_full,
+                &WeightlessCfg { sparsity, clusters, tag_bits, ..Default::default() },
+            )?;
+            measure(arts, &c, test)
+        })
+        .collect()
+}
+
+/// Sweep Deep Compression across operating points (Figure 1 series).
+pub fn deepcomp_sweep(
+    arts: &ModelArtifacts,
+    post: &DensePosterior,
+    test: &Dataset,
+    points: &[(f64, usize)], // (sparsity, clusters)
+) -> Result<Vec<BaselinePoint>> {
+    points
+        .iter()
+        .map(|&(sparsity, clusters)| {
+            let c = deep_compress(
+                &post.mu_full,
+                &DeepCompCfg { sparsity, clusters, ..Default::default() },
+            )?;
+            measure(arts, &c, test)
+        })
+        .collect()
+}
+
+/// Sweep Bayes-Compression thresholds (Figure 1 series).
+pub fn bayescomp_sweep(
+    arts: &ModelArtifacts,
+    post: &DensePosterior,
+    test: &Dataset,
+    thresholds: &[f32],
+) -> Result<Vec<BaselinePoint>> {
+    thresholds
+        .iter()
+        .map(|&snr| {
+            let c = bayes_compress(
+                &post.mu_full,
+                &post.sigma_full,
+                &BayesCompCfg { snr_threshold: snr, step_scale: 1.0 },
+            )?;
+            measure(arts, &c, test)
+        })
+        .collect()
+}

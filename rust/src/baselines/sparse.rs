@@ -1,0 +1,188 @@
+//! Sparse index coding for pruned weight vectors (Deep Compression style):
+//! store run lengths between surviving weights, Huffman-coded, with an
+//! escape symbol for runs exceeding the cap (Han et al. use 3-bit/8-bit
+//! relative indexing with zero-padding; the escape plays that role here).
+
+use std::collections::BTreeMap;
+
+use crate::bitstream::huffman::Huffman;
+use crate::bitstream::{BitReader, BitWriter};
+use crate::util::Result;
+
+const RUN_CAP: u32 = 255;
+const ESCAPE: u32 = RUN_CAP + 1;
+
+/// Gap symbols for a 0/1 occupancy pattern (true = nonzero weight kept).
+pub fn gaps(occupancy: &[bool]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut run = 0u32;
+    for &occ in occupancy {
+        if occ {
+            while run > RUN_CAP {
+                out.push(ESCAPE);
+                run -= RUN_CAP;
+            }
+            out.push(run);
+            run = 0;
+        } else {
+            run += 1;
+        }
+    }
+    out
+}
+
+/// Rebuild occupancy from gap symbols (`n` = total length).
+pub fn occupancy_from_gaps(gaps: &[u32], n: usize) -> Vec<bool> {
+    let mut occ = vec![false; n];
+    let mut pos = 0usize;
+    let mut carry = 0usize;
+    for &g in gaps {
+        if g == ESCAPE {
+            carry += RUN_CAP as usize;
+            continue;
+        }
+        pos += carry + g as usize;
+        carry = 0;
+        if pos < n {
+            occ[pos] = true;
+        }
+        pos += 1;
+    }
+    occ
+}
+
+/// Encoded sparse payload with honest size accounting.
+#[derive(Debug)]
+pub struct SparseCoded {
+    pub payload: Vec<u8>,
+    pub payload_bits: usize,
+    pub table_bits: usize,
+    gap_book: Huffman,
+    sym_book: Huffman,
+    n: usize,
+    count: usize,
+}
+
+/// Huffman-code occupancy gaps + per-survivor symbols (cluster indices).
+pub fn encode_sparse(occupancy: &[bool], symbols: &[u32]) -> Result<SparseCoded> {
+    assert_eq!(
+        occupancy.iter().filter(|&&o| o).count(),
+        symbols.len(),
+        "one symbol per surviving weight"
+    );
+    let gap_syms = gaps(occupancy);
+    let mut gf = BTreeMap::new();
+    for &g in &gap_syms {
+        *gf.entry(g).or_insert(0u64) += 1;
+    }
+    let mut sf = BTreeMap::new();
+    for &s in symbols {
+        *sf.entry(s).or_insert(0u64) += 1;
+    }
+    let gap_book = Huffman::from_freqs(&gf)?;
+    let sym_book = Huffman::from_freqs(&sf)?;
+    let mut w = BitWriter::new();
+    for &g in &gap_syms {
+        gap_book.encode_symbol(&mut w, g)?;
+    }
+    for &s in symbols {
+        sym_book.encode_symbol(&mut w, s)?;
+    }
+    let payload_bits = w.bit_len();
+    let table_bits = gap_book.table_bits() + sym_book.table_bits();
+    Ok(SparseCoded {
+        payload: w.finish(),
+        payload_bits,
+        table_bits,
+        gap_book,
+        sym_book,
+        n: occupancy.len(),
+        count: symbols.len(),
+    })
+}
+
+impl SparseCoded {
+    pub fn total_bits(&self) -> usize {
+        self.payload_bits + self.table_bits
+    }
+
+    /// Decode back to (occupancy, symbols).
+    pub fn decode(&self) -> Result<(Vec<bool>, Vec<u32>)> {
+        let mut r = BitReader::new(&self.payload);
+        // number of gap symbols = survivors + escapes; we re-derive by
+        // consuming gaps until `count` non-escape symbols were read.
+        let mut gap_syms = Vec::new();
+        let mut real = 0usize;
+        while real < self.count {
+            let g = self.gap_book.decode_symbol(&mut r)?;
+            if g != ESCAPE {
+                real += 1;
+            }
+            gap_syms.push(g);
+        }
+        let occ = occupancy_from_gaps(&gap_syms, self.n);
+        let mut syms = Vec::with_capacity(self.count);
+        for _ in 0..self.count {
+            syms.push(self.sym_book.decode_symbol(&mut r)?);
+        }
+        Ok((occ, syms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    #[test]
+    fn gaps_round_trip_basic() {
+        let occ = [false, true, false, false, true, true, false];
+        let g = gaps(&occ);
+        assert_eq!(g, vec![1, 2, 0]);
+        assert_eq!(occupancy_from_gaps(&g, 7), occ.to_vec());
+    }
+
+    #[test]
+    fn long_runs_use_escape() {
+        let mut occ = vec![false; 600];
+        occ[599] = true;
+        let g = gaps(&occ);
+        assert!(g.contains(&ESCAPE));
+        assert_eq!(occupancy_from_gaps(&g, 600), occ);
+    }
+
+    #[test]
+    fn sparse_encode_decode_prop() {
+        quickprop::check("sparse round trip", 40, |gen| {
+            let n = gen.usize_in(1, 800);
+            let occ: Vec<bool> = (0..n).map(|_| gen.f64_in(0.0, 1.0) < 0.15).collect();
+            let count = occ.iter().filter(|&&o| o).count();
+            if count == 0 {
+                return;
+            }
+            let syms: Vec<u32> =
+                (0..count).map(|_| gen.usize_in(0, 15) as u32).collect();
+            let coded = encode_sparse(&occ, &syms).unwrap();
+            let (occ2, syms2) = coded.decode().unwrap();
+            assert_eq!(occ, occ2);
+            assert_eq!(syms, syms2);
+        });
+    }
+
+    #[test]
+    fn sparse_beats_dense_for_high_sparsity() {
+        let n = 4000;
+        let mut occ = vec![false; n];
+        for i in (0..n).step_by(40) {
+            occ[i] = true; // 2.5% density
+        }
+        let count = occ.iter().filter(|&&o| o).count();
+        let syms = vec![3u32; count];
+        let coded = encode_sparse(&occ, &syms).unwrap();
+        assert!(
+            coded.total_bits() < n, // << 1 bit per original weight
+            "{} bits for {n} weights",
+            coded.total_bits()
+        );
+    }
+}

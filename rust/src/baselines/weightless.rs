@@ -1,0 +1,159 @@
+//! Weightless-style lossy weight encoding (Reagen et al., 2018):
+//! magnitude-prune, k-means quantize the survivors, then store the sparse
+//! (index -> cluster) map in a Bloomier filter. Querying a pruned index
+//! passes the tag check with probability 2^-t and injects a junk weight —
+//! the lossy part the original paper shows networks tolerate.
+
+use super::bloomier::Bloomier;
+use super::kmeans::kmeans_1d;
+use super::prune::magnitude_prune;
+use super::CompressedWeights;
+use crate::util::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WeightlessCfg {
+    /// fraction pruned before encoding
+    pub sparsity: f64,
+    /// k-means clusters for the survivors (value_bits = ceil(log2(k)))
+    pub clusters: usize,
+    /// tag bits: false-positive rate 2^-t
+    pub tag_bits: u32,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for WeightlessCfg {
+    fn default() -> WeightlessCfg {
+        WeightlessCfg {
+            sparsity: 0.9,
+            clusters: 16,
+            tag_bits: 6,
+            kmeans_iters: 25,
+            seed: 0,
+        }
+    }
+}
+
+/// Run the Weightless pipeline. The decoded weight-set includes the false
+/// positives, i.e. it is the *lossy* reconstruction a reader of the filter
+/// would see.
+pub fn weightless_compress(
+    weights: &[f32],
+    cfg: &WeightlessCfg,
+) -> Result<CompressedWeights> {
+    let (pruned, _) = magnitude_prune(weights, cfg.sparsity);
+    let (centroids, assign) =
+        kmeans_1d(&pruned, cfg.clusters, cfg.kmeans_iters, cfg.seed);
+    let value_bits = (usize::BITS - (centroids.len().max(2) - 1).leading_zeros()).max(1);
+    let pairs: Vec<(u64, u32)> = assign
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| a != u32::MAX)
+        .map(|(i, &a)| (i as u64, a))
+        .collect();
+    if pairs.is_empty() {
+        return Ok(CompressedWeights {
+            weights: vec![0.0; weights.len()],
+            bits: 64,
+            descr: "weightless (all pruned)".into(),
+        });
+    }
+    let filter = Bloomier::build(&pairs, value_bits, cfg.tag_bits)?;
+    // decode through the filter: stored keys exact, non-keys junk at 2^-t
+    let decoded: Vec<f32> = (0..weights.len())
+        .map(|i| match filter.query(i as u64) {
+            Some(v) if (v as usize) < centroids.len() => centroids[v as usize],
+            Some(_) => 0.0, // junk value outside the codebook
+            None => 0.0,
+        })
+        .collect();
+    let header_bits = 64 + 64; // seed + counts
+    let centroid_bits = centroids.len() * 32;
+    Ok(CompressedWeights {
+        weights: decoded,
+        bits: filter.bits() + centroid_bits + header_bits,
+        descr: format!(
+            "weightless sparsity={:.2} clusters={} t={}",
+            cfg.sparsity,
+            centroids.len(),
+            cfg.tag_bits
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn toy_weights(n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::seed(17);
+        (0..n)
+            .map(|_| {
+                let v = rng.next_normal() as f32;
+                if rng.next_f64() < 0.1 {
+                    v * 2.0
+                } else {
+                    v * 0.03
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn surviving_weights_reconstructed() {
+        let w = toy_weights(3000);
+        let c = weightless_compress(&w, &WeightlessCfg::default()).unwrap();
+        // large weights survive pruning and must be near their cluster
+        for (x, y) in w.iter().zip(&c.weights) {
+            if x.abs() > 1.5 {
+                assert!((x - y).abs() < 0.6, "{x} -> {y}");
+            }
+        }
+        assert!(c.ratio_vs_fp32(w.len()) > 8.0, "{}", c.ratio_vs_fp32(w.len()));
+    }
+
+    #[test]
+    fn false_positive_noise_rate_bounded() {
+        let w = toy_weights(5000);
+        let cfg = WeightlessCfg { tag_bits: 8, ..Default::default() };
+        let c = weightless_compress(&w, &cfg).unwrap();
+        let (pruned, _) = magnitude_prune(&w, cfg.sparsity);
+        let mut junk = 0usize;
+        let mut pruned_count = 0usize;
+        for i in 0..w.len() {
+            if pruned[i] == 0.0 {
+                pruned_count += 1;
+                if c.weights[i] != 0.0 {
+                    junk += 1;
+                }
+            }
+        }
+        let rate = junk as f64 / pruned_count as f64;
+        assert!(rate < 2f64.powi(-8) * 2.0 + 0.002, "fp rate {rate}");
+    }
+
+    #[test]
+    fn fewer_tag_bits_smaller_but_noisier() {
+        let w = toy_weights(4000);
+        let small = weightless_compress(
+            &w,
+            &WeightlessCfg { tag_bits: 2, ..Default::default() },
+        )
+        .unwrap();
+        let big = weightless_compress(
+            &w,
+            &WeightlessCfg { tag_bits: 10, ..Default::default() },
+        )
+        .unwrap();
+        assert!(small.bits < big.bits);
+        let noise = |c: &CompressedWeights| {
+            c.weights
+                .iter()
+                .zip(&w)
+                .filter(|(&y, &x)| x.abs() < 0.1 && y != 0.0)
+                .count()
+        };
+        assert!(noise(&small) > noise(&big));
+    }
+}

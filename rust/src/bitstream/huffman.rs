@@ -1,0 +1,270 @@
+//! Canonical Huffman coding over u32 symbols.
+//!
+//! Substrate for the Deep-Compression baseline (Han et al., 2016): cluster
+//! indices and sparse run lengths are Huffman coded. Builds code lengths with
+//! the standard two-queue method over a sorted histogram, converts to
+//! canonical form so only the length table needs to be stored.
+
+use std::collections::BTreeMap;
+
+use super::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+
+/// Huffman code book: symbol -> (code bits, length).
+#[derive(Debug, Clone)]
+pub struct Huffman {
+    /// canonical code per symbol, ordered map for determinism
+    codes: BTreeMap<u32, (u64, u32)>,
+    /// decode table: (length, first code value at that length, symbols)
+    decode: Vec<(u32, u64, Vec<u32>)>,
+}
+
+impl Huffman {
+    /// Build from symbol frequencies (zero-frequency symbols are excluded).
+    pub fn from_freqs(freqs: &BTreeMap<u32, u64>) -> Result<Huffman> {
+        let mut items: Vec<(u32, u64)> = freqs
+            .iter()
+            .filter(|(_, &f)| f > 0)
+            .map(|(&s, &f)| (s, f))
+            .collect();
+        if items.is_empty() {
+            return Err(Error::msg("huffman: empty alphabet"));
+        }
+        if items.len() == 1 {
+            // degenerate: one symbol, one bit
+            let mut codes = BTreeMap::new();
+            codes.insert(items[0].0, (0u64, 1u32));
+            return Ok(Huffman {
+                decode: vec![(1, 0, vec![items[0].0])],
+                codes,
+            });
+        }
+        // two-queue method over sorted leaves
+        items.sort_by_key(|&(s, f)| (f, s));
+        #[derive(Debug)]
+        enum Node {
+            Leaf(u32),
+            Internal(usize, usize),
+        }
+        let mut nodes: Vec<(u64, Node)> = Vec::with_capacity(items.len() * 2);
+        let mut leaves: std::collections::VecDeque<usize> = Default::default();
+        for &(s, f) in &items {
+            nodes.push((f, Node::Leaf(s)));
+            leaves.push_back(nodes.len() - 1);
+        }
+        let mut internal: std::collections::VecDeque<usize> = Default::default();
+        let pop_min = |nodes: &Vec<(u64, Node)>,
+                       a: &mut std::collections::VecDeque<usize>,
+                       b: &mut std::collections::VecDeque<usize>|
+         -> usize {
+            match (a.front(), b.front()) {
+                (Some(&x), Some(&y)) => {
+                    if nodes[x].0 <= nodes[y].0 {
+                        a.pop_front().unwrap()
+                    } else {
+                        b.pop_front().unwrap()
+                    }
+                }
+                (Some(_), None) => a.pop_front().unwrap(),
+                (None, Some(_)) => b.pop_front().unwrap(),
+                (None, None) => unreachable!(),
+            }
+        };
+        while leaves.len() + internal.len() > 1 {
+            let x = pop_min(&nodes, &mut leaves, &mut internal);
+            let y = pop_min(&nodes, &mut leaves, &mut internal);
+            nodes.push((nodes[x].0 + nodes[y].0, Node::Internal(x, y)));
+            internal.push_back(nodes.len() - 1);
+        }
+        // depth-first to get code lengths
+        let root = internal.pop_front().unwrap();
+        let mut lengths: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut stack = vec![(root, 0u32)];
+        while let Some((idx, depth)) = stack.pop() {
+            match &nodes[idx].1 {
+                Node::Leaf(s) => {
+                    lengths.insert(*s, depth.max(1));
+                }
+                Node::Internal(a, b) => {
+                    stack.push((*a, depth + 1));
+                    stack.push((*b, depth + 1));
+                }
+            }
+        }
+        Ok(Huffman::from_lengths(&lengths))
+    }
+
+    /// Canonical codes from a length table.
+    pub fn from_lengths(lengths: &BTreeMap<u32, u32>) -> Huffman {
+        // sort by (length, symbol)
+        let mut syms: Vec<(u32, u32)> =
+            lengths.iter().map(|(&s, &l)| (l, s)).collect();
+        syms.sort();
+        let mut codes = BTreeMap::new();
+        let mut decode: Vec<(u32, u64, Vec<u32>)> = Vec::new();
+        let mut code = 0u64;
+        let mut prev_len = 0u32;
+        for &(len, sym) in &syms {
+            code <<= len - prev_len;
+            prev_len = len;
+            codes.insert(sym, (code, len));
+            match decode.last_mut() {
+                Some((l, _, group)) if *l == len => group.push(sym),
+                _ => decode.push((len, code, vec![sym])),
+            }
+            code += 1;
+        }
+        Huffman { codes, decode }
+    }
+
+    pub fn lengths(&self) -> BTreeMap<u32, u32> {
+        self.codes.iter().map(|(&s, &(_, l))| (s, l)).collect()
+    }
+
+    pub fn encode_symbol(&self, w: &mut BitWriter, sym: u32) -> Result<()> {
+        let &(code, len) = self
+            .codes
+            .get(&sym)
+            .ok_or_else(|| Error::msg(format!("huffman: unknown symbol {sym}")))?;
+        w.write_bits(code, len);
+        Ok(())
+    }
+
+    pub fn decode_symbol(&self, r: &mut BitReader) -> Result<u32> {
+        let mut code = 0u64;
+        let mut len = 0u32;
+        for &(l, first, ref group) in &self.decode {
+            code = (code << (l - len)) | r.read_bits(l - len)?;
+            len = l;
+            if code >= first && ((code - first) as usize) < group.len() {
+                return Ok(group[(code - first) as usize]);
+            }
+        }
+        Err(Error::msg("huffman: invalid code"))
+    }
+
+    /// Encoded size in bits for a symbol stream, given this book.
+    pub fn encoded_bits(&self, syms: &[u32]) -> Result<usize> {
+        let mut total = 0usize;
+        for &s in syms {
+            let &(_, l) = self
+                .codes
+                .get(&s)
+                .ok_or_else(|| Error::msg(format!("huffman: unknown symbol {s}")))?;
+            total += l as usize;
+        }
+        Ok(total)
+    }
+
+    /// Bits to store the code book itself (canonical: one length per symbol,
+    /// symbol ids varint-coded). Used for honest size accounting.
+    pub fn table_bits(&self) -> usize {
+        let mut w = BitWriter::new();
+        w.write_varint(self.codes.len() as u64);
+        for (&s, &(_, l)) in &self.codes {
+            w.write_varint(s as u64);
+            w.write_varint(l as u64);
+        }
+        w.bit_len()
+    }
+}
+
+/// Convenience: build + encode a full stream; returns (book, payload bits).
+pub fn encode_stream(syms: &[u32]) -> Result<(Huffman, Vec<u8>, usize)> {
+    let mut freqs = BTreeMap::new();
+    for &s in syms {
+        *freqs.entry(s).or_insert(0u64) += 1;
+    }
+    let book = Huffman::from_freqs(&freqs)?;
+    let mut w = BitWriter::new();
+    for &s in syms {
+        book.encode_symbol(&mut w, s)?;
+    }
+    let bits = w.bit_len();
+    Ok((book, w.finish(), bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    fn round_trip(syms: &[u32]) {
+        let (book, bytes, bits) = encode_stream(syms).unwrap();
+        let mut r = BitReader::new(&bytes);
+        for &s in syms {
+            assert_eq!(book.decode_symbol(&mut r).unwrap(), s);
+        }
+        assert_eq!(r.bit_pos(), bits);
+    }
+
+    #[test]
+    fn skewed_distribution() {
+        let mut syms = vec![0u32; 1000];
+        syms.extend(vec![1u32; 100]);
+        syms.extend(vec![2u32; 10]);
+        syms.push(3);
+        round_trip(&syms);
+        let (book, _, bits) = encode_stream(&syms).unwrap();
+        // frequent symbol must get a short code
+        assert_eq!(book.codes[&0].1, 1);
+        // compression beats fixed 2-bit coding
+        assert!(bits < syms.len() * 2);
+    }
+
+    #[test]
+    fn single_symbol() {
+        round_trip(&[7u32; 50]);
+    }
+
+    #[test]
+    fn near_entropy() {
+        // geometric-ish distribution; huffman within 1 bit/sym of entropy
+        let mut syms = Vec::new();
+        let freqs = [512usize, 256, 128, 64, 32, 16, 8, 4, 2, 1];
+        for (s, &f) in freqs.iter().enumerate() {
+            syms.extend(std::iter::repeat(s as u32).take(f));
+        }
+        let n: usize = syms.len();
+        let entropy: f64 = freqs
+            .iter()
+            .map(|&f| {
+                let p = f as f64 / n as f64;
+                -p * p.log2()
+            })
+            .sum();
+        let (_, _, bits) = encode_stream(&syms).unwrap();
+        let rate = bits as f64 / n as f64;
+        assert!(rate >= entropy - 1e-9, "rate {rate} entropy {entropy}");
+        assert!(rate <= entropy + 1.0, "rate {rate} entropy {entropy}");
+    }
+
+    #[test]
+    fn random_streams_round_trip() {
+        quickprop::check("huffman round trip", 30, |g| {
+            let n_sym = g.usize_in(1, 40);
+            let len = g.usize_in(1, 400);
+            let syms: Vec<u32> =
+                (0..len).map(|_| g.usize_in(0, n_sym - 1) as u32).collect();
+            round_trip(&syms);
+        });
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        quickprop::check("kraft", 20, |g| {
+            let n_sym = g.usize_in(2, 64);
+            let mut freqs = BTreeMap::new();
+            for s in 0..n_sym {
+                freqs.insert(s as u32, g.usize_in(1, 1000) as u64);
+            }
+            let book = Huffman::from_freqs(&freqs).unwrap();
+            let kraft: f64 = book
+                .lengths()
+                .values()
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+        });
+    }
+}

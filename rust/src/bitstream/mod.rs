@@ -1,0 +1,317 @@
+//! Bit-level I/O and integer codes.
+//!
+//! The `.mrc` container writes each transmitted index `k*` with a fixed
+//! `C_loc`-bit width (Algorithm 1's code), the theory bench uses the
+//! Vitányi–Li prefix-free code for unbounded indices (Appendix A, Eq. 15),
+//! and the Deep-Compression baseline uses the canonical Huffman coder in
+//! [`huffman`].
+
+pub mod huffman;
+
+use crate::util::{Error, Result};
+
+/// MSB-first bit writer with a 64-bit accumulator (bytes are flushed in
+/// bulk — the hot path for index payloads and Huffman streams).
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// pending bits, left-aligned within the low `fill` positions
+    acc: u64,
+    /// number of valid bits in `acc` (0..=63)
+    fill: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write the low `width` bits of `v`, MSB first. `width <= 64`.
+    pub fn write_bits(&mut self, v: u64, width: u32) {
+        assert!(width <= 64);
+        if width == 0 {
+            return;
+        }
+        let v = if width == 64 { v } else { v & ((1u64 << width) - 1) };
+        if self.fill + width <= 64 {
+            self.acc = if width == 64 { v } else { (self.acc << width) | v };
+            self.fill += width;
+        } else {
+            let hi = self.fill + width - 64; // bits that don't fit
+            self.acc = (self.acc << (width - hi)) | (v >> hi);
+            self.fill = 64;
+            self.flush_full();
+            self.acc = v & ((1u64 << hi) - 1);
+            self.fill = hi;
+        }
+        while self.fill >= 8 {
+            self.flush_byte();
+        }
+    }
+
+    fn flush_byte(&mut self) {
+        let b = (self.acc >> (self.fill - 8)) as u8;
+        self.buf.push(b);
+        self.fill -= 8;
+        if self.fill < 64 {
+            self.acc &= (1u64 << self.fill).wrapping_sub(1);
+        }
+    }
+
+    fn flush_full(&mut self) {
+        debug_assert_eq!(self.fill, 64);
+        self.buf.extend_from_slice(&self.acc.to_be_bytes());
+        self.fill = 0;
+        self.acc = 0;
+    }
+
+    /// Unary: n zeros then a one.
+    pub fn write_unary(&mut self, n: u64) {
+        for _ in 0..n {
+            self.write_bit(false);
+        }
+        self.write_bit(true);
+    }
+
+    /// Elias gamma code for n >= 1.
+    pub fn write_elias_gamma(&mut self, n: u64) {
+        assert!(n >= 1);
+        let nbits = 64 - n.leading_zeros();
+        self.write_unary((nbits - 1) as u64);
+        if nbits > 1 {
+            self.write_bits(n & ((1 << (nbits - 1)) - 1), nbits - 1);
+        }
+    }
+
+    /// Vitányi–Li style prefix-free code for n >= 0:
+    /// Elias-gamma(len+1) then the binary digits of n without the implied
+    /// leading structure; length is log n + 2 log log n + O(1).
+    pub fn write_vitanyi_li(&mut self, n: u64) {
+        let m = n + 1; // shift to >= 1
+        let nbits = 64 - m.leading_zeros();
+        self.write_elias_gamma(nbits as u64);
+        if nbits > 1 {
+            self.write_bits(m & ((1 << (nbits - 1)) - 1), nbits - 1);
+        }
+    }
+
+    /// LEB128-ish byte varint (for headers, byte-aligned use only).
+    pub fn write_varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.write_bits(b as u64, 8);
+                return;
+            }
+            self.write_bits((b | 0x80) as u64, 8);
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.fill as usize
+    }
+
+    /// Pad to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.fill > 0 {
+            let b = (self.acc << (8 - self.fill)) as u8;
+            self.buf.push(b);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool> {
+        let byte = self.pos / 8;
+        if byte >= self.buf.len() {
+            return Err(Error::msg("bitstream exhausted"));
+        }
+        let bit = (self.buf[byte] >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Ok(bit)
+    }
+
+    pub fn read_bits(&mut self, width: u32) -> Result<u64> {
+        let mut v = 0u64;
+        for _ in 0..width {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Ok(v)
+    }
+
+    pub fn read_unary(&mut self) -> Result<u64> {
+        let mut n = 0;
+        while !self.read_bit()? {
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    pub fn read_elias_gamma(&mut self) -> Result<u64> {
+        let extra = self.read_unary()?;
+        let rest = self.read_bits(extra as u32)?;
+        Ok((1 << extra) | rest)
+    }
+
+    pub fn read_vitanyi_li(&mut self) -> Result<u64> {
+        let nbits = self.read_elias_gamma()?;
+        if nbits == 0 || nbits > 64 {
+            return Err(Error::msg(format!("bad VL length {nbits}")));
+        }
+        let rest = self.read_bits((nbits - 1) as u32)?;
+        Ok(((1u64 << (nbits - 1)) | rest) - 1)
+    }
+
+    pub fn read_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let b = self.read_bits(8)? as u8;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift >= 64 {
+                return Err(Error::msg("varint too long"));
+            }
+        }
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Code length (bits) of the Vitányi–Li code for n — used to *account* for
+/// message lengths without materializing them.
+pub fn vitanyi_li_len(n: u64) -> usize {
+    let m = n + 1;
+    let nbits = 64 - m.leading_zeros();
+    let g = nbits as u64;
+    let gbits = 64 - g.leading_zeros();
+    // gamma(g): (gbits-1) zeros + gbits digits; then nbits-1 payload digits
+    (2 * gbits - 1) as usize + (nbits - 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    #[test]
+    fn bits_round_trip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1011, 4);
+        w.write_bits(0xdeadbeef, 32);
+        w.write_bits(1, 1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.read_bits(32).unwrap(), 0xdeadbeef);
+        assert_eq!(r.read_bits(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn gamma_round_trip_small() {
+        let mut w = BitWriter::new();
+        for n in 1..100u64 {
+            w.write_elias_gamma(n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for n in 1..100u64 {
+            assert_eq!(r.read_elias_gamma().unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn vitanyi_li_round_trip_prop() {
+        quickprop::check("VL round trip", 200, |g| {
+            let ns: Vec<u64> = (0..20)
+                .map(|_| {
+                    let shift = g.usize_in(0, 50);
+                    g.rng.next_u64() >> shift
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &n in &ns {
+                w.write_vitanyi_li(n);
+            }
+            let expected_bits = w.bit_len();
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &n in &ns {
+                assert_eq!(r.read_vitanyi_li().unwrap(), n);
+            }
+            assert_eq!(
+                expected_bits,
+                ns.iter().map(|&n| vitanyi_li_len(n)).sum::<usize>()
+            );
+        });
+    }
+
+    #[test]
+    fn vl_len_is_log_plus_loglog() {
+        // |l(n)| = log n + 2 log log n + O(1)  (Vitányi & Li)
+        for &n in &[10u64, 1000, 1 << 20, 1 << 40] {
+            let len = vitanyi_li_len(n) as f64;
+            let log = (n as f64).log2();
+            let loglog = log.max(1.0).log2();
+            assert!(
+                len <= log + 2.0 * loglog + 4.0,
+                "n={n} len={len} bound={}",
+                log + 2.0 * loglog + 4.0
+            );
+        }
+    }
+
+    #[test]
+    fn varint_round_trip() {
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.write_varint(v);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.read_varint().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn exhaustion_is_error() {
+        let bytes = [0xffu8];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bits(8).is_ok());
+        assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(0, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.write_bits(0, 13);
+        assert_eq!(w.bit_len(), 16);
+    }
+}

@@ -1,0 +1,283 @@
+//! `.mrc` compressed-model container.
+//!
+//! A MIRACLE-compressed model is fully determined by (Algorithm 1's decode
+//! step): the model config name (which pins the AOT graphs = the shared
+//! candidate generator), the layout seed (hashing trick + block permutation),
+//! the protocol seed (jax PRNG base key), the per-layer encoding stddevs
+//! σ_p, the local budget `C_loc` in bits, and one `C_loc`-bit index per
+//! block. Everything else is replayed deterministically.
+//!
+//! Layout (byte-aligned header, then a packed bit payload):
+//!
+//! ```text
+//! magic "MRC1"
+//! varint  name_len, name bytes
+//! u64     layout_seed
+//! u32     protocol_seed (i32 jax seed)
+//! varint  B, S, k_chunk
+//! u8      c_loc_bits
+//! varint  n_layers, then n_layers * f32 (log sigma_p)
+//! payload: B indices, c_loc_bits each (MSB first)
+//! ```
+
+use crate::bitstream::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+use crate::{ensure, err};
+
+pub const MAGIC: &[u8; 4] = b"MRC1";
+
+/// In-memory form of a compressed model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MrcFile {
+    pub model: String,
+    pub layout_seed: u64,
+    pub protocol_seed: i32,
+    pub b: usize,
+    pub s: usize,
+    pub k_chunk: usize,
+    pub c_loc_bits: u8,
+    /// per-layer log sigma_p (frozen at encode time)
+    pub lsp: Vec<f32>,
+    /// transmitted sample index k* per block
+    pub indices: Vec<u64>,
+}
+
+impl MrcFile {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for &b in MAGIC {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_varint(self.model.len() as u64);
+        for &b in self.model.as_bytes() {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_bits(self.layout_seed, 64);
+        w.write_bits(self.protocol_seed as u32 as u64, 32);
+        w.write_varint(self.b as u64);
+        w.write_varint(self.s as u64);
+        w.write_varint(self.k_chunk as u64);
+        w.write_bits(self.c_loc_bits as u64, 8);
+        w.write_varint(self.lsp.len() as u64);
+        for &v in &self.lsp {
+            w.write_bits(v.to_bits() as u64, 32);
+        }
+        for &idx in &self.indices {
+            w.write_bits(idx, self.c_loc_bits as u32);
+        }
+        w.finish()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<MrcFile> {
+        let mut r = BitReader::new(bytes);
+        let mut magic = [0u8; 4];
+        for m in magic.iter_mut() {
+            *m = r.read_bits(8)? as u8;
+        }
+        ensure!(&magic == MAGIC, "not an MRC file (magic {magic:?})");
+        let name_len = r.read_varint()? as usize;
+        ensure!(name_len < 4096, "unreasonable name length {name_len}");
+        let mut name = Vec::with_capacity(name_len);
+        for _ in 0..name_len {
+            name.push(r.read_bits(8)? as u8);
+        }
+        let model = String::from_utf8(name)
+            .map_err(|_| Error::msg("bad model name encoding"))?;
+        let layout_seed = r.read_bits(64)?;
+        let protocol_seed = r.read_bits(32)? as u32 as i32;
+        let b = r.read_varint()? as usize;
+        let s = r.read_varint()? as usize;
+        let k_chunk = r.read_varint()? as usize;
+        let c_loc_bits = r.read_bits(8)? as u8;
+        ensure!(
+            (1..=63).contains(&c_loc_bits),
+            "bad c_loc_bits {c_loc_bits}"
+        );
+        let n_layers = r.read_varint()? as usize;
+        ensure!(n_layers < 1024, "unreasonable layer count {n_layers}");
+        let mut lsp = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            lsp.push(f32::from_bits(r.read_bits(32)? as u32));
+        }
+        let mut indices = Vec::with_capacity(b);
+        for _ in 0..b {
+            indices.push(r.read_bits(c_loc_bits as u32)?);
+        }
+        Ok(MrcFile {
+            model,
+            layout_seed,
+            protocol_seed,
+            b,
+            s,
+            k_chunk,
+            c_loc_bits,
+            lsp,
+            indices,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<MrcFile> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
+        MrcFile::from_bytes(&bytes)
+    }
+
+    /// Total size in bits (header + payload) — the number Table 1 reports.
+    pub fn total_bits(&self) -> usize {
+        self.to_bytes().len() * 8
+    }
+
+    /// Payload-only size (B * C_loc bits) — the information-theoretic part.
+    pub fn payload_bits(&self) -> usize {
+        self.b * self.c_loc_bits as usize
+    }
+
+    /// Sanity checks against runtime metadata.
+    pub fn validate(&self, meta: &crate::runtime::ModelMeta) -> Result<()> {
+        ensure!(self.model == meta.name, "model mismatch: {} vs {}", self.model, meta.name);
+        ensure!(self.b == meta.b && self.s == meta.s, "block geometry mismatch");
+        ensure!(self.k_chunk == meta.k_chunk, "k_chunk mismatch");
+        ensure!(self.lsp.len() == meta.n_layers, "layer count mismatch");
+        ensure!(self.indices.len() == self.b, "index count mismatch");
+        let k = 1u64 << self.c_loc_bits;
+        for (i, &idx) in self.indices.iter().enumerate() {
+            if idx >= k {
+                return err!("block {i}: index {idx} out of range K={k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    fn sample() -> MrcFile {
+        MrcFile {
+            model: "tiny_mlp".into(),
+            layout_seed: 0xDEAD_BEEF_CAFE_F00D,
+            protocol_seed: -7,
+            b: 22,
+            s: 8,
+            k_chunk: 64,
+            c_loc_bits: 12,
+            lsp: vec![-1.5, -2.25],
+            indices: (0..22).map(|i| (i * 37) % 4096).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let m = sample();
+        let m2 = MrcFile::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(MrcFile::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = sample();
+        assert_eq!(m.payload_bits(), 22 * 12);
+        assert!(m.total_bits() > m.payload_bits());
+        // header overhead is small
+        assert!(m.total_bits() < m.payload_bits() + 400);
+    }
+
+    #[test]
+    fn random_round_trips() {
+        quickprop::check("mrc round trip", 40, |g| {
+            let b = g.usize_in(1, 200);
+            let bits = g.usize_in(1, 24) as u8;
+            let m = MrcFile {
+                model: "m".into(),
+                layout_seed: g.rng.next_u64(),
+                protocol_seed: g.rng.next_u32() as i32,
+                b,
+                s: g.usize_in(1, 64),
+                k_chunk: 1 << g.usize_in(0, 12),
+                c_loc_bits: bits,
+                lsp: (0..g.usize_in(1, 5)).map(|_| g.f32_in(-5.0, 1.0)).collect(),
+                indices: (0..b)
+                    .map(|_| g.rng.next_u64() & ((1u64 << bits) - 1))
+                    .collect(),
+            };
+            let m2 = MrcFile::from_bytes(&m.to_bytes()).unwrap();
+            assert_eq!(m, m2);
+        });
+    }
+
+    #[test]
+    fn truncated_fails() {
+        let bytes = sample().to_bytes();
+        assert!(MrcFile::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    fn meta_for(m: &MrcFile) -> crate::runtime::ModelMeta {
+        crate::runtime::ModelMeta {
+            name: m.model.clone(),
+            b: m.b,
+            s: m.s,
+            k_chunk: m.k_chunk,
+            n_total: 172,
+            n_slots: 172,
+            n_layers: m.lsp.len(),
+            layer_slots: vec![136, 36],
+            layer_counts: vec![136, 36],
+            batch: 32,
+            eval_batch: 64,
+            classes: 4,
+            input_shape: vec![16],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_matching_meta() {
+        let m = sample();
+        m.validate(&meta_for(&m)).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_wrong_model() {
+        let m = sample();
+        let mut meta = meta_for(&m);
+        meta.name = "other".into();
+        assert!(m.validate(&meta).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_geometry_mismatch() {
+        let m = sample();
+        let mut meta = meta_for(&m);
+        meta.s += 1;
+        assert!(m.validate(&meta).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_index() {
+        let mut m = sample();
+        m.indices[3] = 1 << m.c_loc_bits; // == K, out of range
+        assert!(m.validate(&meta_for(&m)).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_layer_count_mismatch() {
+        let m = sample();
+        let mut meta = meta_for(&m);
+        meta.n_layers = 5;
+        assert!(m.validate(&meta).is_err());
+    }
+}

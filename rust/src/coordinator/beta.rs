@@ -1,0 +1,127 @@
+//! Per-block β annealing controller (Algorithm 2, lines 19–25).
+//!
+//! Every variational update, each not-yet-coded block whose KL exceeds the
+//! local coding goal `C_loc` gets its penalty multiplied by `(1 + ε_β)`, and
+//! divided by the same factor otherwise. The controller is the paper's
+//! "explicit control over the compression rate": β_b converges to the value
+//! that pins `KL_b ≈ C_loc`.
+
+/// β state for all blocks.
+#[derive(Debug, Clone)]
+pub struct BetaController {
+    pub beta: Vec<f32>,
+    pub c_loc_nats: f64,
+    pub eps_beta: f32,
+    /// clamp range keeps β finite under long runs
+    pub min_beta: f32,
+    pub max_beta: f32,
+}
+
+impl BetaController {
+    pub fn new(b: usize, beta0: f32, eps_beta: f32, c_loc_bits: u8) -> BetaController {
+        BetaController {
+            beta: vec![beta0; b],
+            c_loc_nats: c_loc_bits as f64 * std::f64::consts::LN_2,
+            eps_beta,
+            min_beta: 1e-12,
+            max_beta: 1e4,
+        }
+    }
+
+    /// One annealing sweep given per-block KL (nats) and the frozen mask.
+    pub fn update(&mut self, kl_nats: &[f32], frozen_mask: &[f32]) {
+        debug_assert_eq!(kl_nats.len(), self.beta.len());
+        let up = 1.0 + self.eps_beta;
+        for ((beta, &kl), &fm) in self
+            .beta
+            .iter_mut()
+            .zip(kl_nats)
+            .zip(frozen_mask)
+        {
+            if fm > 0.0 {
+                continue; // coded blocks keep their last β (unused anyway)
+            }
+            if (kl as f64) > self.c_loc_nats {
+                *beta = (*beta * up).min(self.max_beta);
+            } else {
+                *beta = (*beta / up).max(self.min_beta);
+            }
+        }
+    }
+
+    /// Fraction of unfrozen blocks currently within the coding goal.
+    pub fn within_goal(&self, kl_nats: &[f32], frozen_mask: &[f32]) -> f64 {
+        let mut total = 0usize;
+        let mut ok = 0usize;
+        for (&kl, &fm) in kl_nats.iter().zip(frozen_mask) {
+            if fm > 0.0 {
+                continue;
+            }
+            total += 1;
+            if (kl as f64) <= self.c_loc_nats {
+                ok += 1;
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            ok as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anneals_up_when_over_budget() {
+        let mut c = BetaController::new(3, 1e-8, 5e-5, 10);
+        let kl = [100.0f32, 0.1, 100.0];
+        let fm = [0.0f32, 0.0, 1.0];
+        let before = c.beta.clone();
+        c.update(&kl, &fm);
+        assert!(c.beta[0] > before[0]); // over budget -> up
+        assert!(c.beta[1] < before[1]); // under budget -> down
+        assert_eq!(c.beta[2], before[2]); // frozen -> untouched
+    }
+
+    #[test]
+    fn converges_to_equilibrium_in_simulation() {
+        // toy dynamics: KL responds to beta as kl = a / (1 + c*beta); the
+        // controller should drive kl toward c_loc
+        let mut c = BetaController::new(1, 1e-8, 5e-3, 8);
+        let target = c.c_loc_nats;
+        let mut kl = 50.0f64;
+        for _ in 0..200_000 {
+            kl = 50.0 / (1.0 + 2000.0 * c.beta[0] as f64);
+            c.update(&[kl as f32], &[0.0]);
+        }
+        assert!(
+            (kl - target).abs() / target < 0.2,
+            "kl {kl} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn clamps() {
+        let mut c = BetaController::new(1, 1e-8, 5e-1, 4);
+        for _ in 0..2000 {
+            c.update(&[1e9], &[0.0]);
+        }
+        assert!(c.beta[0] <= c.max_beta);
+        for _ in 0..5000 {
+            c.update(&[0.0], &[0.0]);
+        }
+        assert!(c.beta[0] >= c.min_beta);
+    }
+
+    #[test]
+    fn within_goal_counts() {
+        let c = BetaController::new(4, 1e-8, 5e-5, 10);
+        let nats = c.c_loc_nats as f32;
+        let kl = [nats * 0.5, nats * 2.0, nats * 0.9, nats * 3.0];
+        let fm = [0.0f32, 0.0, 0.0, 1.0];
+        assert!((c.within_goal(&kl, &fm) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

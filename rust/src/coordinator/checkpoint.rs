@@ -1,0 +1,247 @@
+//! Session checkpointing: resumable compression runs.
+//!
+//! Paper-scale runs (I_0 = 10^4 steps + thousands of block encodes) benefit
+//! from durable progress. A checkpoint captures everything Algorithm 2
+//! mutates — variational state, Adam slots, β vector, freeze set and the
+//! already-transmitted indices — keyed by the config fingerprint so a resume
+//! cannot silently change the protocol.
+
+use crate::bitstream::{BitReader, BitWriter};
+use crate::util::{Error, Result};
+use crate::{ensure, err};
+
+use super::session::Session;
+
+const MAGIC: &[u8; 4] = b"MCK1";
+
+/// Serializable snapshot of a running compression session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub b: usize,
+    pub s: usize,
+    pub n_layers: usize,
+    pub step: i32,
+    pub mu: Vec<f32>,
+    pub rho: Vec<f32>,
+    pub lsp: Vec<f32>,
+    pub m_mu: Vec<f32>,
+    pub v_mu: Vec<f32>,
+    pub m_rho: Vec<f32>,
+    pub v_rho: Vec<f32>,
+    pub m_lsp: Vec<f32>,
+    pub v_lsp: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub frozen_mask: Vec<f32>,
+    pub frozen_w: Vec<f32>,
+    /// indices of blocks already encoded (u64::MAX = not yet encoded)
+    pub indices: Vec<u64>,
+}
+
+fn write_f32s(w: &mut BitWriter, xs: &[f32]) {
+    w.write_varint(xs.len() as u64);
+    for &x in xs {
+        w.write_bits(x.to_bits() as u64, 32);
+    }
+}
+
+fn read_f32s(r: &mut BitReader) -> Result<Vec<f32>> {
+    let n = r.read_varint()? as usize;
+    ensure!(n < 100_000_000, "unreasonable vector length {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_bits(r.read_bits(32)? as u32));
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn capture(session: &Session, indices: &[u64]) -> Checkpoint {
+        let st = &session.state;
+        Checkpoint {
+            model: session.arts.meta.name.clone(),
+            b: session.arts.meta.b,
+            s: session.arts.meta.s,
+            n_layers: session.arts.meta.n_layers,
+            step: st.step,
+            mu: st.mu.clone(),
+            rho: st.rho.clone(),
+            lsp: st.lsp.clone(),
+            m_mu: st.m_mu.clone(),
+            v_mu: st.v_mu.clone(),
+            m_rho: st.m_rho.clone(),
+            v_rho: st.v_rho.clone(),
+            m_lsp: st.m_lsp.clone(),
+            v_lsp: st.v_lsp.clone(),
+            beta: session.betas.beta.clone(),
+            frozen_mask: session.frozen_mask.clone(),
+            frozen_w: session.frozen_w.clone(),
+            indices: indices.to_vec(),
+        }
+    }
+
+    /// Restore into a freshly-created session (same config + seeds).
+    pub fn restore(&self, session: &mut Session) -> Result<Vec<u64>> {
+        let meta = &session.arts.meta;
+        ensure!(self.model == meta.name, "checkpoint for model {}", self.model);
+        ensure!(
+            self.b == meta.b && self.s == meta.s && self.n_layers == meta.n_layers,
+            "checkpoint geometry mismatch"
+        );
+        let st = &mut session.state;
+        st.step = self.step;
+        st.mu = self.mu.clone();
+        st.rho = self.rho.clone();
+        st.lsp = self.lsp.clone();
+        st.m_mu = self.m_mu.clone();
+        st.v_mu = self.v_mu.clone();
+        st.m_rho = self.m_rho.clone();
+        st.v_rho = self.v_rho.clone();
+        st.m_lsp = self.m_lsp.clone();
+        st.v_lsp = self.v_lsp.clone();
+        session.betas.beta = self.beta.clone();
+        session.frozen_mask = self.frozen_mask.clone();
+        session.frozen_w = self.frozen_w.clone();
+        Ok(self.indices.clone())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for &b in MAGIC {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_varint(self.model.len() as u64);
+        for &b in self.model.as_bytes() {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_varint(self.b as u64);
+        w.write_varint(self.s as u64);
+        w.write_varint(self.n_layers as u64);
+        w.write_bits(self.step as u32 as u64, 32);
+        for v in [
+            &self.mu, &self.rho, &self.lsp, &self.m_mu, &self.v_mu,
+            &self.m_rho, &self.v_rho, &self.m_lsp, &self.v_lsp, &self.beta,
+            &self.frozen_mask, &self.frozen_w,
+        ] {
+            write_f32s(&mut w, v);
+        }
+        w.write_varint(self.indices.len() as u64);
+        for &i in &self.indices {
+            w.write_varint(i);
+        }
+        w.finish()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = BitReader::new(bytes);
+        let mut magic = [0u8; 4];
+        for m in magic.iter_mut() {
+            *m = r.read_bits(8)? as u8;
+        }
+        if &magic != MAGIC {
+            return err!("not a checkpoint file");
+        }
+        let name_len = r.read_varint()? as usize;
+        ensure!(name_len < 4096, "bad name length");
+        let mut name = Vec::with_capacity(name_len);
+        for _ in 0..name_len {
+            name.push(r.read_bits(8)? as u8);
+        }
+        let model = String::from_utf8(name).map_err(|_| Error::msg("bad name"))?;
+        let b = r.read_varint()? as usize;
+        let s = r.read_varint()? as usize;
+        let n_layers = r.read_varint()? as usize;
+        let step = r.read_bits(32)? as u32 as i32;
+        let mut vecs: Vec<Vec<f32>> = Vec::with_capacity(12);
+        for _ in 0..12 {
+            vecs.push(read_f32s(&mut r)?);
+        }
+        let n_idx = r.read_varint()? as usize;
+        ensure!(n_idx < 100_000_000, "bad index count");
+        let mut indices = Vec::with_capacity(n_idx);
+        for _ in 0..n_idx {
+            indices.push(r.read_varint()?);
+        }
+        let mut it = vecs.into_iter();
+        Ok(Checkpoint {
+            model,
+            b,
+            s,
+            n_layers,
+            step,
+            mu: it.next().unwrap(),
+            rho: it.next().unwrap(),
+            lsp: it.next().unwrap(),
+            m_mu: it.next().unwrap(),
+            v_mu: it.next().unwrap(),
+            m_rho: it.next().unwrap(),
+            v_rho: it.next().unwrap(),
+            m_lsp: it.next().unwrap(),
+            v_lsp: it.next().unwrap(),
+            beta: it.next().unwrap(),
+            frozen_mask: it.next().unwrap(),
+            frozen_w: it.next().unwrap(),
+            indices,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "tiny_mlp".into(),
+            b: 22,
+            s: 8,
+            n_layers: 2,
+            step: 1234,
+            mu: (0..176).map(|i| i as f32 * 0.1).collect(),
+            rho: vec![-3.0; 176],
+            lsp: vec![-1.0, -2.0],
+            m_mu: vec![0.5; 176],
+            v_mu: vec![0.25; 176],
+            m_rho: vec![0.0; 176],
+            v_rho: vec![0.0; 176],
+            m_lsp: vec![0.1, 0.2],
+            v_lsp: vec![0.3, 0.4],
+            beta: vec![1e-4; 22],
+            frozen_mask: vec![0.0; 22],
+            frozen_w: vec![0.0; 176],
+            indices: (0..22).map(|i| if i < 5 { i * 3 } else { u64::MAX }).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = sample();
+        let c2 = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::from_bytes(b"nope").is_err());
+        let mut bytes = sample().to_bytes();
+        bytes[1] ^= 0xff;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Block encoder/decoder — Algorithm 1 with chunked candidate scoring.
+//!
+//! `K = 2^C_loc` candidates per block are scored in `k_chunk`-sized
+//! invocations of the AOT `score_chunk` graph (the Pallas hot-spot); the
+//! categorical draw over the proxy distribution  q̃ streams over chunks via
+//! Gumbel-max so the full logit vector never needs to be materialized at
+//! once. Decoding replays `decode_chunk` for the chunk containing `k*` —
+//! shared randomness by construction (same jax PRNG derivation).
+
+use crate::codec::MrcFile;
+use crate::model::Layout;
+use crate::prng::{Pcg64, StreamingCategorical};
+use crate::runtime::ModelArtifacts;
+use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::util::Result;
+use crate::{ensure, err};
+
+/// Result of encoding one block.
+#[derive(Debug, Clone)]
+pub struct EncodeOutcome {
+    /// transmitted index k* in [0, 2^C_loc)
+    pub index: u64,
+    /// decoded candidate weights (the values the block is frozen to)
+    pub weights: Vec<f32>,
+    /// realized KL(q_b || p_b) at encode time in bits (analytic, from the
+    /// last training step's KL vector)
+    pub kl_bits: f64,
+    /// importance-sampling normalizer gap log K - logsumexp(logits) in bits:
+    /// ~0 when q̃ approximates q well, large when the K-sample budget was
+    /// insufficient (Theorem 3.2 diagnostics)
+    pub is_gap_bits: f64,
+    /// number of candidates scored
+    pub k: u64,
+}
+
+/// Score all K candidates of block `b` and draw k* ~ q̃ (Algorithm 1).
+/// Freezes the block in the session.
+pub fn encode_block(
+    session: &mut super::Session,
+    b: usize,
+) -> Result<EncodeOutcome> {
+    let arts = session.arts;
+    let meta = &arts.meta;
+    let s = meta.s;
+    let c_loc_bits = session.cfg.c_loc_bits as u32;
+    let k: u64 = 1 << c_loc_bits;
+    let (mu_b, rho_b) = session.state.block(b, s);
+    let lsp_b = session.layout.block_lsp(b, &session.state.lsp);
+    let mask_b = session.layout.block_mask(b).to_vec();
+
+    // upload block parameters once; reuse the device buffers across chunks
+    // (perf: K/k_chunk invocations share them)
+    let mu_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], mu_b.to_vec())?))?;
+    let rho_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], rho_b.to_vec())?))?;
+    let lsp_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], lsp_b.clone())?))?;
+    let mask_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], mask_b)?))?;
+    let seed_arg = Arg::I32(TensorI32::scalar(session.cfg.protocol_seed));
+    let block_arg = Arg::I32(TensorI32::scalar(b as i32));
+
+    // deterministic per-block sampler stream (selection need not be shared;
+    // only candidate generation is protocol randomness)
+    let draw_rng = Pcg64::seed(session.cfg.train_seed ^ (b as u64) << 1 ^ 0x5E1);
+    let mut sampler = StreamingCategorical::new(draw_rng);
+    let k_chunk = meta.k_chunk as u64;
+    let n_chunks = if k >= k_chunk { k / k_chunk } else { 1 };
+    for chunk in 0..n_chunks {
+        use crate::runtime::Input;
+        let chunk_arg = Arg::I32(TensorI32::scalar(chunk as i32));
+        let outs = arts.invoke_mixed(
+            "score_chunk",
+            &[
+                Input::Host(&seed_arg),
+                Input::Host(&block_arg),
+                Input::Host(&chunk_arg),
+                Input::Dev(&mu_buf),
+                Input::Dev(&rho_buf),
+                Input::Dev(&lsp_buf),
+                Input::Dev(&mask_buf),
+            ],
+        )?;
+        let logits = outs[0].to_vec::<f32>()?;
+        let take = if k < k_chunk { k as usize } else { logits.len() };
+        sampler.push(&logits[..take]);
+    }
+    let total = sampler.total() as u64;
+    ensure!(total == k, "scored {total} candidates, expected {k}");
+    let (index, lse) = sampler.finish();
+    let index = index as u64;
+
+    let is_gap_bits = ((k as f64).ln() - lse) / std::f64::consts::LN_2;
+    let kl_bits = session.last_kl[b] as f64 / std::f64::consts::LN_2;
+
+    let weights = decode_block_row(arts, session.cfg.protocol_seed, b, index, &lsp_b)?;
+    session.freeze_block(b, &weights);
+    Ok(EncodeOutcome { index, weights, kl_bits, is_gap_bits, k })
+}
+
+/// Decode candidate `index` of block `b`: replay the shared generator for
+/// the containing chunk and take the row.
+pub fn decode_block_row(
+    arts: &ModelArtifacts,
+    protocol_seed: i32,
+    b: usize,
+    index: u64,
+    lsp_b: &[f32],
+) -> Result<Vec<f32>> {
+    let meta = &arts.meta;
+    let s = meta.s;
+    let k_chunk = meta.k_chunk as u64;
+    let (chunk, row) = (index / k_chunk, (index % k_chunk) as usize);
+    let outs = arts.invoke(
+        "decode_chunk",
+        &[
+            Arg::I32(TensorI32::scalar(protocol_seed)),
+            Arg::I32(TensorI32::scalar(b as i32)),
+            Arg::I32(TensorI32::scalar(chunk as i32)),
+            Arg::F32(TensorF32::new(vec![s], lsp_b.to_vec())?),
+        ],
+    )?;
+    let cand = TensorF32::from_literal(&outs[0])?;
+    ensure!(
+        cand.shape == vec![meta.k_chunk, s],
+        "decode_chunk returned {:?}",
+        cand.shape
+    );
+    Ok(cand.row(row).to_vec())
+}
+
+/// Decode a whole `.mrc` into block-layout weights [B*S].
+pub fn decode_model(arts: &ModelArtifacts, mrc: &MrcFile) -> Result<Vec<f32>> {
+    mrc.validate(&arts.meta)?;
+    let meta = &arts.meta;
+    let layout = Layout::generate(meta, mrc.layout_seed);
+    let mut w = vec![0f32; meta.b * meta.s];
+    for b in 0..meta.b {
+        let lsp_b = layout.block_lsp(b, &mrc.lsp);
+        let row = decode_block_row(arts, mrc.protocol_seed, b, mrc.indices[b], &lsp_b)?;
+        w[b * meta.s..(b + 1) * meta.s].copy_from_slice(&row);
+    }
+    Ok(w)
+}
+
+/// Decode a single block of a `.mrc` (lazy decode path for the server).
+pub fn decode_single_block(
+    arts: &ModelArtifacts,
+    mrc: &MrcFile,
+    layout: &Layout,
+    b: usize,
+) -> Result<Vec<f32>> {
+    if b >= mrc.b {
+        return err!("block {b} out of range ({} blocks)", mrc.b);
+    }
+    let lsp_b = layout.block_lsp(b, &mrc.lsp);
+    decode_block_row(arts, mrc.protocol_seed, b, mrc.indices[b], &lsp_b)
+}

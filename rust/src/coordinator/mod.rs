@@ -1,0 +1,250 @@
+//! The MIRACLE coordinator — Algorithm 2 of the paper.
+//!
+//! Owns the full compression run: initial variational convergence (I_0
+//! steps), the random block-encode schedule, per-block β annealing against
+//! the local coding goal `C_loc`, intermediate variational updates of
+//! not-yet-coded blocks, and final `.mrc` emission. All numerical work runs
+//! through AOT-compiled artifacts ([`crate::runtime`]); this module owns only
+//! control flow and state.
+
+pub mod beta;
+pub mod checkpoint;
+pub mod encoder;
+pub mod session;
+
+pub use beta::BetaController;
+pub use encoder::{decode_model, encode_block, EncodeOutcome};
+pub use session::{Session, StepMetrics};
+
+use crate::codec::MrcFile;
+use crate::data::Dataset;
+use crate::prng::Pcg64;
+use crate::runtime::ModelArtifacts;
+use crate::util::{Result, Timer};
+use crate::{ensure, info};
+
+/// Hyper-parameters of a MIRACLE run (paper §3.3 / §4 defaults).
+#[derive(Debug, Clone)]
+pub struct MiracleCfg {
+    /// local coding goal per block, in bits (K = 2^c_loc_bits)
+    pub c_loc_bits: u8,
+    /// initial variational iterations before any encoding (paper: 1e4)
+    pub i0: usize,
+    /// intermediate variational iterations per encoded block (paper: 50 / 1)
+    pub i_intermediate: usize,
+    pub lr: f32,
+    /// β starting value ε_β0 (paper: 1e-8)
+    pub beta0: f32,
+    /// β annealing rate ε_β (paper: 5e-5)
+    pub eps_beta: f32,
+    /// dataset size factor applied to the batch-mean CE (ELBO sum scale)
+    pub data_scale: f32,
+    /// seed for the hashing trick + block permutation (travels in .mrc)
+    pub layout_seed: u64,
+    /// base seed of the shared candidate generator (travels in .mrc)
+    pub protocol_seed: i32,
+    /// seed for batch order + per-step reparameterization keys
+    pub train_seed: u64,
+}
+
+impl Default for MiracleCfg {
+    fn default() -> MiracleCfg {
+        MiracleCfg {
+            c_loc_bits: 12,
+            i0: 300,
+            i_intermediate: 1,
+            lr: 1e-3,
+            beta0: 1e-8,
+            // The paper uses ε_β = 5e-5 over ~10^5-10^6 total updates; our
+            // sandbox runs are 10^2-10^4 updates, so the default annealing
+            // rate is scaled up to reach the same β range. The CLI exposes
+            // --eps-beta for faithful settings.
+            eps_beta: 2e-3,
+            data_scale: 1.0,
+            layout_seed: 0x4D31_7261_636C_6531, // "M1racle1"
+            protocol_seed: 7,
+            train_seed: 42,
+        }
+    }
+}
+
+/// Outcome of a full compression run.
+pub struct CompressResult {
+    pub mrc: MrcFile,
+    /// test error of the decoded (fully frozen) weights
+    pub test_error: f64,
+    /// bits actually spent (container total)
+    pub total_bits: usize,
+    pub train_secs: f64,
+    pub encode_secs: f64,
+    /// mean realized per-block KL at encode time, in bits
+    pub mean_block_kl_bits: f64,
+    pub history: Vec<StepMetrics>,
+}
+
+/// Run Algorithm 2 end to end on a training set; returns the compressed
+/// model and its measured quality.
+pub fn compress(
+    arts: &ModelArtifacts,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &MiracleCfg,
+) -> Result<CompressResult> {
+    ensure!(
+        (1 << cfg.c_loc_bits as usize) >= 1,
+        "c_loc_bits out of range"
+    );
+    let mut session = Session::new(arts, train, cfg)?;
+
+    // Phase 1: variational convergence with p learned jointly (I_0 steps).
+    let t_train = Timer::start();
+    for _ in 0..cfg.i0 {
+        session.train_step(true)?;
+    }
+    // p is frozen from here on: its stddevs travel in the .mrc header and
+    // every block must be coded against the same encoding distribution.
+    info!(
+        "I0 done: loss {:.4} acc {:.3} mean KL {:.2} bits (target {} bits)",
+        session.last_loss(),
+        session.last_acc(),
+        session.mean_kl_bits(),
+        cfg.c_loc_bits
+    );
+
+    // Phase 2: random block order; encode, then I intermediate updates.
+    let mut order_rng = Pcg64::seed(cfg.train_seed ^ 0x0B10_C0DE);
+    let order = order_rng.permutation(session.b());
+    let mut encode_secs = 0.0;
+    let mut kl_bits_sum = 0.0;
+    let mut indices = vec![0u64; session.b()];
+    for (done, &b) in order.iter().enumerate() {
+        let b = b as usize;
+        let t = Timer::start();
+        let outcome = encode_block(&mut session, b)?;
+        encode_secs += t.secs();
+        kl_bits_sum += outcome.kl_bits;
+        indices[b] = outcome.index;
+        for _ in 0..cfg.i_intermediate {
+            session.train_step(false)?;
+        }
+        if (done + 1) % 200 == 0 {
+            info!(
+                "encoded {}/{} blocks (last: k*={} kl={:.2}b is-gap={:.2}b)",
+                done + 1,
+                session.b(),
+                outcome.index,
+                outcome.kl_bits,
+                outcome.is_gap_bits
+            );
+        }
+    }
+    let train_secs = t_train.secs() - encode_secs;
+
+    let mrc = MrcFile {
+        model: arts.meta.name.clone(),
+        layout_seed: cfg.layout_seed,
+        protocol_seed: cfg.protocol_seed,
+        b: session.b(),
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: cfg.c_loc_bits,
+        lsp: session.state.lsp.clone(),
+        indices,
+    };
+
+    // Final quality: decode from the container (full round trip) and eval.
+    let w_blocks = decode_model(arts, &mrc)?;
+    let test_error = eval_error(arts, &session.layout.assemble_map, &w_blocks, test)?;
+    let total_bits = mrc.total_bits();
+    Ok(CompressResult {
+        mrc,
+        test_error,
+        total_bits,
+        train_secs,
+        encode_secs,
+        mean_block_kl_bits: kl_bits_sum / session.b() as f64,
+        history: session.history.clone(),
+    })
+}
+
+/// Test error of explicit block-layout weights.
+pub fn eval_error(
+    arts: &ModelArtifacts,
+    assemble_map: &[i32],
+    w_blocks: &[f32],
+    test: &Dataset,
+) -> Result<f64> {
+    use crate::runtime::Input;
+    use crate::tensor::{Arg, TensorF32, TensorI32};
+    let meta = &arts.meta;
+    let eb = meta.eval_batch;
+    // weights + map uploaded once, shared across all eval batches
+    let w_buf = arts.upload(&Arg::F32(TensorF32::new(
+        vec![meta.b, meta.s],
+        w_blocks.to_vec(),
+    )?))?;
+    let amap_buf = arts.upload(&Arg::I32(TensorI32::new(
+        vec![meta.n_total],
+        assemble_map.to_vec(),
+    )?))?;
+    let mut wrong = 0usize;
+    let mut start = 0usize;
+    while start < test.len() {
+        let (x, y) = test.batch_range(start, eb);
+        let x_arg = Arg::F32(x);
+        let outs = arts.invoke_mixed(
+            "eval_batch",
+            &[Input::Dev(&w_buf), Input::Dev(&amap_buf), Input::Host(&x_arg)],
+        )?;
+        let logits = TensorF32::from_literal(&outs[0])?;
+        let n_valid = eb.min(test.len() - start);
+        for i in 0..n_valid {
+            let row = logits.row(i);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 != y[i] {
+                wrong += 1;
+            }
+        }
+        start += eb;
+    }
+    Ok(wrong as f64 / test.len() as f64)
+}
+
+/// Test error of a raw flat weight vector (baseline path).
+pub fn eval_error_full(
+    arts: &ModelArtifacts,
+    w_full: &[f32],
+    test: &Dataset,
+) -> Result<f64> {
+    use crate::tensor::{Arg, TensorF32};
+    let meta = &arts.meta;
+    let eb = meta.eval_batch;
+    let w = TensorF32::new(vec![meta.n_total], w_full.to_vec())?;
+    let mut wrong = 0usize;
+    let mut start = 0usize;
+    while start < test.len() {
+        let (x, y) = test.batch_range(start, eb);
+        let outs = arts.invoke("eval_full", &[Arg::F32(w.clone()), Arg::F32(x)])?;
+        let logits = TensorF32::from_literal(&outs[0])?;
+        let n_valid = eb.min(test.len() - start);
+        for i in 0..n_valid {
+            let row = logits.row(i);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 != y[i] {
+                wrong += 1;
+            }
+        }
+        start += eb;
+    }
+    Ok(wrong as f64 / test.len() as f64)
+}

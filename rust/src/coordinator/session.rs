@@ -1,0 +1,255 @@
+//! Training session state + the variational update driver.
+//!
+//! One `Session` owns everything Algorithm 2 mutates: the variational state
+//! in block layout, the β controller, the freeze set, and the batch stream.
+//! `train_step` performs one in-graph Adam update through the AOT
+//! `train_step` artifact and applies the β annealing sweep on the returned
+//! per-block KL vector.
+
+use crate::data::{BatchIter, Dataset};
+use crate::model::init::{InitCfg, VarState};
+use crate::model::Layout;
+use crate::prng::Pcg64;
+use crate::runtime::ModelArtifacts;
+use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::util::Result;
+
+use super::beta::BetaController;
+use super::MiracleCfg;
+
+/// Metrics of one variational update.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub acc: f32,
+    pub mean_kl_nats: f32,
+}
+
+pub struct Session<'a> {
+    pub arts: &'a ModelArtifacts,
+    pub layout: Layout,
+    pub state: VarState,
+    pub betas: BetaController,
+    pub frozen_mask: Vec<f32>,
+    pub frozen_w: Vec<f32>,
+    pub cfg: MiracleCfg,
+    pub history: Vec<StepMetrics>,
+    /// last per-block KL (nats) returned by the graph
+    pub last_kl: Vec<f32>,
+    train: &'a Dataset,
+    iter: BatchIter,
+    seed_rng: Pcg64,
+    // static layout maps, uploaded to the device once (perf: ~0.5 MB/step
+    // of host->device copies saved at lenet scale)
+    amap_buf: xla::PjRtBuffer,
+    lmap_buf: xla::PjRtBuffer,
+    smask_buf: xla::PjRtBuffer,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(
+        arts: &'a ModelArtifacts,
+        train: &'a Dataset,
+        cfg: &MiracleCfg,
+    ) -> Result<Session<'a>> {
+        let meta = &arts.meta;
+        let layout = Layout::generate(meta, cfg.layout_seed);
+        let state = VarState::init(meta, &layout, &InitCfg::default(), cfg.train_seed);
+        let betas = BetaController::new(meta.b, cfg.beta0, cfg.eps_beta, cfg.c_loc_bits);
+        let amap_buf = arts.upload(&Arg::I32(TensorI32::new(
+            vec![meta.n_total],
+            layout.assemble_map.clone(),
+        )?))?;
+        let lmap_buf = arts.upload(&Arg::I32(TensorI32::new(
+            vec![meta.b, meta.s],
+            layout.layer_map.clone(),
+        )?))?;
+        let smask_buf = arts.upload(&Arg::F32(TensorF32::new(
+            vec![meta.b, meta.s],
+            layout.slot_mask.clone(),
+        )?))?;
+        Ok(Session {
+            arts,
+            state,
+            betas,
+            frozen_mask: vec![0.0; meta.b],
+            frozen_w: vec![0.0; meta.b * meta.s],
+            cfg: cfg.clone(),
+            history: Vec::new(),
+            last_kl: vec![0.0; meta.b],
+            train,
+            iter: BatchIter::new(train.len(), meta.batch, cfg.train_seed),
+            seed_rng: Pcg64::seed(cfg.train_seed ^ 0x57EB),
+            layout,
+            amap_buf,
+            lmap_buf,
+            smask_buf,
+        })
+    }
+
+    pub fn b(&self) -> usize {
+        self.arts.meta.b
+    }
+
+    /// One variational update (in-graph Adam) + β annealing sweep.
+    /// `learn_p` controls whether the encoding distribution p still adapts;
+    /// it must be false once any block has been encoded.
+    pub fn train_step(&mut self, learn_p: bool) -> Result<StepMetrics> {
+        let meta = &self.arts.meta;
+        let (bx, by) = self.train.gather(&self.iter.next_indices());
+        let step = self.state.step + 1;
+        let seed = (self.seed_rng.next_u32() & 0x7fff_ffff) as i32;
+        let bs = vec![meta.b, meta.s];
+        let l = vec![meta.n_layers];
+        let f = |shape: &Vec<usize>, data: &Vec<f32>| -> Result<Arg> {
+            Ok(Arg::F32(TensorF32::new(shape.clone(), data.clone())?))
+        };
+        let host: Vec<Arg> = vec![
+            f(&bs, &self.state.mu)?,
+            f(&bs, &self.state.rho)?,
+            f(&l, &self.state.lsp)?,
+            f(&bs, &self.state.m_mu)?,
+            f(&bs, &self.state.v_mu)?,
+            f(&bs, &self.state.m_rho)?,
+            f(&bs, &self.state.v_rho)?,
+            f(&l, &self.state.m_lsp)?,
+            f(&l, &self.state.v_lsp)?,
+            Arg::I32(TensorI32::scalar(step)),
+            Arg::F32(bx),
+            Arg::I32(TensorI32::new(vec![meta.batch], by)?),
+            f(&vec![meta.b], &self.betas.beta)?,
+            f(&vec![meta.b], &self.frozen_mask)?,
+            f(&bs, &self.frozen_w)?,
+            Arg::I32(TensorI32::scalar(seed)),
+            Arg::F32(TensorF32::scalar(self.cfg.data_scale)),
+            Arg::F32(TensorF32::scalar(if learn_p { 1.0 } else { 0.0 })),
+            Arg::F32(TensorF32::scalar(self.cfg.lr)),
+        ];
+        use crate::runtime::Input;
+        let ins: Vec<Input> = vec![
+            Input::Host(&host[0]),
+            Input::Host(&host[1]),
+            Input::Host(&host[2]),
+            Input::Host(&host[3]),
+            Input::Host(&host[4]),
+            Input::Host(&host[5]),
+            Input::Host(&host[6]),
+            Input::Host(&host[7]),
+            Input::Host(&host[8]),
+            Input::Host(&host[9]),
+            Input::Host(&host[10]),
+            Input::Host(&host[11]),
+            Input::Host(&host[12]),
+            Input::Host(&host[13]),
+            Input::Host(&host[14]),
+            Input::Host(&host[15]),
+            Input::Dev(&self.amap_buf),
+            Input::Dev(&self.lmap_buf),
+            Input::Dev(&self.smask_buf),
+            Input::Host(&host[16]),
+            Input::Host(&host[17]),
+            Input::Host(&host[18]),
+        ];
+        let outs = self.arts.invoke_mixed("train_step", &ins)?;
+        self.state.mu = outs[0].to_vec::<f32>()?;
+        self.state.rho = outs[1].to_vec::<f32>()?;
+        self.state.lsp = outs[2].to_vec::<f32>()?;
+        self.state.m_mu = outs[3].to_vec::<f32>()?;
+        self.state.v_mu = outs[4].to_vec::<f32>()?;
+        self.state.m_rho = outs[5].to_vec::<f32>()?;
+        self.state.v_rho = outs[6].to_vec::<f32>()?;
+        self.state.m_lsp = outs[7].to_vec::<f32>()?;
+        self.state.v_lsp = outs[8].to_vec::<f32>()?;
+        let loss = outs[9].to_vec::<f32>()?[0];
+        let ce = outs[10].to_vec::<f32>()?[0];
+        let acc = outs[11].to_vec::<f32>()?[0];
+        self.last_kl = outs[12].to_vec::<f32>()?;
+        self.state.step = step;
+
+        self.betas.update(&self.last_kl, &self.frozen_mask);
+
+        let mean_kl = unfrozen_mean(&self.last_kl, &self.frozen_mask);
+        let m = StepMetrics { loss, ce, acc, mean_kl_nats: mean_kl };
+        self.history.push(m);
+        Ok(m)
+    }
+
+    /// Initialize means from a pretrained dense weight vector (paper §4:
+    /// VGG means start from a pretrained model). Call before training.
+    pub fn init_means_from_dense(&mut self, w_full: &[f32]) {
+        self.state.init_means_from_dense(&self.layout, w_full);
+    }
+
+    /// Pin block `b` to encoded values.
+    pub fn freeze_block(&mut self, b: usize, w: &[f32]) {
+        let s = self.arts.meta.s;
+        debug_assert_eq!(w.len(), s);
+        self.frozen_mask[b] = 1.0;
+        self.frozen_w[b * s..(b + 1) * s].copy_from_slice(w);
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.history.last().map(|m| m.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn last_acc(&self) -> f32 {
+        self.history.last().map(|m| m.acc).unwrap_or(f32::NAN)
+    }
+
+    /// Mean unfrozen per-block KL in bits.
+    pub fn mean_kl_bits(&self) -> f64 {
+        unfrozen_mean(&self.last_kl, &self.frozen_mask) as f64 / std::f64::consts::LN_2
+    }
+
+    /// Draw a posterior weight sample (frozen blocks pinned) — for
+    /// stochastic evaluation.
+    pub fn sample_weights(&self, seed: i32) -> Result<Vec<f32>> {
+        let meta = &self.arts.meta;
+        let bs = vec![meta.b, meta.s];
+        let outs = self.arts.invoke(
+            "sample_weights",
+            &[
+                Arg::F32(TensorF32::new(bs.clone(), self.state.mu.clone())?),
+                Arg::F32(TensorF32::new(bs.clone(), self.state.rho.clone())?),
+                Arg::F32(TensorF32::new(vec![meta.b], self.frozen_mask.clone())?),
+                Arg::F32(TensorF32::new(bs, self.frozen_w.clone())?),
+                Arg::I32(TensorI32::scalar(seed)),
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+fn unfrozen_mean(kl: &[f32], fm: &[f32]) -> f32 {
+    let mut sum = 0f64;
+    let mut n = 0usize;
+    for (&k, &f) in kl.iter().zip(fm) {
+        if f == 0.0 {
+            sum += k as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::unfrozen_mean;
+
+    #[test]
+    fn unfrozen_mean_ignores_frozen() {
+        let kl = [1.0f32, 100.0, 3.0];
+        let fm = [0.0f32, 1.0, 0.0];
+        assert!((unfrozen_mean(&kl, &fm) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unfrozen_mean_all_frozen() {
+        assert_eq!(unfrozen_mean(&[5.0], &[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Synthetic image-classification datasets (MNIST/CIFAR substitutes).
+//!
+//! The sandbox has no network access, so the paper's MNIST/CIFAR-10
+//! benchmarks are replaced by deterministic *class-conditional generators*
+//! that preserve what the experiments actually exercise: a non-trivially
+//! learnable mapping from images to 10 classes, an overfitting regime
+//! (so the KL/size constraint visibly trades off against test error), and
+//! disjoint train/test splits. See DESIGN.md §4 (Substitutions).
+//!
+//! `synth_mnist`: 28x28x1 "digits" — each class is a fixed stroke pattern
+//! (bars/crosses/boxes at class-specific positions) warped by a per-sample
+//! random shift and pixel noise.
+//!
+//! `synth_cifar`: HxWx3 "textures" — each class is a colored frequency
+//! pattern (class-specific sinusoid orientation + palette) plus noise.
+
+use crate::prng::Pcg64;
+use crate::tensor::TensorF32;
+
+/// An in-memory dataset of flattened images + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// [n, feature_dim] for MLPs or [n, h, w, c] semantics (row-major);
+    /// stored flat with the per-example shape recorded.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub example_shape: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.example_shape.iter().product()
+    }
+
+    /// Copy examples `idx` into a [batch, ...] tensor pair.
+    pub fn gather(&self, idx: &[usize]) -> (TensorF32, Vec<i32>) {
+        let d = self.feature_dim();
+        let mut x = Vec::with_capacity(idx.len() * d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(&self.x[i * d..(i + 1) * d]);
+            y.push(self.y[i]);
+        }
+        let mut shape = vec![idx.len()];
+        shape.extend_from_slice(&self.example_shape);
+        (TensorF32 { shape, data: x }, y)
+    }
+
+    /// Sequential batch (wrapping), for eval loops.
+    pub fn batch_range(&self, start: usize, n: usize) -> (TensorF32, Vec<i32>) {
+        let idx: Vec<usize> = (0..n).map(|i| (start + i) % self.len()).collect();
+        self.gather(&idx)
+    }
+}
+
+/// Deterministic batch iterator with per-epoch reshuffling.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Pcg64,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64) -> BatchIter {
+        let mut rng = Pcg64::seed(seed);
+        let order = rng.permutation(n).into_iter().map(|i| i as usize).collect();
+        BatchIter { order, pos: 0, batch, rng }
+    }
+
+    /// Indices of the next batch (reshuffles at epoch end).
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        let n = self.order.len();
+        if self.pos + self.batch > n {
+            let perm = self.rng.permutation(n);
+            self.order = perm.into_iter().map(|i| i as usize).collect();
+            self.pos = 0;
+        }
+        let idx = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        idx
+    }
+}
+
+/// 28x28x1 stroke-pattern digits, flattened to [n, 784].
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    let (h, w) = (28usize, 28usize);
+    let classes = 10;
+    let mut rng = Pcg64::seed(seed);
+    let mut x = vec![0f32; n * h * w];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        let c = (rng.below(classes as u64)) as usize;
+        y[i] = c as i32;
+        let img = &mut x[i * h * w..(i + 1) * h * w];
+        let dx = rng.below(5) as isize - 2;
+        let dy = rng.below(5) as isize - 2;
+        draw_digit_pattern(img, h, w, c, dx, dy);
+        // pixel noise + blur-ish jitter
+        for p in img.iter_mut() {
+            *p += rng.next_normal() as f32 * 0.15;
+            *p = p.clamp(0.0, 1.0);
+        }
+    }
+    Dataset { x, y, example_shape: vec![h * w], classes }
+}
+
+fn draw_digit_pattern(img: &mut [f32], h: usize, w: usize, c: usize, dx: isize, dy: isize) {
+    // Each class is a fixed pseudo-random 7x7 cell pattern (4px cells, so
+    // 28x28 exactly); coarse cells survive the ±2px jitter that defeats
+    // thin strokes. Patterns are ~50% dense and pairwise far apart w.h.p.
+    use crate::prng::mix64;
+    const CELL: usize = 4;
+    let cells = h / CELL; // 7 for 28x28
+    for cr in 0..cells {
+        for cc in 0..cells {
+            let on = mix64(((c as u64) << 32) ^ (cr * cells + cc) as u64) & 1 == 1;
+            if !on {
+                continue;
+            }
+            for r in 0..CELL {
+                for col in 0..CELL {
+                    let rr = (cr * CELL + r) as isize + dy;
+                    let ww = (cc * CELL + col) as isize + dx;
+                    if rr >= 0 && ww >= 0 && (rr as usize) < h && (ww as usize) < w {
+                        img[rr as usize * w + ww as usize] = 1.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gaussian class-prototype vectors: x = proto[c] + noise. The cleanly
+/// learnable small task used by the tiny test config (and unit benches).
+pub fn synth_protos(n: usize, dim: usize, classes: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed(seed ^ 0x9876);
+    // prototypes fixed by seed-of-task, not by sample seed, so train/test
+    // splits share them: derive from a constant stream
+    let mut proto_rng = Pcg64::seed(0xC1A5_5E5 ^ dim as u64 ^ (classes as u64) << 8);
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..dim).map(|_| proto_rng.next_normal() as f32).collect())
+        .collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes as u64) as usize;
+        y.push(c as i32);
+        for j in 0..dim {
+            x.push(protos[c][j] + rng.next_normal() as f32 * 0.4);
+        }
+    }
+    Dataset { x, y, example_shape: vec![dim], classes }
+}
+
+/// HxWx3 colored texture classes, flattened to [n, h, w, 3] (NHWC).
+pub fn synth_cifar(n: usize, h: usize, w: usize, seed: u64) -> Dataset {
+    let classes = 10;
+    let mut rng = Pcg64::seed(seed);
+    let mut x = vec![0f32; n * h * w * 3];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        let c = rng.below(classes as u64) as usize;
+        y[i] = c as i32;
+        let img = &mut x[i * h * w * 3..(i + 1) * h * w * 3];
+        let angle = c as f32 * std::f32::consts::PI / 10.0;
+        let freq = 0.5 + (c % 3) as f32 * 0.4;
+        let phase = rng.next_f32() * std::f32::consts::PI;
+        let (sa, ca) = angle.sin_cos();
+        let palette = [
+            0.3 + 0.07 * c as f32,
+            0.9 - 0.08 * c as f32,
+            0.2 + 0.05 * ((c * 3) % 10) as f32,
+        ];
+        for r in 0..h {
+            for col in 0..w {
+                let t = (r as f32 * ca + col as f32 * sa) * freq + phase;
+                let v = 0.5 + 0.5 * t.sin();
+                for ch in 0..3 {
+                    let noise = rng.next_normal() as f32 * 0.1;
+                    img[(r * w + col) * 3 + ch] =
+                        (v * palette[ch] + noise).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Dataset { x, y, example_shape: vec![h, w, 3], classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = synth_mnist(16, 5);
+        let b = synth_mnist(16, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = synth_mnist(16, 6);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = synth_mnist(8, 1);
+        assert_eq!(d.x.len(), 8 * 784);
+        assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(d.y.iter().all(|&c| (0..10).contains(&c)));
+        let d = synth_cifar(4, 16, 16, 1);
+        assert_eq!(d.x.len(), 4 * 16 * 16 * 3);
+        assert_eq!(d.example_shape, vec![16, 16, 3]);
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = synth_mnist(500, 2);
+        let mut seen = [false; 10];
+        for &c in &d.y {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_distance() {
+        // nearest-template classification on clean patterns should beat
+        // chance by a lot — sanity that the task is learnable
+        let d = synth_mnist(300, 3);
+        let mut templates = vec![vec![0f32; 784]; 10];
+        for c in 0..10 {
+            draw_digit_pattern(&mut templates[c], 28, 28, c, 0, 0);
+        }
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let img = &d.x[i * 784..(i + 1) * 784];
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, t) in templates.iter().enumerate() {
+                let dist: f32 = img
+                    .iter()
+                    .zip(t)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 as i32 == d.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.len() as f64;
+        assert!(acc > 0.5, "template acc {acc}");
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, 1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            for i in it.next_indices() {
+                assert!(seen.insert(i), "duplicate before epoch end");
+            }
+        }
+        assert_eq!(seen.len(), 9);
+    }
+
+    #[test]
+    fn gather_layout() {
+        let d = synth_cifar(6, 8, 8, 9);
+        let (x, y) = d.gather(&[3, 1]);
+        assert_eq!(x.shape, vec![2, 8, 8, 3]);
+        assert_eq!(y.len(), 2);
+        assert_eq!(&x.data[..8 * 8 * 3], &d.x[3 * 8 * 8 * 3..4 * 8 * 8 * 3]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Greedy Rejection Sampling (Harsha et al., 2010) — paper Appendix A,
+//! Algorithm 3 — over discretized distributions, plus coding-length
+//! accounting with the Vitányi–Li prefix-free code (Eq. 15).
+//!
+//! This is the *exact but intractable* protocol that MIRACLE's Algorithm 1
+//! approximates; the theory bench (`bench_coding_theory`) uses it to verify
+//! the paper's bounds: unbiasedness, `E[log i*] <= KL(q||p) + O(1)` and
+//! `E|l(i*)| <= KL + 2 log(KL + 1) + O(1)`.
+
+use crate::bitstream::vitanyi_li_len;
+use crate::prng::Pcg64;
+
+/// A discrete distribution over `0..n` (probabilities sum to 1).
+#[derive(Debug, Clone)]
+pub struct Discrete {
+    pub p: Vec<f64>,
+}
+
+impl Discrete {
+    pub fn new(mut p: Vec<f64>) -> Discrete {
+        let s: f64 = p.iter().sum();
+        assert!(s > 0.0, "degenerate distribution");
+        for v in p.iter_mut() {
+            *v /= s;
+        }
+        Discrete { p }
+    }
+
+    /// Discretize a Gaussian N(mu, sigma^2) onto a symmetric grid of `n`
+    /// points covering ±span (used to build q/p pairs with known KL).
+    pub fn gauss(n: usize, mu: f64, sigma: f64, span: f64) -> Discrete {
+        let p: Vec<f64> = (0..n)
+            .map(|i| {
+                let x = -span + 2.0 * span * (i as f64 + 0.5) / n as f64;
+                let z = (x - mu) / sigma;
+                (-0.5 * z * z).exp() / sigma
+            })
+            .collect();
+        Discrete::new(p)
+    }
+
+    pub fn kl(&self, other: &Discrete) -> f64 {
+        self.p
+            .iter()
+            .zip(&other.p)
+            .filter(|(&q, _)| q > 0.0)
+            .map(|(&q, &p)| q * (q / p).ln())
+            .sum()
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let mut u = rng.next_f64();
+        for (i, &p) in self.p.iter().enumerate() {
+            u -= p;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        self.p.len() - 1
+    }
+}
+
+/// Result of one greedy-rejection encode.
+#[derive(Debug, Clone, Copy)]
+pub struct GrcSample {
+    /// accepted sample value (index into the distribution's support)
+    pub value: usize,
+    /// accepted iteration index i* (the transmitted message)
+    pub index: u64,
+    /// prefix-free code length of i* in bits (Vitányi–Li)
+    pub code_bits: usize,
+}
+
+/// Algorithm 3: greedy rejection sampling of one draw from `q` using shared
+/// randomness that both sides derive from `rng` (candidates i.i.d. ~ p).
+///
+/// Tracks the residual mass vector over the whole support — this is exactly
+/// why the paper calls it intractable for continuous, high-dimensional w; it
+/// is perfectly fine for the discrete analysis here.
+pub fn greedy_rejection_sample(q: &Discrete, p: &Discrete, rng: &mut Pcg64) -> GrcSample {
+    let n = q.p.len();
+    assert_eq!(n, p.p.len());
+    // p_i(w) accumulated acceptance mass per value; p_star = sum
+    let mut acc = vec![0f64; n];
+    let mut p_star = 0f64;
+    for i in 0u64.. {
+        // alpha_i(w) = min(q(w) - p_{i-1}(w), (1 - p*_{i-1}) p(w))
+        let wi = p.sample(rng);
+        let alpha = (q.p[wi] - acc[wi]).min((1.0 - p_star) * p.p[wi]).max(0.0);
+        let beta = if (1.0 - p_star) * p.p[wi] > 0.0 {
+            alpha / ((1.0 - p_star) * p.p[wi])
+        } else {
+            0.0
+        };
+        let accept = rng.next_f64() <= beta;
+        // update the bookkeeping for ALL values (the intractable part)
+        let mut new_pstar = p_star;
+        for w in 0..n {
+            let a = (q.p[w] - acc[w]).min((1.0 - p_star) * p.p[w]).max(0.0);
+            acc[w] += a;
+            new_pstar += a;
+        }
+        p_star = new_pstar.min(1.0);
+        if accept {
+            return GrcSample {
+                value: wi,
+                index: i,
+                code_bits: vitanyi_li_len(i),
+            };
+        }
+        if i > 1_000_000 {
+            // numerically stuck (q==p to machine precision); accept current
+            return GrcSample { value: wi, index: i, code_bits: vitanyi_li_len(i) };
+        }
+    }
+    unreachable!()
+}
+
+/// Instrumented variant of Algorithm 3: runs `iters` bookkeeping rounds
+/// (without sampling) and returns the residual mass `q(w) - p_i(w)` per
+/// value after each round — used to verify the Appendix A.1 convergence
+/// invariant `q(w) - p_i(w) <= q(w) (1 - p(w))^i`.
+pub fn greedy_rejection_residuals(
+    q: &Discrete,
+    p: &Discrete,
+    iters: usize,
+) -> Vec<Vec<f64>> {
+    let n = q.p.len();
+    let mut acc = vec![0f64; n];
+    let mut p_star = 0f64;
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut new_pstar = p_star;
+        for w in 0..n {
+            let a = (q.p[w] - acc[w]).min((1.0 - p_star) * p.p[w]).max(0.0);
+            acc[w] += a;
+            new_pstar += a;
+        }
+        p_star = new_pstar.min(1.0);
+        out.push(q.p.iter().zip(&acc).map(|(&qq, &a)| qq - a).collect());
+    }
+    out
+}
+
+/// MIRACLE's Algorithm 1 on the same discrete pair: draw K candidates from
+/// p, reweight by q/p, sample the proxy  q̃. Returns (value, index, exact
+/// proxy distribution over candidate slots for bias analysis).
+pub fn minimal_random_code_sample(
+    q: &Discrete,
+    p: &Discrete,
+    k: usize,
+    rng: &mut Pcg64,
+) -> (usize, usize, Vec<f64>, Vec<usize>) {
+    let candidates: Vec<usize> = (0..k).map(|_| p.sample(rng)).collect();
+    let mut weights: Vec<f64> = candidates
+        .iter()
+        .map(|&w| if p.p[w] > 0.0 { q.p[w] / p.p[w] } else { 0.0 })
+        .collect();
+    let s: f64 = weights.iter().sum();
+    if s <= 0.0 {
+        let idx = 0;
+        return (candidates[idx], idx, vec![1.0 / k as f64; k], candidates);
+    }
+    for w in weights.iter_mut() {
+        *w /= s;
+    }
+    let mut u = rng.next_f64();
+    let mut idx = k - 1;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            idx = i;
+            break;
+        }
+    }
+    (candidates[idx], idx, weights, candidates)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qp(n: usize) -> (Discrete, Discrete) {
+        let q = Discrete::gauss(n, 0.8, 0.5, 4.0);
+        let p = Discrete::gauss(n, 0.0, 1.0, 4.0);
+        (q, p)
+    }
+
+    #[test]
+    fn kl_properties() {
+        let (q, p) = qp(128);
+        assert!(q.kl(&p) > 0.0);
+        assert!(q.kl(&q).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grc_is_approximately_unbiased() {
+        // empirical distribution of accepted values ~ q
+        let (q, p) = qp(32);
+        let mut rng = Pcg64::seed(1);
+        let n = 20000;
+        let mut counts = vec![0f64; 32];
+        for _ in 0..n {
+            let s = greedy_rejection_sample(&q, &p, &mut rng);
+            counts[s.value] += 1.0;
+        }
+        let tv: f64 = counts
+            .iter()
+            .zip(&q.p)
+            .map(|(&c, &qq)| (c / n as f64 - qq).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.03, "total variation {tv}");
+    }
+
+    #[test]
+    fn grc_code_length_bound() {
+        // E[|l(i*)|] <= KL + 2 log(KL+1) + O(1)  (Eq. 15); O(1) ~ few bits
+        let (q, p) = qp(64);
+        let kl_bits = q.kl(&p) / std::f64::consts::LN_2;
+        let mut rng = Pcg64::seed(2);
+        let n = 4000;
+        let mean_bits: f64 = (0..n)
+            .map(|_| greedy_rejection_sample(&q, &p, &mut rng).code_bits as f64)
+            .sum::<f64>()
+            / n as f64;
+        let bound = kl_bits + 2.0 * (kl_bits + 1.0).log2() + 8.0;
+        assert!(
+            mean_bits <= bound,
+            "mean {mean_bits} bits, KL {kl_bits} bits, bound {bound}"
+        );
+    }
+
+    #[test]
+    fn mrc_proxy_converges_with_k() {
+        // E_q̃[f] -> E_q[f] as K grows (Theorem 3.2 flavor)
+        let (q, p) = qp(64);
+        let f = |w: usize| w as f64;
+        let e_q: f64 = q.p.iter().enumerate().map(|(w, &qq)| f(w) * qq).sum();
+        let mut err_small = 0f64;
+        let mut err_large = 0f64;
+        let trials = 300;
+        for t in 0..trials {
+            let mut rng = Pcg64::seed(100 + t);
+            let (_, _, wts, cands) = minimal_random_code_sample(&q, &p, 4, &mut rng);
+            let e4: f64 = wts
+                .iter()
+                .zip(&cands)
+                .map(|(&w, &c)| w * f(c))
+                .sum();
+            err_small += (e4 - e_q).abs();
+            let mut rng = Pcg64::seed(100 + t);
+            let (_, _, wts, cands) = minimal_random_code_sample(&q, &p, 512, &mut rng);
+            let e512: f64 = wts
+                .iter()
+                .zip(&cands)
+                .map(|(&w, &c)| w * f(c))
+                .sum();
+            err_large += (e512 - e_q).abs();
+        }
+        assert!(
+            err_large < err_small * 0.5,
+            "err K=512 {err_large} vs K=4 {err_small}"
+        );
+    }
+
+    #[test]
+    fn residual_mass_bound_appendix_a1() {
+        // q(w) - p_i(w) <= q(w) * (1 - p(w))^i   (Appendix A.1)
+        let (q, p) = qp(48);
+        let residuals = greedy_rejection_residuals(&q, &p, 200);
+        for (i, res) in residuals.iter().enumerate() {
+            for w in 0..q.p.len() {
+                let bound = q.p[w] * (1.0 - p.p[w]).powi(i as i32 + 1);
+                assert!(
+                    res[w] <= bound + 1e-12,
+                    "i={i} w={w}: residual {} > bound {bound}",
+                    res[w]
+                );
+                assert!(res[w] >= -1e-12, "negative residual");
+            }
+        }
+        // residual mass vanishes (unbiasedness in the limit)
+        let total: f64 = residuals.last().unwrap().iter().sum();
+        assert!(total < 1e-3, "residual mass {total}");
+        // and it decreases monotonically round over round
+        let sums: Vec<f64> = residuals.iter().map(|r| r.iter().sum()).collect();
+        for w in sums.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn mrc_index_fits_log_k_bits() {
+        let (q, p) = qp(64);
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..100 {
+            let (_, idx, _, _) = minimal_random_code_sample(&q, &p, 256, &mut rng);
+            assert!(idx < 256);
+        }
+    }
+}

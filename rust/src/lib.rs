@@ -1,0 +1,28 @@
+//! # MIRACLE — Minimal Random Code Learning
+//!
+//! Rust + JAX + Pallas reproduction of *"Minimal Random Code Learning:
+//! Getting Bits Back from Compressed Model Parameters"* (Havasi, Peharz,
+//! Hernández-Lobato — ICLR 2019).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: Algorithm 2's block scheduler and
+//!   β-annealing controller, the `.mrc` codec, baselines, benches and an
+//!   inference server. Owns the event loop; python is never on the hot path.
+//! * **L2 (python/compile/model.py)** — variational model graphs, AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the importance
+//!   scoring hot-spot, fused sampled-linear and block-KL.
+
+pub mod baselines;
+pub mod bitstream;
+pub mod codec;
+pub mod coordinator;
+pub mod data;
+pub mod grc;
+pub mod metrics;
+pub mod model;
+pub mod prng;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,298 @@
+//! `miracle` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `compress`  — run Algorithm 2 on a synthetic benchmark and write `.mrc`
+//! * `eval`      — decode an `.mrc` and report test error
+//! * `info`      — print the header + size accounting of an `.mrc`
+//! * `serve`     — run the batched inference server over an `.mrc`
+//!
+//! Examples:
+//! ```text
+//! miracle compress --model tiny_mlp --c-loc-bits 10 --i0 200 --out /tmp/m.mrc
+//! miracle eval --mrc /tmp/m.mrc
+//! miracle serve --mrc /tmp/m.mrc --clients 4 --requests 64
+//! ```
+
+use miracle::codec::MrcFile;
+use miracle::coordinator::{self, MiracleCfg};
+use miracle::data;
+use miracle::metrics::fmt_size;
+use miracle::runtime::{self, Runtime};
+use miracle::server::{spawn_clients, Server, ServerCfg};
+use miracle::util::args::Args;
+use miracle::util::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: miracle <compress|eval|info|serve> [options]");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse_from(argv, &["lazy", "half"])?;
+    match cmd.as_str() {
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "pareto" => cmd_pareto(&args),
+        other => {
+            eprintln!("unknown command '{other}' (compress|eval|info|serve|pareto)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Sweep C_loc and emit the (size, error) series as JSON — the scriptable
+/// Figure-1 driver.
+fn cmd_pareto(args: &Args) -> Result<()> {
+    use miracle::util::json::Json;
+    let model = args.str("model", "tiny_mlp");
+    let budgets: Vec<u8> = args
+        .str("budgets", "3,4,6,10")
+        .split(',')
+        .map(|s| s.trim().parse::<u8>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| miracle::util::Error::msg(format!("bad --budgets: {e}")))?;
+    let i0 = args.usize("i0", 1500)?;
+    let i_int = args.usize("i", 1)?;
+    let n_train = args.usize("train-size", 2048)?;
+    let n_test = args.usize("test-size", 1024)?;
+    let out = args.opt_str("out").map(str::to_string);
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &model)?;
+    let (train, test) = datasets_for(&model, n_train, n_test, 1234);
+    let mut points = Vec::new();
+    for &bits in &budgets {
+        let cfg = MiracleCfg {
+            c_loc_bits: bits,
+            i0,
+            i_intermediate: i_int,
+            lr: if model == "tiny_mlp" { 5e-3 } else { 2e-3 },
+            beta0: 1e-4,
+            eps_beta: 0.01,
+            data_scale: train.len() as f32,
+            ..Default::default()
+        };
+        let r = coordinator::compress(&arts, &train, &test, &cfg)?;
+        eprintln!(
+            "C_loc={bits}b: {} bits, {:.2}% error",
+            r.total_bits,
+            r.test_error * 100.0
+        );
+        points.push(Json::obj(vec![
+            ("c_loc_bits", Json::num(bits as f64)),
+            ("size_bits", Json::num(r.total_bits as f64)),
+            ("ratio", Json::num(
+                (arts.meta.n_total * 32) as f64 / r.total_bits as f64,
+            )),
+            ("test_error", Json::num(r.test_error)),
+            ("mean_block_kl_bits", Json::num(r.mean_block_kl_bits)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("model", Json::str(&model)),
+        ("n_weights", Json::num(arts.meta.n_total as f64)),
+        ("points", Json::Arr(points)),
+    ]);
+    let text = doc.to_pretty();
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &text)?;
+            println!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// Build the (train, test) synthetic datasets appropriate for a model.
+pub fn datasets_for(
+    model: &str,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (data::Dataset, data::Dataset) {
+    if model.starts_with("conv") {
+        (
+            data::synth_cifar(n_train, 16, 16, seed),
+            data::synth_cifar(n_test, 16, 16, seed ^ 0x7E57),
+        )
+    } else if model.starts_with("lenet") {
+        (
+            data::synth_mnist(n_train, seed),
+            data::synth_mnist(n_test, seed ^ 0x7E57),
+        )
+    } else {
+        // tiny_mlp: 16-dim Gaussian prototype task, 4 classes
+        (
+            data::synth_protos(n_train, 16, 4, seed),
+            data::synth_protos(n_test, 16, 4, seed ^ 0x7E57),
+        )
+    }
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let model = args.str("model", "tiny_mlp");
+    let out = args.str("out", "model.mrc");
+    let history_csv = args.opt_str("history").map(str::to_string);
+    let n_train = args.usize("train-size", 2048)?;
+    let n_test = args.usize("test-size", 1024)?;
+    let cfg = MiracleCfg {
+        c_loc_bits: args.usize("c-loc-bits", 12)? as u8,
+        i0: args.usize("i0", 300)?,
+        i_intermediate: args.usize("i", 1)?,
+        lr: args.f64("lr", 1e-3)? as f32,
+        beta0: args.f64("beta0", 1e-8)? as f32,
+        eps_beta: args.f64("eps-beta", 5e-5)? as f32,
+        data_scale: args.f64("data-scale", n_train as f64)? as f32,
+        layout_seed: args.u64("layout-seed", 0x4D31_7261)?,
+        protocol_seed: args.usize("protocol-seed", 7)? as i32,
+        train_seed: args.u64("train-seed", 42)?,
+    };
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &model)?;
+    let (train, test) = datasets_for(&model, n_train, n_test, 1234);
+    let t = miracle::util::Timer::start();
+    let result = coordinator::compress(&arts, &train, &test, &cfg)?;
+    result.mrc.save(&out)?;
+    let n_weights = arts.meta.n_total;
+    println!("model:           {model}");
+    println!("blocks:          {} x {} bits", result.mrc.b, cfg.c_loc_bits);
+    println!(
+        "compressed size: {} ({} bits)",
+        fmt_size(result.total_bits as f64 / 8.0),
+        result.total_bits
+    );
+    println!("uncompressed:    {}", fmt_size(n_weights as f64 * 4.0));
+    println!(
+        "ratio:           {:.0}x",
+        (n_weights * 32) as f64 / result.total_bits as f64
+    );
+    println!("test error:      {:.2}%", result.test_error * 100.0);
+    println!(
+        "mean block KL:   {:.2} bits (goal {})",
+        result.mean_block_kl_bits, cfg.c_loc_bits
+    );
+    println!(
+        "train/encode:    {:.1}s / {:.1}s (total {:.1}s)",
+        result.train_secs,
+        result.encode_secs,
+        t.secs()
+    );
+    println!("wrote {out}");
+    if let Some(path) = history_csv {
+        let mut t = miracle::metrics::Table::new(
+            "training history",
+            &["step", "loss", "ce", "train_acc", "mean_kl_nats"],
+        );
+        for (i, m) in result.history.iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                format!("{}", m.loss),
+                format!("{}", m.ce),
+                format!("{}", m.acc),
+                format!("{}", m.mean_kl_nats),
+            ]);
+        }
+        t.save_csv(&path)?;
+        println!("history -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let path = args.require("mrc")?;
+    let n_test = args.usize("test-size", 1024)?;
+    args.finish()?;
+    let mrc = MrcFile::load(&path)?;
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &mrc.model)?;
+    let (_, test) = datasets_for(&mrc.model, 1, n_test, 1234);
+    let w = coordinator::decode_model(&arts, &mrc)?;
+    let layout = miracle::model::Layout::generate(&arts.meta, mrc.layout_seed);
+    let err = coordinator::eval_error(&arts, &layout.assemble_map, &w, &test)?;
+    println!(
+        "{path}: test error {:.2}% over {} examples",
+        err * 100.0,
+        test.len()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let path = args.require("mrc")?;
+    args.finish()?;
+    let mrc = MrcFile::load(&path)?;
+    println!("model:        {}", mrc.model);
+    println!("blocks:       {} x {} slots", mrc.b, mrc.s);
+    println!(
+        "C_loc:        {} bits (K = {})",
+        mrc.c_loc_bits,
+        1u64 << mrc.c_loc_bits
+    );
+    println!("payload:      {} bits", mrc.payload_bits());
+    println!(
+        "container:    {} bits ({} bits header overhead)",
+        mrc.total_bits(),
+        mrc.total_bits() - mrc.payload_bits()
+    );
+    println!(
+        "sigma_p:      {:?}",
+        mrc.lsp.iter().map(|l| l.exp()).collect::<Vec<_>>()
+    );
+    println!("layout seed:  {:#x}", mrc.layout_seed);
+    println!("protocol:     {}", mrc.protocol_seed);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let path = args.require("mrc")?;
+    let n_clients = args.usize("clients", 4)?;
+    let per_client = args.usize("requests", 32)?;
+    let max_batch = args.usize("max-batch", 64)?;
+    let lazy = args.flag("lazy");
+    args.finish()?;
+    let mrc = MrcFile::load(&path)?;
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &mrc.model)?;
+    let (_, test) = datasets_for(&mrc.model, 1, 256, 99);
+    let feat = test.feature_dim();
+    let examples: Vec<Vec<f32>> = (0..test.len())
+        .map(|i| test.x[i * feat..(i + 1) * feat].to_vec())
+        .collect();
+    let cfg = ServerCfg { max_batch, lazy_decode: lazy, ..Default::default() };
+    let mut server = Server::new(&arts, &mrc, cfg)?;
+    let (rx, clients) =
+        spawn_clients(examples, n_clients, per_client, std::time::Duration::ZERO);
+    let stats = server.run(rx)?;
+    let _ = clients.join();
+    println!(
+        "served:      {} requests in {} batches",
+        stats.served, stats.batches
+    );
+    println!(
+        "throughput:  {:.0} req/s",
+        stats.served as f64 / stats.wall_secs
+    );
+    println!(
+        "latency:     p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms",
+        stats.latency.p50 * 1e3,
+        stats.latency.p95 * 1e3,
+        stats.latency.p99 * 1e3
+    );
+    println!("exec/batch:  {:.2}ms mean", stats.exec_time.mean * 1e3);
+    println!("decode time: {:.2}s", stats.decode_secs);
+    Ok(())
+}

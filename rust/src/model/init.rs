@@ -1,0 +1,182 @@
+//! Variational state: parameter initialization + Adam slots, in block layout.
+
+use crate::prng::Pcg64;
+use crate::runtime::ModelMeta;
+
+use super::Layout;
+
+/// Host-side training state in block layout [B, S] (matches the AOT graphs).
+#[derive(Debug, Clone)]
+pub struct VarState {
+    pub mu: Vec<f32>,
+    pub rho: Vec<f32>, // log sigma_q
+    pub lsp: Vec<f32>, // log sigma_p, one per layer
+    pub m_mu: Vec<f32>,
+    pub v_mu: Vec<f32>,
+    pub m_rho: Vec<f32>,
+    pub v_rho: Vec<f32>,
+    pub m_lsp: Vec<f32>,
+    pub v_lsp: Vec<f32>,
+    pub step: i32,
+}
+
+/// Initialization hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct InitCfg {
+    /// initial q stddev (paper trains it; this is the starting point)
+    pub sigma_q0: f32,
+    /// initial p stddev per layer
+    pub sigma_p0: f32,
+    /// He-style fan-in scaling for means
+    pub mean_scale: f32,
+}
+
+impl Default for InitCfg {
+    fn default() -> InitCfg {
+        InitCfg { sigma_q0: 0.02, sigma_p0: 0.1, mean_scale: 1.0 }
+    }
+}
+
+impl VarState {
+    /// He-initialized means per layer (scaled by fan-in), flat -> slots ->
+    /// block layout. Hash-shared slots receive the *last* position's draw,
+    /// which is fine — they are iid anyway.
+    pub fn init(meta: &ModelMeta, layout: &Layout, cfg: &InitCfg, seed: u64) -> VarState {
+        let n_pad = meta.b * meta.s;
+        let mut rng = Pcg64::seed(seed ^ 0x1A17);
+        let mut mu = vec![0f32; n_pad];
+        // walk positions layer by layer so fan-in scaling is per layer
+        let mut pos = 0usize;
+        for (l, &count) in meta.layer_counts.iter().enumerate() {
+            // rough fan-in: count / sqrt of layer size heuristic. We don't
+            // know W vs b split here; He over the whole layer is adequate
+            // for these small nets.
+            let fan_in = (count as f32).sqrt();
+            let std = cfg.mean_scale * (2.0f32).sqrt() / fan_in.max(1.0);
+            let _ = l;
+            for _ in 0..count {
+                let bpos = layout.assemble_map[pos] as usize;
+                mu[bpos] = rng.next_normal() as f32 * std;
+                pos += 1;
+            }
+        }
+        VarState {
+            mu,
+            rho: vec![cfg.sigma_q0.ln(); n_pad],
+            lsp: vec![cfg.sigma_p0.ln(); meta.n_layers],
+            m_mu: vec![0.0; n_pad],
+            v_mu: vec![0.0; n_pad],
+            m_rho: vec![0.0; n_pad],
+            v_rho: vec![0.0; n_pad],
+            m_lsp: vec![0.0; meta.n_layers],
+            v_lsp: vec![0.0; meta.n_layers],
+            step: 0,
+        }
+    }
+
+    /// Extract block row `b` of (mu, rho).
+    pub fn block(&self, b: usize, s: usize) -> (&[f32], &[f32]) {
+        (&self.mu[b * s..(b + 1) * s], &self.rho[b * s..(b + 1) * s])
+    }
+
+    /// Initialize means from a pretrained *dense* flat weight vector (the
+    /// paper initializes VGG means from a pretrained model). Positions that
+    /// hash to the same slot are averaged — the least-squares assignment of
+    /// shared slots to pretrained weights.
+    pub fn init_means_from_dense(&mut self, layout: &Layout, w_full: &[f32]) {
+        assert_eq!(w_full.len(), layout.n_total);
+        let n_pad = self.mu.len();
+        let mut sums = vec![0f64; n_pad];
+        let mut counts = vec![0u32; n_pad];
+        for (pos, &bpos) in layout.assemble_map.iter().enumerate() {
+            sums[bpos as usize] += w_full[pos] as f64;
+            counts[bpos as usize] += 1;
+        }
+        for i in 0..n_pad {
+            if counts[i] > 0 {
+                self.mu[i] = (sums[i] / counts[i] as f64) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelMeta;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            b: 5,
+            s: 4,
+            k_chunk: 16,
+            n_total: 18,
+            n_slots: 18,
+            n_layers: 2,
+            layer_slots: vec![10, 8],
+            layer_counts: vec![10, 8],
+            batch: 4,
+            eval_batch: 4,
+            classes: 2,
+            input_shape: vec![3],
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let m = meta();
+        let layout = Layout::generate(&m, 3);
+        let st = VarState::init(&m, &layout, &InitCfg::default(), 1);
+        assert_eq!(st.mu.len(), 20);
+        assert_eq!(st.lsp.len(), 2);
+        assert_eq!(st.step, 0);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = meta();
+        let layout = Layout::generate(&m, 3);
+        let a = VarState::init(&m, &layout, &InitCfg::default(), 1);
+        let b = VarState::init(&m, &layout, &InitCfg::default(), 1);
+        assert_eq!(a.mu, b.mu);
+        let c = VarState::init(&m, &layout, &InitCfg::default(), 2);
+        assert_ne!(a.mu, c.mu);
+    }
+
+    #[test]
+    fn init_from_dense_averages_hash_collisions() {
+        let m = ModelMeta {
+            layer_slots: vec![5, 8], // first layer hashed 10 -> 5
+            ..meta()
+        };
+        let layout = Layout::generate(&m, 11);
+        let mut st = VarState::init(&m, &layout, &InitCfg::default(), 1);
+        let w_full: Vec<f32> = (0..m.n_total).map(|i| i as f32).collect();
+        st.init_means_from_dense(&layout, &w_full);
+        // every slot's mean equals the average of the positions mapping there
+        let mut sums = std::collections::BTreeMap::new();
+        for (pos, &bpos) in layout.assemble_map.iter().enumerate() {
+            let e = sums.entry(bpos).or_insert((0f32, 0u32));
+            e.0 += pos as f32;
+            e.1 += 1;
+        }
+        for (&bpos, &(sum, count)) in &sums {
+            assert!((st.mu[bpos as usize] - sum / count as f32).abs() < 1e-4);
+        }
+        // un-hashed second layer: exact copy
+        for pos in 10..18 {
+            let bpos = layout.assemble_map[pos] as usize;
+            assert_eq!(st.mu[bpos], pos as f32);
+        }
+    }
+
+    #[test]
+    fn real_slots_get_nonzero_means() {
+        let m = meta();
+        let layout = Layout::generate(&m, 3);
+        let st = VarState::init(&m, &layout, &InitCfg::default(), 1);
+        let touched = st.mu.iter().filter(|&&v| v != 0.0).count();
+        assert!(touched >= m.n_slots.min(18) - 2); // collisions may zero-overlap rarely
+    }
+}

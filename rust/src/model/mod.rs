@@ -1,0 +1,220 @@
+//! Parameter layout: hashing trick + random block partition (Algorithm 2
+//! line 2 and §3.3).
+//!
+//! The flat parameter vector (layers concatenated, `W` then `b` per layer) is
+//! mapped to *trainable slots* by the hashing trick (Chen et al., 2015):
+//! layer `l`'s positions hash into `layer_slots[l]` buckets. Slots are then
+//! scattered into `B` blocks of `S` by a seed-derived random permutation.
+//! Rust composes the two maps into one gather (`assemble_map`) consumed by
+//! every AOT graph; the same seed therefore reconstructs the layout on the
+//! decoder side — only `layout_seed` travels in the `.mrc` header.
+
+pub mod init;
+
+use crate::prng::{mix64, Pcg64};
+use crate::runtime::ModelMeta;
+
+/// Runtime-generated layout maps (all deterministic in `seed`).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub seed: u64,
+    /// flat parameter position -> index into block-layout slots [B*S]
+    pub assemble_map: Vec<i32>,
+    /// block-layout index -> layer id (padding -> 0)
+    pub layer_map: Vec<i32>,
+    /// block-layout index -> 1.0 real / 0.0 padding
+    pub slot_mask: Vec<f32>,
+    pub b: usize,
+    pub s: usize,
+    pub n_total: usize,
+    pub n_slots: usize,
+}
+
+impl Layout {
+    /// Build the layout for a model (hash maps + block permutation).
+    pub fn generate(meta: &ModelMeta, seed: u64) -> Layout {
+        let n_pad = meta.b * meta.s;
+        // position -> slot (hashing trick, per layer)
+        let mut pos_to_slot = vec![0u32; meta.n_total];
+        let mut slot_layer = vec![0u32; n_pad];
+        let mut pos = 0usize;
+        let mut slot_base = 0usize;
+        for (l, (&count, &m)) in meta
+            .layer_counts
+            .iter()
+            .zip(&meta.layer_slots)
+            .enumerate()
+        {
+            for i in 0..count {
+                let bucket = if m == count {
+                    i // no hashing for this layer
+                } else {
+                    (mix64(seed ^ ((l as u64) << 40) ^ i as u64) % m as u64) as usize
+                };
+                pos_to_slot[pos] = (slot_base + bucket) as u32;
+                pos += 1;
+            }
+            for b in 0..m {
+                slot_layer[slot_base + b] = l as u32;
+            }
+            slot_base += m;
+        }
+        debug_assert_eq!(pos, meta.n_total);
+        debug_assert_eq!(slot_base, meta.n_slots);
+
+        // slot -> block position (random permutation; Algorithm 2 line 2)
+        let mut rng = Pcg64::seed(seed ^ 0xB10C5EED);
+        let perm = rng.permutation(n_pad);
+
+        let assemble_map = pos_to_slot
+            .iter()
+            .map(|&s| perm[s as usize] as i32)
+            .collect();
+        let mut layer_map = vec![0i32; n_pad];
+        let mut slot_mask = vec![0f32; n_pad];
+        for (slot, &bpos) in perm.iter().enumerate() {
+            if slot < meta.n_slots {
+                layer_map[bpos as usize] = slot_layer[slot] as i32;
+                slot_mask[bpos as usize] = 1.0;
+            }
+        }
+        Layout {
+            seed,
+            assemble_map,
+            layer_map,
+            slot_mask,
+            b: meta.b,
+            s: meta.s,
+            n_total: meta.n_total,
+            n_slots: meta.n_slots,
+        }
+    }
+
+    /// Per-element log-sigma_p vector for block `b`, given the per-layer
+    /// table (feeds `score_chunk`/`decode_chunk`).
+    pub fn block_lsp(&self, b: usize, lsp_layers: &[f32]) -> Vec<f32> {
+        (0..self.s)
+            .map(|j| lsp_layers[self.layer_map[b * self.s + j] as usize])
+            .collect()
+    }
+
+    /// Mask row for block `b`.
+    pub fn block_mask(&self, b: usize) -> &[f32] {
+        &self.slot_mask[b * self.s..(b + 1) * self.s]
+    }
+
+    /// Number of real (non-padding) slots in block `b`.
+    pub fn block_real_slots(&self, b: usize) -> usize {
+        self.block_mask(b).iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Assemble a flat parameter vector from block-layout values.
+    pub fn assemble(&self, blocks_flat: &[f32]) -> Vec<f32> {
+        self.assemble_map
+            .iter()
+            .map(|&i| blocks_flat[i as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelMeta;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            b: 6,
+            s: 4,
+            k_chunk: 16,
+            n_total: 30,
+            n_slots: 20,
+            n_layers: 2,
+            layer_slots: vec![12, 8],
+            layer_counts: vec![22, 8],
+            batch: 4,
+            eval_batch: 4,
+            classes: 2,
+            input_shape: vec![3],
+        }
+    }
+
+    #[test]
+    fn maps_are_consistent() {
+        let m = meta();
+        let l = Layout::generate(&m, 123);
+        assert_eq!(l.assemble_map.len(), m.n_total);
+        assert_eq!(l.layer_map.len(), m.b * m.s);
+        // every assemble target is a real slot
+        for &t in &l.assemble_map {
+            assert!(l.slot_mask[t as usize] > 0.0);
+        }
+        // mask count == n_slots
+        let real: usize = l.slot_mask.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(real, m.n_slots);
+        // layer ids in range
+        assert!(l.layer_map.iter().all(|&x| (0..2).contains(&x)));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let m = meta();
+        let a = Layout::generate(&m, 1);
+        let b = Layout::generate(&m, 1);
+        assert_eq!(a.assemble_map, b.assemble_map);
+        let c = Layout::generate(&m, 2);
+        assert_ne!(a.assemble_map, c.assemble_map);
+    }
+
+    #[test]
+    fn layer2_positions_map_into_layer2_slots() {
+        let m = meta();
+        let l = Layout::generate(&m, 7);
+        // last 8 positions are layer 1 (no hashing: 8 slots for 8 params)
+        for pos in 22..30 {
+            let bpos = l.assemble_map[pos] as usize;
+            assert_eq!(l.layer_map[bpos], 1);
+        }
+        // layer 1 (un-hashed) positions map to *distinct* slots
+        let mut seen = std::collections::BTreeSet::new();
+        for pos in 22..30 {
+            assert!(seen.insert(l.assemble_map[pos]));
+        }
+    }
+
+    #[test]
+    fn hashed_layer_shares_slots() {
+        let m = meta();
+        let l = Layout::generate(&m, 9);
+        // 22 positions into 12 buckets -> must collide
+        let distinct: std::collections::BTreeSet<i32> =
+            l.assemble_map[..22].iter().cloned().collect();
+        assert!(distinct.len() <= 12);
+    }
+
+    #[test]
+    fn assemble_gathers() {
+        let m = meta();
+        let l = Layout::generate(&m, 3);
+        let blocks: Vec<f32> = (0..m.b * m.s).map(|i| i as f32).collect();
+        let full = l.assemble(&blocks);
+        assert_eq!(full.len(), m.n_total);
+        for (pos, &v) in full.iter().enumerate() {
+            assert_eq!(v, l.assemble_map[pos] as f32);
+        }
+    }
+
+    #[test]
+    fn block_lsp_uses_layer_table() {
+        let m = meta();
+        let l = Layout::generate(&m, 4);
+        let lsp = vec![-1.0f32, -2.0];
+        for b in 0..m.b {
+            let v = l.block_lsp(b, &lsp);
+            for (j, &x) in v.iter().enumerate() {
+                assert_eq!(x, lsp[l.layer_map[b * m.s + j] as usize]);
+            }
+        }
+    }
+}

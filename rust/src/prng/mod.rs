@@ -1,0 +1,217 @@
+//! Deterministic PRNGs and sampling for the coordinator.
+//!
+//! The *protocol* randomness (candidate weight generation) lives inside the
+//! AOT-compiled jax graphs (threefry, replayed identically by encoder and
+//! decoder — see `python/compile/model.py::_chunk_candidates`). The PRNGs
+//! here serve everything else: dataset synthesis, parameter init, block
+//! permutations, the encoder's categorical draw, and the mini property-test
+//! framework. All are seed-stable across runs and platforms.
+
+pub mod sampling;
+
+pub use sampling::{
+    categorical_from_logits, log_sum_exp, softmax_in_place, StreamingCategorical,
+};
+
+/// SplitMix64 — used for seeding and cheap hashing.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn seed(s: u64) -> SplitMix64 {
+        SplitMix64 { state: s }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless 64-bit mix — deterministic hashing for the hashing trick.
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32 with 128-bit-free state (two u64 words), good enough
+/// statistical quality for experiment workloads.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// cached second normal from Box-Muller
+    spare_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    pub fn seed(s: u64) -> Pcg64 {
+        let mut sm = SplitMix64::seed(s);
+        let mut p = Pcg64 {
+            state: sm.next_u64(),
+            inc: sm.next_u64() | 1,
+            spare_normal: None,
+        };
+        p.next_u32();
+        p
+    }
+
+    /// Derive an independent stream (seed tree).
+    pub fn fold_in(&self, tag: u64) -> Pcg64 {
+        Pcg64::seed(mix64(self.state ^ mix64(tag ^ self.inc)))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // rejection to remove modulo bias
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fisher-Yates permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+
+    /// Sample Gumbel(0,1).
+    pub fn next_gumbel(&mut self) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -(-u.ln()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::seed(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fold_in_independent() {
+        let base = Pcg64::seed(7);
+        let mut a = base.fold_in(0);
+        let mut b = base.fold_in(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+        // and reproducible
+        let mut a2 = base.fold_in(0);
+        assert_eq!(a2.next_u64(), xs[0]);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg64::seed(1);
+        let n = 20000;
+        let m: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed(2);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_unbiased_range() {
+        let mut r = Pcg64::seed(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..7000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 700, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg64::seed(4);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i as usize]);
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,149 @@
+//! Categorical sampling from (streamed) logits — Algorithm 1 line 6.
+//!
+//! The encoder accumulates candidate logits chunk by chunk; sampling from the
+//! normalized proxy distribution q̃ uses the Gumbel-max trick so the draw can
+//! be made in one streaming pass without materializing the softmax:
+//! `argmax_k (logit_k + G_k)` with iid Gumbel noise is an exact categorical
+//! sample from softmax(logits).
+
+use crate::prng::Pcg64;
+
+/// Numerically stable log(sum(exp(xs))).
+pub fn log_sum_exp(xs: &[f32]) -> f64 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax (stable). Returns the normalizer log-sum-exp.
+pub fn softmax_in_place(xs: &mut [f32]) -> f64 {
+    let lse = log_sum_exp(xs);
+    for x in xs.iter_mut() {
+        *x = ((*x as f64) - lse).exp() as f32;
+    }
+    lse
+}
+
+/// Exact categorical draw from softmax(logits) via Gumbel-max.
+pub fn categorical_from_logits(rng: &mut Pcg64, logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        let v = l as f64 + rng.next_gumbel();
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Streaming Gumbel-max sampler: feed chunks of logits, read the argmax at
+/// the end. Equivalent to `categorical_from_logits` over the concatenation.
+pub struct StreamingCategorical {
+    rng: Pcg64,
+    offset: usize,
+    best: usize,
+    best_v: f64,
+    /// running log-sum-exp of everything seen (for KL/overhead accounting)
+    lse_max: f64,
+    lse_sum: f64,
+}
+
+impl StreamingCategorical {
+    pub fn new(rng: Pcg64) -> StreamingCategorical {
+        StreamingCategorical {
+            rng,
+            offset: 0,
+            best: 0,
+            best_v: f64::NEG_INFINITY,
+            lse_max: f64::NEG_INFINITY,
+            lse_sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, logits: &[f32]) {
+        for (i, &l) in logits.iter().enumerate() {
+            let v = l as f64 + self.rng.next_gumbel();
+            if v > self.best_v {
+                self.best_v = v;
+                self.best = self.offset + i;
+            }
+            let lf = l as f64;
+            if lf > self.lse_max {
+                // rescale running sum
+                self.lse_sum = self.lse_sum * (self.lse_max - lf).exp();
+                self.lse_max = lf;
+            }
+            self.lse_sum += (lf - self.lse_max).exp();
+        }
+        self.offset += logits.len();
+    }
+
+    pub fn total(&self) -> usize {
+        self.offset
+    }
+
+    /// (sampled index, log-sum-exp of all logits)
+    pub fn finish(self) -> (usize, f64) {
+        (self.best, self.lse_max + self.lse_sum.ln())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse_matches_naive() {
+        let xs = [0.0f32, 1.0, 2.0, -3.0];
+        let naive: f64 = xs.iter().map(|&x| (x as f64).exp()).sum::<f64>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![0.5f32, -1.0, 3.0, 3.0];
+        softmax_in_place(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        // logits -> probs [0.0671, 0.1824, 0.4958, 0.2547] approx
+        let logits = [0.0f32, 1.0, 2.0, 1.333];
+        let mut probs = logits.to_vec();
+        softmax_in_place(&mut probs);
+        let mut rng = Pcg64::seed(11);
+        let mut counts = [0usize; 4];
+        let n = 40000;
+        for _ in 0..n {
+            counts[categorical_from_logits(&mut rng, &logits)] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f64 / n as f64;
+            assert!(
+                (freq - probs[i] as f64).abs() < 0.01,
+                "i={i} freq={freq} p={}",
+                probs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let logits: Vec<f32> = (0..1000).map(|i| ((i * 37) % 17) as f32 / 5.0).collect();
+        let mut s = StreamingCategorical::new(Pcg64::seed(5));
+        for chunk in logits.chunks(64) {
+            s.push(chunk);
+        }
+        let (idx_stream, lse_stream) = s.finish();
+        let idx_batch = categorical_from_logits(&mut Pcg64::seed(5), &logits);
+        assert_eq!(idx_stream, idx_batch);
+        assert!((lse_stream - log_sum_exp(&logits)).abs() < 1e-9);
+    }
+}

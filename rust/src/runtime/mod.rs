@@ -1,0 +1,307 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! `make artifacts` (python, build-time) writes one directory per model
+//! config containing `<entry>.hlo.txt` files plus `manifest.json`. This
+//! module compiles every entry on the PJRT CPU client once and exposes a
+//! typed `invoke` with shape/dtype validation against the manifest — the only
+//! boundary between the rust hot path and XLA.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Arg;
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+use crate::{ensure, err, info};
+
+/// Input/output spec of one artifact entry, from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Spec {
+    fn from_json(j: &Json) -> Result<Spec> {
+        Ok(Spec {
+            shape: j.get("shape")?.usize_arr()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One compiled entry point.
+pub struct Entry {
+    pub name: String,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+    exe: xla::PjRtLoadedExecutable,
+    pub invocations: RefCell<u64>,
+    pub total_secs: RefCell<f64>,
+}
+
+/// Static facts about a compiled model config, mirrored from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub b: usize,
+    pub s: usize,
+    pub k_chunk: usize,
+    pub n_total: usize,
+    pub n_slots: usize,
+    pub n_layers: usize,
+    pub layer_slots: Vec<usize>,
+    pub layer_counts: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub classes: usize,
+    /// per-example input shape, derived from the eval_batch entry spec
+    pub input_shape: Vec<usize>,
+}
+
+/// A loaded artifact directory: compiled executables + metadata.
+pub struct ModelArtifacts {
+    pub meta: ModelMeta,
+    pub dir: PathBuf,
+    entries: BTreeMap<String, Entry>,
+    client: xla::PjRtClient,
+}
+
+/// The PJRT client wrapper. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Load and compile every entry of `artifacts/<model>/`.
+    pub fn load_model(&self, dir: &Path) -> Result<ModelArtifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::from_file(manifest_path.to_str().unwrap())
+            .map_err(|e| e.context(format!("loading {manifest_path:?}")))?;
+        let meta = Self::parse_meta(&manifest)?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in manifest.get("entries")?.as_obj()? {
+            let file = dir.join(e.get("file")?.as_str()?);
+            let t = crate::util::Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str()
+                    .ok_or_else(|| Error::msg("non-utf8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(Spec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(Spec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            info!("compiled {}/{name} in {:.2}s", meta.name, t.secs());
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name: name.clone(),
+                    inputs,
+                    outputs,
+                    exe,
+                    invocations: RefCell::new(0),
+                    total_secs: RefCell::new(0.0),
+                },
+            );
+        }
+        Ok(ModelArtifacts {
+            meta,
+            dir: dir.to_path_buf(),
+            entries,
+            client: self.client.clone(),
+        })
+    }
+
+    fn parse_meta(m: &Json) -> Result<ModelMeta> {
+        let eval_inputs = m
+            .get("entries")?
+            .get("eval_batch")?
+            .get("inputs")?
+            .as_arr()?;
+        ensure!(eval_inputs.len() == 3, "eval_batch should have 3 inputs");
+        let x_shape = Spec::from_json(&eval_inputs[2])?.shape;
+        Ok(ModelMeta {
+            name: m.get("config")?.as_str()?.to_string(),
+            b: m.get("B")?.as_usize()?,
+            s: m.get("S")?.as_usize()?,
+            k_chunk: m.get("k_chunk")?.as_usize()?,
+            n_total: m.get("n_total")?.as_usize()?,
+            n_slots: m.get("n_slots")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            layer_slots: m.get("layer_slots")?.usize_arr()?,
+            layer_counts: m.get("layer_counts")?.usize_arr()?,
+            batch: m.get("batch")?.as_usize()?,
+            eval_batch: m.get("eval_batch")?.as_usize()?,
+            classes: m.get("classes")?.as_usize()?,
+            input_shape: x_shape[1..].to_vec(),
+        })
+    }
+}
+
+/// Argument to `invoke_mixed`: freshly-uploaded host data or a cached
+/// device buffer (static maps, per-block constants).
+pub enum Input<'a> {
+    Host(&'a Arg),
+    Dev(&'a xla::PjRtBuffer),
+}
+
+impl ModelArtifacts {
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("no artifact entry '{name}'")))
+    }
+
+    /// Upload a host tensor once; reuse the returned buffer across calls.
+    pub fn upload(&self, arg: &Arg) -> Result<xla::PjRtBuffer> {
+        arg.to_buffer(&self.client, None)
+    }
+
+    /// Execute with a mix of host args (validated + uploaded now) and
+    /// pre-uploaded device buffers (trusted — validated at upload sites).
+    pub fn invoke_mixed(&self, name: &str, ins: &[Input]) -> Result<Vec<xla::Literal>> {
+        let entry = self.entry(name)?;
+        ensure!(
+            ins.len() == entry.inputs.len(),
+            "{name}: {} args given, {} expected",
+            ins.len(),
+            entry.inputs.len()
+        );
+        let t = crate::util::Timer::start();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(ins.len());
+        for (i, input) in ins.iter().enumerate() {
+            match input {
+                Input::Host(a) => {
+                    let spec = &entry.inputs[i];
+                    ensure!(
+                        a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
+                        "{name}: arg {i} is {}{:?}, expected {}{:?}",
+                        a.dtype(),
+                        a.shape(),
+                        spec.dtype,
+                        spec.shape
+                    );
+                    owned.push(a.to_buffer(&self.client, None)?);
+                }
+                Input::Dev(_) => {}
+            }
+        }
+        let mut oi = 0usize;
+        for input in ins {
+            match input {
+                Input::Host(_) => {
+                    refs.push(&owned[oi]);
+                    oi += 1;
+                }
+                Input::Dev(b) => refs.push(b),
+            }
+        }
+        let result = entry.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        *entry.invocations.borrow_mut() += 1;
+        *entry.total_secs.borrow_mut() += t.secs();
+        ensure!(
+            outs.len() == entry.outputs.len(),
+            "{name}: {} outputs, {} expected",
+            outs.len(),
+            entry.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute an entry with shape/dtype validation; returns output literals.
+    pub fn invoke(&self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        let entry = self.entry(name)?;
+        ensure!(
+            args.len() == entry.inputs.len(),
+            "{name}: {} args given, {} expected",
+            args.len(),
+            entry.inputs.len()
+        );
+        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            ensure!(
+                arg.shape() == &spec.shape[..] && arg.dtype() == spec.dtype,
+                "{name}: arg {i} is {}{:?}, expected {}{:?}",
+                arg.dtype(),
+                arg.shape(),
+                spec.dtype,
+                spec.shape
+            );
+        }
+        // Explicit host->device transfer so every buffer is rust-owned and
+        // freed by Drop (the C-side `execute(literals)` path leaks its
+        // internal arg buffers — measured ~1.7 MB/step on train_step).
+        let t = crate::util::Timer::start();
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| a.to_buffer(&self.client, None))
+            .collect::<Result<Vec<_>>>()?;
+        let result = entry.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        *entry.invocations.borrow_mut() += 1;
+        *entry.total_secs.borrow_mut() += t.secs();
+        ensure!(
+            outs.len() == entry.outputs.len(),
+            "{name}: {} outputs, {} expected",
+            outs.len(),
+            entry.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// (invocations, total seconds) per entry — perf accounting.
+    pub fn invocation_stats(&self) -> Vec<(String, u64, f64)> {
+        self.entries
+            .values()
+            .map(|e| {
+                (
+                    e.name.clone(),
+                    *e.invocations.borrow(),
+                    *e.total_secs.borrow(),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Locate the artifacts root: $MIRACLE_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("MIRACLE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Convenience: load a model by config name from the artifacts root.
+pub fn load(rt: &Runtime, model: &str) -> Result<ModelArtifacts> {
+    let dir = artifacts_root().join(model);
+    if !dir.join("manifest.json").exists() {
+        return err!(
+            "no artifacts for '{model}' at {dir:?} — run `make artifacts` first"
+        );
+    }
+    rt.load_model(&dir)
+}

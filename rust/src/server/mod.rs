@@ -1,0 +1,288 @@
+//! Inference server over a compressed model — the paper's §5 future-work
+//! "inference machine which is able to directly run our compressed models".
+//!
+//! Requests are classification queries; the server decodes the `.mrc` via
+//! the shared-randomness generator (eagerly at startup, or block-by-block on
+//! demand in lazy mode), then serves batched forward passes through the AOT
+//! `eval_batch` graph.
+//!
+//! Threading model: PJRT handles are not `Send`, so the executor stays on
+//! the thread that built it; clients run on their own threads and talk to
+//! the server loop over an mpsc channel (router + dynamic batcher pattern).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use crate::codec::MrcFile;
+use crate::coordinator::encoder::decode_single_block;
+use crate::model::Layout;
+use crate::runtime::ModelArtifacts;
+use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::util::stats::{summarize, Summary};
+use crate::util::Result;
+use crate::{ensure, info};
+
+/// One inference request: a flattened input example.
+pub struct Request {
+    pub x: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// Prediction + timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub latency: Duration,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerCfg {
+    /// max requests folded into one eval_batch invocation (capped by the
+    /// artifact's eval_batch size)
+    pub max_batch: usize,
+    /// how long to wait for more requests before running a partial batch
+    pub batch_window: Duration,
+    /// decode blocks on first use instead of at startup
+    pub lazy_decode: bool,
+}
+
+impl Default for ServerCfg {
+    fn default() -> ServerCfg {
+        ServerCfg {
+            max_batch: usize::MAX,
+            batch_window: Duration::from_millis(2),
+            lazy_decode: false,
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub latency: Summary,
+    pub exec_time: Summary,
+    pub decode_secs: f64,
+    pub wall_secs: f64,
+}
+
+/// The server: owns decoded weights + the artifact handle.
+pub struct Server<'a> {
+    arts: &'a ModelArtifacts,
+    mrc: &'a MrcFile,
+    layout: Layout,
+    w_blocks: Vec<f32>,
+    decoded: Vec<bool>,
+    cfg: ServerCfg,
+    pub decode_secs: f64,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(arts: &'a ModelArtifacts, mrc: &'a MrcFile, cfg: ServerCfg) -> Result<Server<'a>> {
+        mrc.validate(&arts.meta)?;
+        let meta = &arts.meta;
+        let layout = Layout::generate(meta, mrc.layout_seed);
+        let mut server = Server {
+            arts,
+            mrc,
+            layout,
+            w_blocks: vec![0.0; meta.b * meta.s],
+            decoded: vec![false; meta.b],
+            cfg,
+            decode_secs: 0.0,
+        };
+        if !server.cfg.lazy_decode {
+            let t = crate::util::Timer::start();
+            server.decode_all()?;
+            server.decode_secs = t.secs();
+            info!(
+                "decoded {} blocks in {:.2}s",
+                meta.b, server.decode_secs
+            );
+        }
+        Ok(server)
+    }
+
+    fn decode_all(&mut self) -> Result<()> {
+        for b in 0..self.arts.meta.b {
+            self.ensure_block(b)?;
+        }
+        Ok(())
+    }
+
+    /// Decode-on-demand: the §5 "pseudo-random generators as algorithmic
+    /// lookup-tables" path.
+    pub fn ensure_block(&mut self, b: usize) -> Result<()> {
+        if self.decoded[b] {
+            return Ok(());
+        }
+        let t = crate::util::Timer::start();
+        let row = decode_single_block(self.arts, self.mrc, &self.layout, b)?;
+        let s = self.arts.meta.s;
+        self.w_blocks[b * s..(b + 1) * s].copy_from_slice(&row);
+        self.decoded[b] = true;
+        self.decode_secs += t.secs();
+        Ok(())
+    }
+
+    pub fn blocks_decoded(&self) -> usize {
+        self.decoded.iter().filter(|&&d| d).count()
+    }
+
+    /// Run the serve loop until the request channel closes. Returns stats.
+    pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let meta = &self.arts.meta;
+        let feat: usize = meta.input_shape.iter().product();
+        let eb = meta.eval_batch;
+        let max_batch = self.cfg.max_batch.min(eb);
+        if self.cfg.lazy_decode {
+            self.decode_all()?; // first request would need all layers anyway
+        }
+        let w = TensorF32::new(vec![meta.b, meta.s], self.w_blocks.clone())?;
+        let amap = TensorI32::new(
+            vec![meta.n_total],
+            self.layout.assemble_map.clone(),
+        )?;
+
+        let wall = Instant::now();
+        let mut latencies = Vec::new();
+        let mut exec_times = Vec::new();
+        let mut served = 0usize;
+        let mut batches = 0usize;
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            // block for the first request of a batch
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break, // all senders dropped
+                }
+            }
+            // gather more within the window up to max_batch
+            let deadline = Instant::now() + self.cfg.batch_window;
+            while pending.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+            // assemble the padded batch
+            let n = pending.len();
+            let mut xb = vec![0f32; eb * feat];
+            for (i, r) in pending.iter().enumerate() {
+                ensure!(
+                    r.x.len() == feat,
+                    "request feature dim {} != {feat}",
+                    r.x.len()
+                );
+                xb[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
+            }
+            let mut shape = vec![eb];
+            shape.extend_from_slice(&meta.input_shape);
+            let t_exec = Instant::now();
+            let outs = self.arts.invoke(
+                "eval_batch",
+                &[
+                    Arg::F32(w.clone()),
+                    Arg::I32(amap.clone()),
+                    Arg::F32(TensorF32::new(shape, xb)?),
+                ],
+            )?;
+            exec_times.push(t_exec.elapsed().as_secs_f64());
+            let logits = TensorF32::from_literal(&outs[0])?;
+            let done = Instant::now();
+            for (i, r) in pending.drain(..).enumerate() {
+                let row = logits.row(i).to_vec();
+                let pred = argmax(&row);
+                let latency = done - r.submitted;
+                latencies.push(latency.as_secs_f64());
+                let _ = r.reply.send(Response { logits: row, pred, latency });
+            }
+            served += n;
+            batches += 1;
+        }
+        Ok(ServeStats {
+            served,
+            batches,
+            latency: summarize(&latencies),
+            exec_time: summarize(&exec_times),
+            decode_secs: self.decode_secs,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Client helper: spawn `n_clients` threads each sending `per_client`
+/// requests drawn from `examples`; returns the channel for the server and a
+/// join handle that collects responses.
+pub fn spawn_clients(
+    examples: Vec<Vec<f32>>,
+    n_clients: usize,
+    per_client: usize,
+    pace: Duration,
+) -> (Receiver<Request>, std::thread::JoinHandle<Vec<Response>>) {
+    let (tx, rx) = channel::<Request>();
+    let handle = std::thread::spawn(move || {
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let tx = tx.clone();
+            let ex = examples.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for i in 0..per_client {
+                    let (rtx, rrx) = channel();
+                    let x = ex[(c * per_client + i) % ex.len()].clone();
+                    tx.send(Request { x, submitted: Instant::now(), reply: rtx })
+                        .ok();
+                    if !pace.is_zero() {
+                        std::thread::sleep(pace);
+                    }
+                    if let Ok(resp) = rrx.recv() {
+                        out.push(resp);
+                    }
+                }
+                out
+            }));
+        }
+        drop(tx);
+        joins
+            .into_iter()
+            .flat_map(|j| j.join().unwrap_or_default())
+            .collect()
+    });
+    (rx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+    }
+
+    #[test]
+    fn default_cfg_sane() {
+        let c = ServerCfg::default();
+        assert!(!c.lazy_decode);
+        assert!(c.batch_window > Duration::ZERO);
+    }
+}

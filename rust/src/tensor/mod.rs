@@ -1,0 +1,195 @@
+//! Minimal host tensors for shuttling data to/from the PJRT runtime.
+
+use crate::util::Result;
+use crate::{ensure, err};
+
+/// Row-major f32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<TensorF32> {
+        let n: usize = shape.iter().product();
+        ensure!(n == data.len(), "shape {shape:?} != data len {}", data.len());
+        Ok(TensorF32 { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> TensorF32 {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> TensorF32 {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> TensorF32 {
+        TensorF32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// 2-D accessor (row major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<TensorF32> {
+        let shape = literal_dims(lit)?;
+        let data = lit.to_vec::<f32>()?;
+        TensorF32::new(shape, data)
+    }
+}
+
+/// Row-major i32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<TensorI32> {
+        let n: usize = shape.iter().product();
+        ensure!(n == data.len(), "shape {shape:?} != data len {}", data.len());
+        Ok(TensorI32 { shape, data })
+    }
+
+    pub fn scalar(v: i32) -> TensorI32 {
+        TensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<TensorI32> {
+        let shape = literal_dims(lit)?;
+        let data = lit.to_vec::<i32>()?;
+        TensorI32::new(shape, data)
+    }
+}
+
+fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    match lit.shape()? {
+        xla::Shape::Array(a) => Ok(a.dims().iter().map(|&d| d as usize).collect()),
+        _ => err!("literal is not an array"),
+    }
+}
+
+/// Typed argument for runtime invocation.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+impl Arg {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::F32(t) => t.to_literal(),
+            Arg::I32(t) => t.to_literal(),
+        }
+    }
+
+    /// Direct host->device transfer (bypasses the Literal path, whose
+    /// C-side conversion both leaks and mishandles scalar shapes).
+    pub fn to_buffer(
+        &self,
+        client: &xla::PjRtClient,
+        device: Option<&xla::PjRtDevice>,
+    ) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            Arg::F32(t) => client.buffer_from_host_buffer(&t.data, &t.shape, device)?,
+            Arg::I32(t) => client.buffer_from_host_buffer(&t.data, &t.shape, device)?,
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => &t.shape,
+            Arg::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F32(_) => "f32",
+            Arg::I32(_) => "i32",
+        }
+    }
+}
+
+impl From<TensorF32> for Arg {
+    fn from(t: TensorF32) -> Arg {
+        Arg::F32(t)
+    }
+}
+
+impl From<TensorI32> for Arg {
+    fn from(t: TensorI32) -> Arg {
+        Arg::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn row_access() {
+        let t = TensorF32::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.at2(0, 2), 2.0);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = TensorF32::scalar(7.0);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are an error; every accessor records its key so `finish()`
+//! can report unused arguments.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Error, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        items: I,
+        known_flags: &[&str],
+    ) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if it.peek().is_some() {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    return Err(Error::msg(format!("--{body} needs a value")));
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn parse(known_flags: &[&str]) -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.used.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.used.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> Result<String> {
+        self.opt_str(name)
+            .map(str::to_string)
+            .ok_or_else(|| Error::msg(format!("missing required --{name}")))
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            Some(s) => Ok(s.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            Some(s) => Ok(s.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            Some(s) => Ok(s.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any option that was provided but never read.
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        for k in self.opts.keys() {
+            if !used.iter().any(|u| u == k) {
+                return Err(Error::msg(format!("unknown option --{k}")));
+            }
+        }
+        for f in &self.flags {
+            if !used.iter().any(|u| u == f) {
+                return Err(Error::msg(format!("unknown flag --{f}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positional() {
+        let a = Args::parse_from(toks("--x 1 --y=2 --verbose pos1 pos2"),
+                                 &["verbose"]).unwrap();
+        assert_eq!(a.usize("x", 0).unwrap(), 1);
+        assert_eq!(a.usize("y", 0).unwrap(), 2);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1", "pos2"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_caught_by_finish() {
+        let a = Args::parse_from(toks("--mystery 5"), &[]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse_from(toks(""), &[]).unwrap();
+        assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(toks(""), &[]).unwrap();
+        assert_eq!(a.f64("lr", 0.001).unwrap(), 0.001);
+        assert_eq!(a.str("name", "d"), "d");
+        assert!(!a.flag("quiet"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Shared utilities: error type, CLI args, JSON, stats, logging, prop-testing.
+
+pub mod args;
+pub mod json;
+pub mod quickprop;
+pub mod stats;
+
+use std::fmt;
+
+/// Library-wide error type (anyhow-style but owned; carries a message chain).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<S: Into<String>>(s: S) -> Error {
+        Error { msg: s.into() }
+    }
+
+    pub fn context<S: Into<String>>(self, s: S) -> Error {
+        Error { msg: format!("{}: {}", s.into(), self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(format!("io: {e}"))
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(format!("xla: {e}"))
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(format!("parse int: {e}"))
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(format!("parse float: {e}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `err!(...)` — format an `Err(Error)`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { Err($crate::util::Error::msg(format!($($arg)*))) };
+}
+
+/// `ensure!(cond, ...)` — bail with a formatted error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+/// Wall-clock timer for coarse phase timing.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Log level gate, settable via `MIRACLE_LOG` (0=quiet, 1=info, 2=debug).
+pub fn log_level() -> u8 {
+    static LEVEL: once_cell::sync::OnceCell<u8> = once_cell::sync::OnceCell::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var("MIRACLE_LOG")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1)
+    })
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 { eprintln!("[miracle] {}", format!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 { eprintln!("[miracle:dbg] {}", format!($($arg)*)); }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_context_chains() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+}

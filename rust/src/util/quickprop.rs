@@ -1,0 +1,112 @@
+//! Mini property-based testing framework (proptest substitute for the
+//! offline vendor set).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure against `cases`
+//! independently seeded generators. On failure it re-runs a bounded shrink
+//! loop over the seed space is not attempted (seeds are reported instead so
+//! a failure is reproducible: re-run with `QuickProp::with_seed`).
+
+use crate::prng::Pcg64;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_u64(&mut self, len: usize) -> Vec<u64> {
+        (0..len).map(|_| self.rng.next_u64()).collect()
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Run `prop` for `cases` random cases; panic with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xD1B54A32D192ED03);
+        let mut g = Gen { rng: Pcg64::seed(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn with_seed<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Pcg64::seed(seed), seed };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 50, |g| {
+            let a = g.i64_in(-1000, 1000);
+            let b = g.i64_in(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges respected", 100, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        });
+    }
+}

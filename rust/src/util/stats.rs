@@ -1,0 +1,102 @@
+//! Summary statistics + a micro-benchmark harness (criterion substitute).
+
+/// Streaming summary of a sample of f64s.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(2).saturating_sub(1) as f64;
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| s[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        max: s[n - 1],
+        p50: pct(0.50),
+        p95: pct(0.95),
+        p99: pct(0.99),
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls; returns
+/// per-iteration seconds.
+pub fn bench_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Pretty row for bench output: name, mean time, throughput note.
+pub fn report_bench(name: &str, samples: &[f64], unit_per_iter: Option<(f64, &str)>) {
+    let s = summarize(samples);
+    let mut line = format!(
+        "{name:<44} {:>10.3} us/iter  (p50 {:.3}, p95 {:.3}, n={})",
+        s.mean * 1e6,
+        s.p50 * 1e6,
+        s.p95 * 1e6,
+        s.n
+    );
+    if let Some((units, label)) = unit_per_iter {
+        line.push_str(&format!("  {:>10.2} {label}/s", units / s.mean));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).n, 0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0usize;
+        let samples = bench_fn(2, 5, || count += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(count, 7);
+    }
+}

@@ -1,0 +1,67 @@
+//! Baselines against the dense tiny artifacts: train deterministically,
+//! compress with each baseline, verify the quality/size trade-off is sane
+//! and the eval path (eval_full) agrees with the block path.
+
+use miracle::baselines::deepcomp::DeepCompCfg;
+use miracle::baselines::bayescomp::BayesCompCfg;
+use miracle::baselines::runner;
+use miracle::coordinator::eval_error_full;
+use miracle::data;
+use miracle::runtime::{self, Runtime};
+
+fn datasets() -> (data::Dataset, data::Dataset) {
+    (
+        data::synth_protos(512, 16, 4, 1234),
+        data::synth_protos(512, 16, 4, 1234 ^ 0x7E57),
+    )
+}
+
+#[test]
+fn dense_training_learns_and_baselines_trade_off() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let post = runner::train_dense(&arts, &train, 600, 5e-3, 512.0, 7).unwrap();
+
+    // the deterministic means classify well
+    let err = eval_error_full(&arts, &post.mu_full, &test).unwrap();
+    assert!(err < 0.15, "dense test error {err}");
+
+    let points = runner::baseline_suite(
+        &arts,
+        &post,
+        &test,
+        &DeepCompCfg { sparsity: 0.5, clusters: 16, ..Default::default() },
+        &BayesCompCfg::default(),
+    )
+    .unwrap();
+    assert_eq!(points.len(), 4); // uncompressed, deep, weightless, bayes
+    let uncompressed = &points[0];
+    let deep = &points[1];
+    assert_eq!(uncompressed.bits, arts.meta.n_total * 32);
+    // compression achieved
+    assert!(deep.bits < uncompressed.bits / 3, "deep bits {}", deep.bits);
+    // bounded quality loss on this easy task
+    assert!(
+        deep.test_error <= uncompressed.test_error + 0.25,
+        "deep err {} vs {}",
+        deep.test_error,
+        uncompressed.test_error
+    );
+}
+
+#[test]
+fn deepcomp_sweep_is_monotone_in_size() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let post = runner::train_dense(&arts, &train, 400, 5e-3, 512.0, 8).unwrap();
+    let pts = runner::deepcomp_sweep(
+        &arts,
+        &post,
+        &test,
+        &[(0.3, 32), (0.7, 16), (0.9, 8)],
+    )
+    .unwrap();
+    assert!(pts[0].bits > pts[1].bits && pts[1].bits > pts[2].bits);
+}

@@ -1,0 +1,152 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state management) — no PJRT required; pure control-plane logic.
+
+use miracle::codec::MrcFile;
+use miracle::coordinator::BetaController;
+use miracle::model::Layout;
+use miracle::prng::{categorical_from_logits, Pcg64, StreamingCategorical};
+use miracle::runtime::ModelMeta;
+use miracle::util::quickprop::{check, Gen};
+
+fn random_meta(g: &mut Gen) -> ModelMeta {
+    let n_layers = g.usize_in(1, 4);
+    let layer_counts: Vec<usize> = (0..n_layers).map(|_| g.usize_in(4, 200)).collect();
+    let layer_slots: Vec<usize> = layer_counts
+        .iter()
+        .map(|&c| g.usize_in(1, c))
+        .collect();
+    let n_slots: usize = layer_slots.iter().sum();
+    let s = g.usize_in(1, 16);
+    let b = n_slots / s + 1;
+    ModelMeta {
+        name: "prop".into(),
+        b,
+        s,
+        k_chunk: 1 << g.usize_in(0, 8),
+        n_total: layer_counts.iter().sum(),
+        n_slots,
+        n_layers,
+        layer_slots,
+        layer_counts,
+        batch: 4,
+        eval_batch: 4,
+        classes: 2,
+        input_shape: vec![3],
+    }
+}
+
+#[test]
+fn layout_assembles_every_position_to_a_real_slot() {
+    check("layout real slots", 60, |g| {
+        let meta = random_meta(g);
+        let layout = Layout::generate(&meta, g.rng.next_u64());
+        assert_eq!(layout.assemble_map.len(), meta.n_total);
+        for &t in &layout.assemble_map {
+            let t = t as usize;
+            assert!(t < meta.b * meta.s);
+            assert!(layout.slot_mask[t] > 0.0, "position mapped to padding");
+        }
+        let real: usize = layout.slot_mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(real, meta.n_slots);
+    });
+}
+
+#[test]
+fn layout_layer_map_consistent_with_slots() {
+    check("layout layer map", 40, |g| {
+        let meta = random_meta(g);
+        let layout = Layout::generate(&meta, g.rng.next_u64());
+        // positions of layer l must land on slots labeled l
+        let mut pos = 0usize;
+        for (l, &count) in meta.layer_counts.iter().enumerate() {
+            for _ in 0..count {
+                let bpos = layout.assemble_map[pos] as usize;
+                assert_eq!(layout.layer_map[bpos], l as i32);
+                pos += 1;
+            }
+        }
+    });
+}
+
+#[test]
+fn beta_controller_is_monotone_in_kl() {
+    check("beta monotone", 60, |g| {
+        let b = g.usize_in(1, 50);
+        let bits = g.usize_in(2, 20) as u8;
+        let mut ctl = BetaController::new(b, 1e-6, 0.01, bits);
+        let goal = ctl.c_loc_nats;
+        let kl: Vec<f32> = (0..b)
+            .map(|_| g.f32_in(0.0, 2.0 * goal as f32))
+            .collect();
+        let fm = vec![0.0f32; b];
+        let before = ctl.beta.clone();
+        ctl.update(&kl, &fm);
+        for i in 0..b {
+            if (kl[i] as f64) > goal {
+                assert!(ctl.beta[i] > before[i]);
+            } else {
+                assert!(ctl.beta[i] < before[i]);
+            }
+        }
+    });
+}
+
+#[test]
+fn streaming_sampler_matches_batch_for_any_chunking() {
+    check("streaming categorical", 60, |g| {
+        let n = g.usize_in(1, 2000);
+        let logits: Vec<f32> = (0..n).map(|_| g.f32_in(-5.0, 5.0)).collect();
+        let seed = g.rng.next_u64();
+        let batch = categorical_from_logits(&mut Pcg64::seed(seed), &logits);
+        let mut stream = StreamingCategorical::new(Pcg64::seed(seed));
+        let mut i = 0usize;
+        while i < n {
+            let step = g.usize_in(1, 128).min(n - i);
+            stream.push(&logits[i..i + step]);
+            i += step;
+        }
+        let (idx, _) = stream.finish();
+        assert_eq!(idx, batch);
+    });
+}
+
+#[test]
+fn mrc_round_trips_for_any_geometry() {
+    check("mrc geometry", 60, |g| {
+        let b = g.usize_in(1, 500);
+        let bits = g.usize_in(1, 30) as u8;
+        let mrc = MrcFile {
+            model: format!("m{}", g.usize_in(0, 9)),
+            layout_seed: g.rng.next_u64(),
+            protocol_seed: g.rng.next_u32() as i32,
+            b,
+            s: g.usize_in(1, 64),
+            k_chunk: 1 << g.usize_in(0, 12),
+            c_loc_bits: bits,
+            lsp: (0..g.usize_in(1, 8)).map(|_| g.f32_in(-6.0, 2.0)).collect(),
+            indices: (0..b)
+                .map(|_| g.rng.next_u64() & ((1u64 << bits) - 1))
+                .collect(),
+        };
+        let rt = MrcFile::from_bytes(&mrc.to_bytes()).unwrap();
+        assert_eq!(rt, mrc);
+        // size accounting: payload + bounded header
+        assert!(rt.total_bits() >= rt.payload_bits());
+        assert!(rt.total_bits() <= rt.payload_bits() + 8 * (64 + rt.lsp.len() * 4) + 256);
+    });
+}
+
+#[test]
+fn block_lsp_respects_layer_table_for_random_layouts() {
+    check("block lsp", 40, |g| {
+        let meta = random_meta(g);
+        let layout = Layout::generate(&meta, g.rng.next_u64());
+        let lsp: Vec<f32> = (0..meta.n_layers).map(|_| g.f32_in(-4.0, 0.0)).collect();
+        for b in 0..meta.b.min(10) {
+            let v = layout.block_lsp(b, &lsp);
+            for (j, &x) in v.iter().enumerate() {
+                assert_eq!(x, lsp[layout.layer_map[b * meta.s + j] as usize]);
+            }
+        }
+    });
+}
