@@ -31,6 +31,7 @@ fn cfg_base(i0: usize, i: usize, bits: u8, train_len: usize) -> MiracleCfg {
 }
 
 fn main() -> Result<()> {
+    // runs entirely on the native backend: lenet_synth is a built-in config
     banner("Ablations — hashing trick, intermediate iterations, C_loc");
     let s = scale();
     let rt = Runtime::cpu()?;

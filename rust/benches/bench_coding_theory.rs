@@ -1,4 +1,5 @@
-//! Theory benches (§3.2 Theorem 3.2 + Appendix A):
+//! Theory benches (§3.2 Theorem 3.2 + Appendix A) — backend-free: these
+//! exercise the pure coding-theory layer (`grc`, `prng`) only.
 //!
 //! * **C1** — bias of the proxy distribution q̃ vs the sample budget
 //!   K = exp(KL + t): |E_q̃[f] − E_q[f]| should fall as t grows and is

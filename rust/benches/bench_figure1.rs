@@ -1,7 +1,8 @@
 //! Regenerates **Figure 1**: test-error vs compressed-size trade-off curves
-//! for both benchmarks. MIRACLE's series comes from sweeping the per-block
-//! budget `C_loc` at fixed B (the paper's protocol for VGG); baseline series
-//! from sweeping their own operating knobs.
+//! for both benchmarks (runs on the default native backend; set
+//! `MIRACLE_BACKEND=xla` for the PJRT path). MIRACLE's series comes from
+//! sweeping the per-block budget `C_loc` at fixed B (the paper's protocol
+//! for VGG); baseline series from sweeping their own operating knobs.
 //!
 //! Expected shape (paper): the MIRACLE curve lies down-and-left of every
 //! baseline curve (Pareto dominance); error rises as size shrinks.

@@ -1,7 +1,8 @@
-//! L3 hot-path microbenches (§Perf of EXPERIMENTS.md):
+//! L3 hot-path microbenches:
 //!
-//! * PJRT invocation overhead + latency of each AOT entry (train_step,
-//!   score_chunk, decode_chunk, eval_batch)
+//! * backend invocation overhead + latency of each runtime entry
+//!   (train_step, score_chunk, decode_chunk, eval_batch) — pure-Rust
+//!   native kernels by default, PJRT with `--features xla`
 //! * encode throughput (blocks/s) and candidate-scoring throughput
 //!   (candidates/s) — the paper's compute hot-spot
 //! * bitstream + Huffman coder throughput
@@ -21,7 +22,7 @@ use miracle::util::stats::{bench_fn, report_bench};
 use miracle::util::Result;
 
 fn bench_artifacts(rt: &Runtime) -> Result<()> {
-    println!("\n-- AOT entry latency (tiny_mlp) --");
+    println!("\n-- backend entry latency (tiny_mlp) --");
     let arts = runtime::load(rt, "tiny_mlp")?;
     let train = data::synth_protos(512, 16, 4, 1);
     let cfg = MiracleCfg { i0: 0, data_scale: 512.0, ..Default::default() };
@@ -58,21 +59,26 @@ fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
     let arts = runtime::load(rt, "lenet_synth")?;
     let train = data::synth_mnist(1024, 1);
     let cfg = MiracleCfg { i0: 0, c_loc_bits: 12, data_scale: 1024.0, ..Default::default() };
+    let n_blocks = arts.meta.b;
+    let label = format!(
+        "train_step (B={},S={},batch={})",
+        arts.meta.b, arts.meta.s, arts.meta.batch
+    );
     let mut session = Session::new(&arts, &train, &cfg)?;
     let samples = bench_fn(2, 15, || {
         session.train_step(true).unwrap();
     });
-    report_bench("train_step (B=1417,S=16,batch=128)", &samples, None);
+    report_bench(&label, &samples, None);
 
     let mut b = 0usize;
     let samples = bench_fn(2, 15, || {
-        session.frozen_mask[b % 1417] = 0.0;
-        let _ = encoder::encode_block(&mut session, b % 1417).unwrap();
+        session.frozen_mask[b % n_blocks] = 0.0;
+        let _ = encoder::encode_block(&mut session, b % n_blocks).unwrap();
         b += 1;
     });
     let k = 1u64 << cfg.c_loc_bits;
     report_bench(
-        &format!("encode_block (K={k}, k_chunk=1024)"),
+        &format!("encode_block (K={k}, k_chunk={})", arts.meta.k_chunk),
         &samples,
         Some((k as f64, "candidates")),
     );
@@ -139,6 +145,7 @@ fn bench_server(rt: &Runtime) -> Result<()> {
         model: "tiny_mlp".into(),
         layout_seed: 0xABCD,
         protocol_seed: 7,
+        backend: arts.backend_family(),
         b: arts.meta.b,
         s: arts.meta.s,
         k_chunk: arts.meta.k_chunk,

@@ -1,6 +1,8 @@
 //! Regenerates **Table 1** of the paper: size / ratio / test-error rows for
 //! Uncompressed, Deep Compression, Bayesian Compression and MIRACLE at two
-//! operating points, on both benchmarks (synth-MNIST MLP, synth-CIFAR conv).
+//! operating points, on both benchmarks (synth-MNIST `lenet_synth`,
+//! synth-CIFAR `conv_synth` — both MLPs on the native backend, see
+//! `model::arch`).
 //!
 //! Expected *shape* (paper): MIRACLE rows Pareto-dominate — the low-error
 //! point beats every baseline's error at smaller size, the high-compression

@@ -15,7 +15,7 @@ use miracle::runtime::{self, Runtime};
 use miracle::util::Result;
 
 fn main() -> Result<()> {
-    // 1. PJRT runtime + AOT artifacts (built once by `make artifacts`)
+    // 1. runtime backend (pure-Rust native by default — nothing to build)
     let rt = Runtime::cpu()?;
     let arts = runtime::load(&rt, "tiny_mlp")?;
 

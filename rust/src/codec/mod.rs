@@ -1,11 +1,14 @@
-//! `.mrc` compressed-model container.
+//! `.mrc` compressed-model container. Byte-level spec: `docs/mrc-format.md`.
 //!
 //! A MIRACLE-compressed model is fully determined by (Algorithm 1's decode
-//! step): the model config name (which pins the AOT graphs = the shared
-//! candidate generator), the layout seed (hashing trick + block permutation),
-//! the protocol seed (jax PRNG base key), the per-layer encoding stddevs
-//! σ_p, the local budget `C_loc` in bits, and one `C_loc`-bit index per
-//! block. Everything else is replayed deterministically.
+//! step): the model config name (which pins the backend's shared candidate
+//! generator), the layout seed (hashing trick + block permutation), the
+//! protocol seed (the candidate-stream base key — jax threefry on the PJRT
+//! backend, [`crate::prng::candidate_stream`] on the native one), the
+//! per-layer encoding stddevs σ_p, the local budget `C_loc` in bits, and one
+//! `C_loc`-bit index per block. Everything else is replayed
+//! deterministically; the index payload is the Vitányi–Li "transmit the
+//! index of the sample" code.
 //!
 //! Layout (byte-aligned header, then a packed bit payload):
 //!
@@ -13,7 +16,8 @@
 //! magic "MRC1"
 //! varint  name_len, name bytes
 //! u64     layout_seed
-//! u32     protocol_seed (i32 jax seed)
+//! u32     protocol_seed (candidate-stream base key)
+//! u8      backend family (0 = native, 1 = pjrt)
 //! varint  B, S, k_chunk
 //! u8      c_loc_bits
 //! varint  n_layers, then n_layers * f32 (log sigma_p)
@@ -26,12 +30,42 @@ use crate::{ensure, err};
 
 pub const MAGIC: &[u8; 4] = b"MRC1";
 
+/// The backend family that encoded a container. Families use different
+/// candidate generators (jax threefry vs the Pcg64 seed tree), so decoding
+/// on the wrong family would silently produce garbage weights — the tag
+/// turns that into a hard error at load time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendFamily {
+    Native,
+    Pjrt,
+}
+
+impl BackendFamily {
+    pub fn code(self) -> u8 {
+        match self {
+            BackendFamily::Native => 0,
+            BackendFamily::Pjrt => 1,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<BackendFamily> {
+        match code {
+            0 => Ok(BackendFamily::Native),
+            1 => Ok(BackendFamily::Pjrt),
+            other => err!("unknown backend family code {other}"),
+        }
+    }
+
+}
+
 /// In-memory form of a compressed model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MrcFile {
     pub model: String,
     pub layout_seed: u64,
     pub protocol_seed: i32,
+    /// backend family whose candidate stream encoded the payload
+    pub backend: BackendFamily,
     pub b: usize,
     pub s: usize,
     pub k_chunk: usize,
@@ -55,6 +89,7 @@ impl MrcFile {
         }
         w.write_bits(self.layout_seed, 64);
         w.write_bits(self.protocol_seed as u32 as u64, 32);
+        w.write_bits(self.backend.code() as u64, 8);
         w.write_varint(self.b as u64);
         w.write_varint(self.s as u64);
         w.write_varint(self.k_chunk as u64);
@@ -86,6 +121,7 @@ impl MrcFile {
             .map_err(|_| Error::msg("bad model name encoding"))?;
         let layout_seed = r.read_bits(64)?;
         let protocol_seed = r.read_bits(32)? as u32 as i32;
+        let backend = BackendFamily::from_code(r.read_bits(8)? as u8)?;
         let b = r.read_varint()? as usize;
         let s = r.read_varint()? as usize;
         let k_chunk = r.read_varint()? as usize;
@@ -108,6 +144,7 @@ impl MrcFile {
             model,
             layout_seed,
             protocol_seed,
+            backend,
             b,
             s,
             k_chunk,
@@ -138,7 +175,26 @@ impl MrcFile {
         self.b * self.c_loc_bits as usize
     }
 
-    /// Sanity checks against runtime metadata.
+    /// Full load-time validation: geometry against the model metadata plus
+    /// the backend-family check — a container only decodes on the family
+    /// whose candidate stream encoded it.
+    pub fn validate_for(
+        &self,
+        meta: &crate::runtime::ModelMeta,
+        family: BackendFamily,
+    ) -> Result<()> {
+        self.validate(meta)?;
+        ensure!(
+            self.backend == family,
+            "container was encoded on the {:?} backend family but this \
+             model runs on {family:?} — candidate streams differ, decode \
+             would produce garbage",
+            self.backend
+        );
+        Ok(())
+    }
+
+    /// Geometry sanity checks against runtime metadata.
     pub fn validate(&self, meta: &crate::runtime::ModelMeta) -> Result<()> {
         ensure!(self.model == meta.name, "model mismatch: {} vs {}", self.model, meta.name);
         ensure!(self.b == meta.b && self.s == meta.s, "block geometry mismatch");
@@ -165,6 +221,7 @@ mod tests {
             model: "tiny_mlp".into(),
             layout_seed: 0xDEAD_BEEF_CAFE_F00D,
             protocol_seed: -7,
+            backend: BackendFamily::Native,
             b: 22,
             s: 8,
             k_chunk: 64,
@@ -206,6 +263,11 @@ mod tests {
                 model: "m".into(),
                 layout_seed: g.rng.next_u64(),
                 protocol_seed: g.rng.next_u32() as i32,
+                backend: if g.rng.next_u64() & 1 == 0 {
+                    BackendFamily::Native
+                } else {
+                    BackendFamily::Pjrt
+                },
                 b,
                 s: g.usize_in(1, 64),
                 k_chunk: 1 << g.usize_in(0, 12),
@@ -279,5 +341,22 @@ mod tests {
         let mut meta = meta_for(&m);
         meta.n_layers = 5;
         assert!(m.validate(&meta).is_err());
+    }
+
+    #[test]
+    fn validate_for_rejects_wrong_backend_family() {
+        let m = sample();
+        let meta = meta_for(&m);
+        m.validate_for(&meta, BackendFamily::Native).unwrap();
+        let err = m.validate_for(&meta, BackendFamily::Pjrt).unwrap_err();
+        assert!(format!("{err}").contains("backend family"), "{err}");
+    }
+
+    #[test]
+    fn backend_family_codes_round_trip() {
+        for f in [BackendFamily::Native, BackendFamily::Pjrt] {
+            assert_eq!(BackendFamily::from_code(f.code()).unwrap(), f);
+        }
+        assert!(BackendFamily::from_code(7).is_err());
     }
 }

@@ -1,11 +1,13 @@
 //! Block encoder/decoder — Algorithm 1 with chunked candidate scoring.
 //!
 //! `K = 2^C_loc` candidates per block are scored in `k_chunk`-sized
-//! invocations of the AOT `score_chunk` graph (the Pallas hot-spot); the
-//! categorical draw over the proxy distribution  q̃ streams over chunks via
-//! Gumbel-max so the full logit vector never needs to be materialized at
+//! invocations of the backend's `score_chunk` entry (the compute hot-spot);
+//! the categorical draw over the proxy distribution  q̃ streams over chunks
+//! via Gumbel-max so the full logit vector never needs to be materialized at
 //! once. Decoding replays `decode_chunk` for the chunk containing `k*` —
-//! shared randomness by construction (same jax PRNG derivation).
+//! shared randomness by construction (both entries derive candidates from
+//! the same `(protocol_seed, block, chunk)` stream: jax threefry on the
+//! PJRT backend, [`crate::prng::candidate_stream`] on the native one).
 
 use crate::codec::MrcFile;
 use crate::model::Layout;
@@ -78,7 +80,7 @@ pub fn encode_block(
                 Input::Dev(&mask_buf),
             ],
         )?;
-        let logits = outs[0].to_vec::<f32>()?;
+        let logits = outs[0].f32s()?;
         let take = if k < k_chunk { k as usize } else { logits.len() };
         sampler.push(&logits[..take]);
     }
@@ -117,7 +119,7 @@ pub fn decode_block_row(
             Arg::F32(TensorF32::new(vec![s], lsp_b.to_vec())?),
         ],
     )?;
-    let cand = TensorF32::from_literal(&outs[0])?;
+    let cand = outs[0].as_f32()?;
     ensure!(
         cand.shape == vec![meta.k_chunk, s],
         "decode_chunk returned {:?}",
@@ -128,7 +130,7 @@ pub fn decode_block_row(
 
 /// Decode a whole `.mrc` into block-layout weights [B*S].
 pub fn decode_model(arts: &ModelArtifacts, mrc: &MrcFile) -> Result<Vec<f32>> {
-    mrc.validate(&arts.meta)?;
+    mrc.validate_for(&arts.meta, arts.backend_family())?;
     let meta = &arts.meta;
     let layout = Layout::generate(meta, mrc.layout_seed);
     let mut w = vec![0f32; meta.b * meta.s];

@@ -4,8 +4,9 @@
 //! steps), the random block-encode schedule, per-block β annealing against
 //! the local coding goal `C_loc`, intermediate variational updates of
 //! not-yet-coded blocks, and final `.mrc` emission. All numerical work runs
-//! through AOT-compiled artifacts ([`crate::runtime`]); this module owns only
-//! control flow and state.
+//! through the pluggable runtime backend ([`crate::runtime`] — pure-Rust by
+//! default, AOT/PJRT behind the `xla` feature); this module owns only
+//! control flow and state. See `DESIGN.md` for the full Algorithm-2 walk.
 
 pub mod beta;
 pub mod checkpoint;
@@ -144,6 +145,7 @@ pub fn compress(
         model: arts.meta.name.clone(),
         layout_seed: cfg.layout_seed,
         protocol_seed: cfg.protocol_seed,
+        backend: arts.backend_family(),
         b: session.b(),
         s: arts.meta.s,
         k_chunk: arts.meta.k_chunk,
@@ -196,7 +198,7 @@ pub fn eval_error(
             "eval_batch",
             &[Input::Dev(&w_buf), Input::Dev(&amap_buf), Input::Host(&x_arg)],
         )?;
-        let logits = TensorF32::from_literal(&outs[0])?;
+        let logits = outs[0].as_f32()?;
         let n_valid = eb.min(test.len() - start);
         for i in 0..n_valid {
             let row = logits.row(i);
@@ -230,7 +232,7 @@ pub fn eval_error_full(
     while start < test.len() {
         let (x, y) = test.batch_range(start, eb);
         let outs = arts.invoke("eval_full", &[Arg::F32(w.clone()), Arg::F32(x)])?;
-        let logits = TensorF32::from_literal(&outs[0])?;
+        let logits = outs[0].as_f32()?;
         let n_valid = eb.min(test.len() - start);
         for i in 0..n_valid {
             let row = logits.row(i);

@@ -2,15 +2,15 @@
 //!
 //! One `Session` owns everything Algorithm 2 mutates: the variational state
 //! in block layout, the β controller, the freeze set, and the batch stream.
-//! `train_step` performs one in-graph Adam update through the AOT
-//! `train_step` artifact and applies the β annealing sweep on the returned
-//! per-block KL vector.
+//! `train_step` performs one in-graph Adam update through the backend's
+//! `train_step` entry point and applies the β annealing sweep on the
+//! returned per-block KL vector.
 
 use crate::data::{BatchIter, Dataset};
 use crate::model::init::{InitCfg, VarState};
 use crate::model::Layout;
 use crate::prng::Pcg64;
-use crate::runtime::ModelArtifacts;
+use crate::runtime::{DeviceBuf, ModelArtifacts};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::util::Result;
 
@@ -40,11 +40,11 @@ pub struct Session<'a> {
     train: &'a Dataset,
     iter: BatchIter,
     seed_rng: Pcg64,
-    // static layout maps, uploaded to the device once (perf: ~0.5 MB/step
-    // of host->device copies saved at lenet scale)
-    amap_buf: xla::PjRtBuffer,
-    lmap_buf: xla::PjRtBuffer,
-    smask_buf: xla::PjRtBuffer,
+    // static layout maps, uploaded to the backend once (perf: ~0.5 MB/step
+    // of re-validation + host->device copies saved at lenet scale)
+    amap_buf: DeviceBuf,
+    lmap_buf: DeviceBuf,
+    smask_buf: DeviceBuf,
 }
 
 impl<'a> Session<'a> {
@@ -152,19 +152,28 @@ impl<'a> Session<'a> {
             Input::Host(&host[18]),
         ];
         let outs = self.arts.invoke_mixed("train_step", &ins)?;
-        self.state.mu = outs[0].to_vec::<f32>()?;
-        self.state.rho = outs[1].to_vec::<f32>()?;
-        self.state.lsp = outs[2].to_vec::<f32>()?;
-        self.state.m_mu = outs[3].to_vec::<f32>()?;
-        self.state.v_mu = outs[4].to_vec::<f32>()?;
-        self.state.m_rho = outs[5].to_vec::<f32>()?;
-        self.state.v_rho = outs[6].to_vec::<f32>()?;
-        self.state.m_lsp = outs[7].to_vec::<f32>()?;
-        self.state.v_lsp = outs[8].to_vec::<f32>()?;
-        let loss = outs[9].to_vec::<f32>()?[0];
-        let ce = outs[10].to_vec::<f32>()?[0];
-        let acc = outs[11].to_vec::<f32>()?[0];
-        self.last_kl = outs[12].to_vec::<f32>()?;
+        // consume the outputs in order — moves the backend's buffers into
+        // the session state instead of re-copying ~0.5 MB/step at lenet
+        // scale
+        let mut outs = outs.into_iter();
+        let mut take = || -> Result<Vec<f32>> {
+            outs.next()
+                .ok_or_else(|| crate::util::Error::msg("train_step: missing output"))?
+                .into_f32s()
+        };
+        self.state.mu = take()?;
+        self.state.rho = take()?;
+        self.state.lsp = take()?;
+        self.state.m_mu = take()?;
+        self.state.v_mu = take()?;
+        self.state.m_rho = take()?;
+        self.state.v_rho = take()?;
+        self.state.m_lsp = take()?;
+        self.state.v_lsp = take()?;
+        let loss = take()?[0];
+        let ce = take()?[0];
+        let acc = take()?[0];
+        self.last_kl = take()?;
         self.state.step = step;
 
         self.betas.update(&self.last_kl, &self.frozen_mask);
@@ -207,7 +216,7 @@ impl<'a> Session<'a> {
     pub fn sample_weights(&self, seed: i32) -> Result<Vec<f32>> {
         let meta = &self.arts.meta;
         let bs = vec![meta.b, meta.s];
-        let outs = self.arts.invoke(
+        let mut outs = self.arts.invoke(
             "sample_weights",
             &[
                 Arg::F32(TensorF32::new(bs.clone(), self.state.mu.clone())?),
@@ -217,7 +226,7 @@ impl<'a> Session<'a> {
                 Arg::I32(TensorI32::scalar(seed)),
             ],
         )?;
-        Ok(outs[0].to_vec::<f32>()?)
+        outs.remove(0).into_f32s()
     }
 }
 

@@ -1,17 +1,24 @@
 //! # MIRACLE — Minimal Random Code Learning
 //!
-//! Rust + JAX + Pallas reproduction of *"Minimal Random Code Learning:
-//! Getting Bits Back from Compressed Model Parameters"* (Havasi, Peharz,
-//! Hernández-Lobato — ICLR 2019).
+//! Rust reproduction of *"Minimal Random Code Learning: Getting Bits Back
+//! from Compressed Model Parameters"* (Havasi, Peharz, Hernández-Lobato —
+//! ICLR 2019), with a pluggable execution backend.
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (full layering in `DESIGN.md`; the backend split is recorded
+//! in `docs/adr/001-backend-abstraction.md`, the container format in
+//! `docs/mrc-format.md`):
 //! * **L3 (this crate)** — the coordinator: Algorithm 2's block scheduler and
-//!   β-annealing controller, the `.mrc` codec, baselines, benches and an
-//!   inference server. Owns the event loop; python is never on the hot path.
-//! * **L2 (python/compile/model.py)** — variational model graphs, AOT-lowered
-//!   to HLO text artifacts loaded by [`runtime`].
+//!   β-annealing controller, the `.mrc` codec ([`codec`]), baselines, benches
+//!   and an inference server. Owns the event loop; python is never on the
+//!   hot path.
+//! * **L2 ([`runtime`])** — the [`runtime::Backend`] boundary. Default:
+//!   [`runtime::native::NativeBackend`], pure-Rust kernels over [`tensor`]
+//!   with built-in MLP configs ([`model::arch`]) — zero Python, zero XLA.
+//!   Optional (`--features xla` + `MIRACLE_BACKEND=xla`): AOT HLO artifacts
+//!   lowered from `python/compile/model.py`, executed via PJRT.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the importance
-//!   scoring hot-spot, fused sampled-linear and block-KL.
+//!   scoring hot-spot, fused sampled-linear and block-KL on the PJRT path;
+//!   the native backend's equivalents live in `runtime/native.rs`.
 
 pub mod baselines;
 pub mod bitstream;

@@ -5,6 +5,11 @@
 //! * `eval`      — decode an `.mrc` and report test error
 //! * `info`      — print the header + size accounting of an `.mrc`
 //! * `serve`     — run the batched inference server over an `.mrc`
+//! * `pareto`    — sweep `C_loc` and emit the (size, error) series as JSON
+//!
+//! Everything runs on the pure-Rust native backend by default — no Python,
+//! no artifacts. Set `MIRACLE_BACKEND=xla` (with a `--features xla` build
+//! plus `make artifacts`) for the PJRT path.
 //!
 //! Examples:
 //! ```text
@@ -254,6 +259,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     );
     println!("layout seed:  {:#x}", mrc.layout_seed);
     println!("protocol:     {}", mrc.protocol_seed);
+    println!("backend:      {:?}", mrc.backend);
     Ok(())
 }
 

@@ -1,0 +1,299 @@
+//! Built-in model configurations for the pure-Rust [`NativeBackend`].
+//!
+//! This is the Rust mirror of `python/compile/configs.py`: an architecture
+//! plus block geometry fully determines every entry-point shape, so the
+//! native backend can build its manifest ([`crate::runtime::Entry`] specs)
+//! without any Python or AOT artifacts on the box. Both sides agree on the
+//! flat parameter layout: layers in forward order, each contributing `W`
+//! (row-major `[fan_in, fan_out]`) then `b`.
+//!
+//! The native backend executes **dense (MLP) architectures only**; inputs
+//! with multi-dimensional per-example shapes (e.g. the `conv_synth` images)
+//! are treated as flattened feature vectors. See
+//! `docs/adr/001-backend-abstraction.md` for what this does and does not
+//! guarantee relative to the PJRT graphs.
+//!
+//! [`NativeBackend`]: crate::runtime::native::NativeBackend
+
+use crate::runtime::ModelMeta;
+use crate::util::Result;
+use crate::{ensure, err};
+
+/// One dense layer: `W [fan_in, fan_out]` then `b [fan_out]` in the flat
+/// parameter vector, starting at `offset`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DenseLayer {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub offset: usize,
+}
+
+impl DenseLayer {
+    /// Number of parameters (`W` + `b`).
+    pub fn count(&self) -> usize {
+        self.fan_in * self.fan_out + self.fan_out
+    }
+
+    /// Flat offset of the bias vector.
+    pub fn bias_offset(&self) -> usize {
+        self.offset + self.fan_in * self.fan_out
+    }
+}
+
+/// A fully-specified MLP configuration (architecture + block geometry).
+#[derive(Debug, Clone)]
+pub struct NetCfg {
+    pub name: String,
+    /// per-example input shape (flattened by the native forward pass)
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    /// trainable slots per layer after the hashing trick (== counts when
+    /// the layer is dense/un-hashed)
+    pub layer_slots: Vec<usize>,
+    pub b: usize,
+    pub s: usize,
+    pub k_chunk: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// derived: dense layers in forward order with flat offsets
+    pub layers: Vec<DenseLayer>,
+}
+
+impl NetCfg {
+    /// Build an MLP config. `layer_slots = None` means dense (no hashing).
+    pub fn mlp(
+        name: &str,
+        input_shape: Vec<usize>,
+        hidden: &[usize],
+        classes: usize,
+        layer_slots: Option<Vec<usize>>,
+        b: usize,
+        s: usize,
+        k_chunk: usize,
+        batch: usize,
+        eval_batch: usize,
+    ) -> NetCfg {
+        let input_dim: usize = input_shape.iter().product();
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        let mut layers = Vec::new();
+        let mut offset = 0usize;
+        for w in dims.windows(2) {
+            let layer = DenseLayer { fan_in: w[0], fan_out: w[1], offset };
+            offset += layer.count();
+            layers.push(layer);
+        }
+        let layer_slots = layer_slots
+            .unwrap_or_else(|| layers.iter().map(|l| l.count()).collect());
+        NetCfg {
+            name: name.to_string(),
+            input_shape,
+            classes,
+            layer_slots,
+            b,
+            s,
+            k_chunk,
+            batch,
+            eval_batch,
+            layers,
+        }
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.layers.iter().map(|l| l.count()).sum()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.layer_slots.iter().sum()
+    }
+
+    /// Flattened per-example feature count.
+    pub fn feature_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Runtime metadata (what a PJRT manifest would carry).
+    pub fn meta(&self) -> ModelMeta {
+        ModelMeta {
+            name: self.name.clone(),
+            b: self.b,
+            s: self.s,
+            k_chunk: self.k_chunk,
+            n_total: self.n_total(),
+            n_slots: self.n_slots(),
+            n_layers: self.layers.len(),
+            layer_slots: self.layer_slots.clone(),
+            layer_counts: self.layers.iter().map(|l| l.count()).collect(),
+            batch: self.batch,
+            eval_batch: self.eval_batch,
+            classes: self.classes,
+            input_shape: self.input_shape.clone(),
+        }
+    }
+
+    /// The invariants `python/compile/configs.py::validate` enforces.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.layer_slots.len() == self.layers.len(),
+            "{}: layer_slots has {} entries, arch has {} layers",
+            self.name,
+            self.layer_slots.len(),
+            self.layers.len()
+        );
+        for (layer, &m) in self.layers.iter().zip(&self.layer_slots) {
+            ensure!(
+                m > 0 && m <= layer.count(),
+                "{}: layer slots {m} outside (0, {}]",
+                self.name,
+                layer.count()
+            );
+        }
+        ensure!(
+            self.b * self.s >= self.n_slots(),
+            "{}: B*S={} < total slots {}",
+            self.name,
+            self.b * self.s,
+            self.n_slots()
+        );
+        if self.k_chunk == 0 || self.k_chunk & (self.k_chunk - 1) != 0 {
+            return err!("{}: k_chunk must be a power of two", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// Look up a built-in config by name. `*_dense` variants disable the hashing
+/// trick (slots == raw parameter counts) for the baseline-compression runs.
+pub fn builtin(name: &str) -> Option<NetCfg> {
+    let cfg = match name {
+        // 16-dim Gaussian-prototype task, 4 classes; already dense, so the
+        // `_dense` alias maps to the same geometry.
+        "tiny_mlp" | "tiny_mlp_dense" => NetCfg::mlp(
+            name,
+            vec![16],
+            &[8],
+            4,
+            None,
+            22,
+            8,
+            64,
+            32,
+            64,
+        ),
+        // LeNet-300-100-style MLP on synthetic 28x28 digits (flattened to
+        // 784), hashed ~3.8x: 52650 raw parameters -> 13898 slots.
+        "lenet_synth" => NetCfg::mlp(
+            name,
+            vec![784],
+            &[64, 32],
+            10,
+            Some(vec![12544, 1024, 330]),
+            435,
+            32,
+            256,
+            32,
+            128,
+        ),
+        "lenet_synth_dense" => NetCfg::mlp(
+            name,
+            vec![784],
+            &[64, 32],
+            10,
+            None,
+            1646,
+            32,
+            256,
+            32,
+            128,
+        ),
+        // Synthetic 16x16x3 texture task; the native backend runs it as an
+        // MLP over the flattened 768-dim pixels (hashed ~3.8x).
+        "conv_synth" => NetCfg::mlp(
+            name,
+            vec![16, 16, 3],
+            &[48, 24],
+            10,
+            Some(vec![9216, 588, 250]),
+            315,
+            32,
+            256,
+            32,
+            128,
+        ),
+        "conv_synth_dense" => NetCfg::mlp(
+            name,
+            vec![16, 16, 3],
+            &[48, 24],
+            10,
+            None,
+            1199,
+            32,
+            256,
+            32,
+            128,
+        ),
+        _ => return None,
+    };
+    Some(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_mlp_matches_seed_geometry() {
+        let cfg = builtin("tiny_mlp").unwrap();
+        cfg.validate().unwrap();
+        // 16->8->4 MLP: (16*8+8) + (8*4+4) = 136 + 36 = 172
+        assert_eq!(cfg.n_total(), 172);
+        assert_eq!(cfg.n_slots(), 172);
+        assert_eq!(cfg.layers[0].offset, 0);
+        assert_eq!(cfg.layers[1].offset, 136);
+        assert_eq!(cfg.layers[1].bias_offset(), 136 + 32);
+        let meta = cfg.meta();
+        assert_eq!(meta.layer_counts, vec![136, 36]);
+        assert_eq!(meta.b * meta.s, 176);
+        assert_eq!(meta.input_shape, vec![16]);
+    }
+
+    #[test]
+    fn all_builtins_validate() {
+        for name in [
+            "tiny_mlp",
+            "tiny_mlp_dense",
+            "lenet_synth",
+            "lenet_synth_dense",
+            "conv_synth",
+            "conv_synth_dense",
+        ] {
+            let cfg = builtin(name).unwrap();
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            // block geometry always covers the slot count
+            assert!(cfg.b * cfg.s >= cfg.n_slots(), "{name}");
+        }
+    }
+
+    #[test]
+    fn hashed_configs_shrink_slots() {
+        let h = builtin("lenet_synth").unwrap();
+        let d = builtin("lenet_synth_dense").unwrap();
+        assert_eq!(h.n_total(), d.n_total());
+        assert!(h.n_slots() * 3 < d.n_slots());
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(builtin("vgg_real").is_none());
+    }
+
+    #[test]
+    fn conv_synth_flattens_input() {
+        let cfg = builtin("conv_synth").unwrap();
+        assert_eq!(cfg.feature_dim(), 768);
+        assert_eq!(cfg.layers[0].fan_in, 768);
+        assert_eq!(cfg.meta().input_shape, vec![16, 16, 3]);
+    }
+}

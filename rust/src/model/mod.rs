@@ -6,9 +6,11 @@
 //! layer `l`'s positions hash into `layer_slots[l]` buckets. Slots are then
 //! scattered into `B` blocks of `S` by a seed-derived random permutation.
 //! Rust composes the two maps into one gather (`assemble_map`) consumed by
-//! every AOT graph; the same seed therefore reconstructs the layout on the
-//! decoder side — only `layout_seed` travels in the `.mrc` header.
+//! every backend entry point; the same seed therefore reconstructs the
+//! layout on the decoder side — only `layout_seed` travels in the `.mrc`
+//! header.
 
+pub mod arch;
 pub mod init;
 
 use crate::prng::{mix64, Pcg64};

@@ -1,11 +1,23 @@
-//! Deterministic PRNGs and sampling for the coordinator.
+//! Deterministic PRNGs and sampling for the coordinator and the native
+//! backend.
 //!
-//! The *protocol* randomness (candidate weight generation) lives inside the
-//! AOT-compiled jax graphs (threefry, replayed identically by encoder and
-//! decoder — see `python/compile/model.py::_chunk_candidates`). The PRNGs
-//! here serve everything else: dataset synthesis, parameter init, block
-//! permutations, the encoder's categorical draw, and the mini property-test
-//! framework. All are seed-stable across runs and platforms.
+//! On the PJRT backend the *protocol* randomness (candidate weight
+//! generation) lives inside the AOT-compiled jax graphs (threefry, replayed
+//! identically by encoder and decoder — see
+//! `python/compile/model.py::_chunk_candidates`). On the native backend the
+//! same role is played by [`candidate_stream`], which mirrors jax's
+//! `fold_in` seed-tree derivation over [`Pcg64`]: encoder and decoder both
+//! derive the (seed, block, chunk) stream from here, so shared randomness
+//! holds by construction. [`eps_stream`] is the `PRNGKey(seed)` analogue
+//! for reparameterization noise. The remaining PRNGs serve dataset
+//! synthesis, parameter init, block permutations, the encoder's categorical
+//! draw, and the mini property-test framework.
+//!
+//! Determinism scope: the integer streams are bit-stable everywhere; the
+//! *normal* draws go through platform libm (`ln`, `sin_cos`), so replay is
+//! guaranteed per platform/toolchain but not CI-verified across platforms —
+//! decode a `.mrc` on the platform family that encoded it (see
+//! `docs/adr/001-backend-abstraction.md`).
 
 pub mod sampling;
 
@@ -144,6 +156,35 @@ impl Pcg64 {
     }
 }
 
+/// Domain-separation tags for the native backend's named random streams.
+const TAG_PROTOCOL: u64 = 0x4D52_4331_5052_4F54; // "MRC1PROT"
+const TAG_EPS: u64 = 0x4D52_4331_4550_5331; // "MRC1EPS1"
+
+/// Protocol randomness for the native backend: the candidate generator
+/// stream of `(protocol_seed, block, chunk)` — the jax
+/// `fold_in(fold_in(PRNGKey(seed), block), chunk)` analogue. This derivation
+/// is THE protocol constant shared by native encode and decode; changing it
+/// invalidates every natively-encoded `.mrc`. The normals drawn from the
+/// stream go through platform libm (see the module docs), so the replay
+/// guarantee is per platform/toolchain.
+pub fn candidate_stream(protocol_seed: i32, block: i32, chunk: i32) -> Pcg64 {
+    Pcg64::seed(mix64(protocol_seed as u32 as u64 ^ TAG_PROTOCOL))
+        .fold_in(block as u32 as u64)
+        .fold_in(chunk as u32 as u64)
+}
+
+/// Reparameterization-noise stream for the native backend (the
+/// `jax.random.PRNGKey(seed)` analogue, shared by `train_step` and
+/// `sample_weights`).
+pub fn eps_stream(seed: i32) -> Pcg64 {
+    Pcg64::seed(mix64(seed as u32 as u64 ^ TAG_EPS))
+}
+
+/// Draw `n` standard normals as f32 from a stream.
+pub fn normals_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +242,26 @@ mod tests {
         for c in counts {
             assert!(c > 700, "{counts:?}");
         }
+    }
+
+    #[test]
+    fn candidate_stream_is_deterministic_per_coordinate() {
+        let a = normals_f32(&mut candidate_stream(7, 3, 1), 16);
+        let b = normals_f32(&mut candidate_stream(7, 3, 1), 16);
+        assert_eq!(a, b);
+        // any coordinate change moves the stream
+        for (s, blk, ch) in [(8, 3, 1), (7, 4, 1), (7, 3, 2)] {
+            let c = normals_f32(&mut candidate_stream(s, blk, ch), 16);
+            assert_ne!(a, c, "stream collision at ({s},{blk},{ch})");
+        }
+    }
+
+    #[test]
+    fn eps_stream_differs_from_candidate_stream() {
+        let a = normals_f32(&mut eps_stream(7), 16);
+        let b = normals_f32(&mut candidate_stream(7, 0, 0), 16);
+        assert_ne!(a, b);
+        assert_eq!(a, normals_f32(&mut eps_stream(7), 16));
     }
 
     #[test]

@@ -1,21 +1,36 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Pluggable execution backends behind one manifest-validated boundary.
 //!
-//! `make artifacts` (python, build-time) writes one directory per model
-//! config containing `<entry>.hlo.txt` files plus `manifest.json`. This
-//! module compiles every entry on the PJRT CPU client once and exposes a
-//! typed `invoke` with shape/dtype validation against the manifest — the only
-//! boundary between the rust hot path and XLA.
+//! The coordinator (L3) never talks to a compute substrate directly: every
+//! numerical entry point (`train_step`, `score_chunk`, `decode_chunk`,
+//! `eval_batch`, `eval_full`, `sample_weights`) goes through
+//! [`ModelArtifacts::invoke`] / [`ModelArtifacts::invoke_mixed`], which
+//! validate argument shapes and dtypes against the model's manifest
+//! ([`Entry`] specs) and then dispatch to a [`Backend`]:
+//!
+//! * [`native::NativeBackend`] — the default. Executes every entry point in
+//!   pure Rust over [`crate::tensor`], with protocol randomness derived in
+//!   [`crate::prng`]; zero Python, zero XLA, zero pre-generated artifacts.
+//! * `pjrt` (behind the non-default `xla` cargo feature) — compiles AOT HLO
+//!   text artifacts produced by `python/compile/aot.py` on a PJRT client and
+//!   executes them on device.
+//!
+//! The two backends implement the same protocol but are **not** bit-identical
+//! sources of randomness: a `.mrc` file decodes correctly only on the backend
+//! family that encoded it. See `docs/adr/001-backend-abstraction.md`.
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use crate::tensor::Arg;
-use crate::util::json::Json;
 use crate::util::{Error, Result};
-use crate::{ensure, err, info};
+use crate::{ensure, err};
 
-/// Input/output spec of one artifact entry, from the manifest.
+/// Input/output spec of one entry point, from the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Spec {
     pub shape: Vec<usize>,
@@ -23,25 +38,38 @@ pub struct Spec {
 }
 
 impl Spec {
-    fn from_json(j: &Json) -> Result<Spec> {
-        Ok(Spec {
-            shape: j.get("shape")?.usize_arr()?,
-            dtype: j.get("dtype")?.as_str()?.to_string(),
-        })
+    pub fn f32(shape: Vec<usize>) -> Spec {
+        Spec { shape, dtype: "f32".to_string() }
+    }
+
+    pub fn i32(shape: Vec<usize>) -> Spec {
+        Spec { shape, dtype: "i32".to_string() }
     }
 }
 
-/// One compiled entry point.
+/// One manifest entry point: name + typed input/output specs, plus
+/// invocation accounting.
 pub struct Entry {
     pub name: String,
     pub inputs: Vec<Spec>,
     pub outputs: Vec<Spec>,
-    exe: xla::PjRtLoadedExecutable,
     pub invocations: RefCell<u64>,
     pub total_secs: RefCell<f64>,
 }
 
-/// Static facts about a compiled model config, mirrored from the manifest.
+impl Entry {
+    pub fn new(name: &str, inputs: Vec<Spec>, outputs: Vec<Spec>) -> Entry {
+        Entry {
+            name: name.to_string(),
+            inputs,
+            outputs,
+            invocations: RefCell::new(0),
+            total_secs: RefCell::new(0.0),
+        }
+    }
+}
+
+/// Static facts about a model config, mirrored from its manifest.
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
     pub name: String,
@@ -60,113 +88,73 @@ pub struct ModelMeta {
     pub input_shape: Vec<usize>,
 }
 
-/// A loaded artifact directory: compiled executables + metadata.
-pub struct ModelArtifacts {
-    pub meta: ModelMeta,
-    pub dir: PathBuf,
-    entries: BTreeMap<String, Entry>,
-    client: xla::PjRtClient,
+/// An uploaded tensor, resident wherever the backend computes. Obtained from
+/// [`ModelArtifacts::upload`]; reusable across [`ModelArtifacts::invoke_mixed`]
+/// calls to skip re-transfer of static data (layout maps, per-block
+/// constants). The shared validation layer trusts these; the native backend
+/// still re-checks shapes cheaply at execute time before indexing raw
+/// slices.
+pub enum DeviceBuf {
+    /// Host-resident copy (the native backend computes in place).
+    Host(Arg),
+    /// PJRT device buffer.
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtBuffer),
 }
 
-/// The PJRT client wrapper. One per process.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
-        info!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime { client })
-    }
-
-    /// Load and compile every entry of `artifacts/<model>/`.
-    pub fn load_model(&self, dir: &Path) -> Result<ModelArtifacts> {
-        let manifest_path = dir.join("manifest.json");
-        let manifest = Json::from_file(manifest_path.to_str().unwrap())
-            .map_err(|e| e.context(format!("loading {manifest_path:?}")))?;
-        let meta = Self::parse_meta(&manifest)?;
-        let mut entries = BTreeMap::new();
-        for (name, e) in manifest.get("entries")?.as_obj()? {
-            let file = dir.join(e.get("file")?.as_str()?);
-            let t = crate::util::Timer::start();
-            let proto = xla::HloModuleProto::from_text_file(
-                file.to_str()
-                    .ok_or_else(|| Error::msg("non-utf8 artifact path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            let inputs = e
-                .get("inputs")?
-                .as_arr()?
-                .iter()
-                .map(Spec::from_json)
-                .collect::<Result<Vec<_>>>()?;
-            let outputs = e
-                .get("outputs")?
-                .as_arr()?
-                .iter()
-                .map(Spec::from_json)
-                .collect::<Result<Vec<_>>>()?;
-            info!("compiled {}/{name} in {:.2}s", meta.name, t.secs());
-            entries.insert(
-                name.clone(),
-                Entry {
-                    name: name.clone(),
-                    inputs,
-                    outputs,
-                    exe,
-                    invocations: RefCell::new(0),
-                    total_secs: RefCell::new(0.0),
-                },
-            );
-        }
-        Ok(ModelArtifacts {
-            meta,
-            dir: dir.to_path_buf(),
-            entries,
-            client: self.client.clone(),
-        })
-    }
-
-    fn parse_meta(m: &Json) -> Result<ModelMeta> {
-        let eval_inputs = m
-            .get("entries")?
-            .get("eval_batch")?
-            .get("inputs")?
-            .as_arr()?;
-        ensure!(eval_inputs.len() == 3, "eval_batch should have 3 inputs");
-        let x_shape = Spec::from_json(&eval_inputs[2])?.shape;
-        Ok(ModelMeta {
-            name: m.get("config")?.as_str()?.to_string(),
-            b: m.get("B")?.as_usize()?,
-            s: m.get("S")?.as_usize()?,
-            k_chunk: m.get("k_chunk")?.as_usize()?,
-            n_total: m.get("n_total")?.as_usize()?,
-            n_slots: m.get("n_slots")?.as_usize()?,
-            n_layers: m.get("n_layers")?.as_usize()?,
-            layer_slots: m.get("layer_slots")?.usize_arr()?,
-            layer_counts: m.get("layer_counts")?.usize_arr()?,
-            batch: m.get("batch")?.as_usize()?,
-            eval_batch: m.get("eval_batch")?.as_usize()?,
-            classes: m.get("classes")?.as_usize()?,
-            input_shape: x_shape[1..].to_vec(),
-        })
-    }
-}
-
-/// Argument to `invoke_mixed`: freshly-uploaded host data or a cached
-/// device buffer (static maps, per-block constants).
+/// Argument to [`ModelArtifacts::invoke_mixed`]: freshly-validated host data
+/// or a cached device buffer (trusted — validated at upload sites).
 pub enum Input<'a> {
     Host(&'a Arg),
-    Dev(&'a xla::PjRtBuffer),
+    Dev(&'a DeviceBuf),
+}
+
+/// An execution substrate for manifest entry points. Implementations only
+/// execute; argument validation against the manifest happens once in
+/// [`ModelArtifacts`], so every backend enforces identical shape/dtype rules.
+pub trait Backend {
+    /// Short identifier ("native", "pjrt") for logs and error messages.
+    fn kind(&self) -> &'static str;
+
+    /// Protocol family recorded in `.mrc` headers — compile-enforced so a
+    /// new backend cannot forget to declare its candidate-stream identity.
+    fn family(&self) -> crate::codec::BackendFamily;
+
+    /// Transfer a host tensor to the backend's working residence.
+    fn upload(&self, arg: &Arg) -> Result<DeviceBuf>;
+
+    /// Execute `entry` with pre-validated inputs; returns host tensors.
+    fn run(&self, entry: &Entry, ins: &[Input]) -> Result<Vec<Arg>>;
+}
+
+/// A loaded model: manifest metadata + entry specs + the backend executing
+/// them. This is the only handle the coordinator, server, baselines, benches
+/// and tests hold.
+pub struct ModelArtifacts {
+    pub meta: ModelMeta,
+    entries: BTreeMap<String, Entry>,
+    backend: Box<dyn Backend>,
 }
 
 impl ModelArtifacts {
+    pub fn new(
+        meta: ModelMeta,
+        entries: BTreeMap<String, Entry>,
+        backend: Box<dyn Backend>,
+    ) -> ModelArtifacts {
+        ModelArtifacts { meta, entries, backend }
+    }
+
+    /// Which backend executes this model ("native", "pjrt").
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind()
+    }
+
+    /// The backend's protocol family (for `.mrc` headers and validation).
+    pub fn backend_family(&self) -> crate::codec::BackendFamily {
+        self.backend.family()
+    }
+
     pub fn entry(&self, name: &str) -> Result<&Entry> {
         self.entries
             .get(name)
@@ -174,13 +162,13 @@ impl ModelArtifacts {
     }
 
     /// Upload a host tensor once; reuse the returned buffer across calls.
-    pub fn upload(&self, arg: &Arg) -> Result<xla::PjRtBuffer> {
-        arg.to_buffer(&self.client, None)
+    pub fn upload(&self, arg: &Arg) -> Result<DeviceBuf> {
+        self.backend.upload(arg)
     }
 
-    /// Execute with a mix of host args (validated + uploaded now) and
-    /// pre-uploaded device buffers (trusted — validated at upload sites).
-    pub fn invoke_mixed(&self, name: &str, ins: &[Input]) -> Result<Vec<xla::Literal>> {
+    /// Execute with a mix of host args (validated now) and pre-uploaded
+    /// buffers (trusted — validated at upload sites).
+    pub fn invoke_mixed(&self, name: &str, ins: &[Input]) -> Result<Vec<Arg>> {
         let entry = self.entry(name)?;
         ensure!(
             ins.len() == entry.inputs.len(),
@@ -188,80 +176,21 @@ impl ModelArtifacts {
             ins.len(),
             entry.inputs.len()
         );
-        let t = crate::util::Timer::start();
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(ins.len());
         for (i, input) in ins.iter().enumerate() {
-            match input {
-                Input::Host(a) => {
-                    let spec = &entry.inputs[i];
-                    ensure!(
-                        a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
-                        "{name}: arg {i} is {}{:?}, expected {}{:?}",
-                        a.dtype(),
-                        a.shape(),
-                        spec.dtype,
-                        spec.shape
-                    );
-                    owned.push(a.to_buffer(&self.client, None)?);
-                }
-                Input::Dev(_) => {}
+            if let Input::Host(a) = input {
+                let spec = &entry.inputs[i];
+                ensure!(
+                    a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
+                    "{name}: arg {i} is {}{:?}, expected {}{:?}",
+                    a.dtype(),
+                    a.shape(),
+                    spec.dtype,
+                    spec.shape
+                );
             }
         }
-        let mut oi = 0usize;
-        for input in ins {
-            match input {
-                Input::Host(_) => {
-                    refs.push(&owned[oi]);
-                    oi += 1;
-                }
-                Input::Dev(b) => refs.push(b),
-            }
-        }
-        let result = entry.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let outs = tuple.to_tuple()?;
-        *entry.invocations.borrow_mut() += 1;
-        *entry.total_secs.borrow_mut() += t.secs();
-        ensure!(
-            outs.len() == entry.outputs.len(),
-            "{name}: {} outputs, {} expected",
-            outs.len(),
-            entry.outputs.len()
-        );
-        Ok(outs)
-    }
-
-    /// Execute an entry with shape/dtype validation; returns output literals.
-    pub fn invoke(&self, name: &str, args: &[Arg]) -> Result<Vec<xla::Literal>> {
-        let entry = self.entry(name)?;
-        ensure!(
-            args.len() == entry.inputs.len(),
-            "{name}: {} args given, {} expected",
-            args.len(),
-            entry.inputs.len()
-        );
-        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
-            ensure!(
-                arg.shape() == &spec.shape[..] && arg.dtype() == spec.dtype,
-                "{name}: arg {i} is {}{:?}, expected {}{:?}",
-                arg.dtype(),
-                arg.shape(),
-                spec.dtype,
-                spec.shape
-            );
-        }
-        // Explicit host->device transfer so every buffer is rust-owned and
-        // freed by Drop (the C-side `execute(literals)` path leaks its
-        // internal arg buffers — measured ~1.7 MB/step on train_step).
         let t = crate::util::Timer::start();
-        let buffers: Vec<xla::PjRtBuffer> = args
-            .iter()
-            .map(|a| a.to_buffer(&self.client, None))
-            .collect::<Result<Vec<_>>>()?;
-        let result = entry.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let outs = tuple.to_tuple()?;
+        let outs = self.backend.run(entry, ins)?;
         *entry.invocations.borrow_mut() += 1;
         *entry.total_secs.borrow_mut() += t.secs();
         ensure!(
@@ -273,7 +202,13 @@ impl ModelArtifacts {
         Ok(outs)
     }
 
-    /// (invocations, total seconds) per entry — perf accounting.
+    /// Execute an entry with full shape/dtype validation of every argument.
+    pub fn invoke(&self, name: &str, args: &[Arg]) -> Result<Vec<Arg>> {
+        let ins: Vec<Input> = args.iter().map(Input::Host).collect();
+        self.invoke_mixed(name, &ins)
+    }
+
+    /// (entry, invocations, total seconds) — perf accounting.
     pub fn invocation_stats(&self) -> Vec<(String, u64, f64)> {
         self.entries
             .values()
@@ -288,20 +223,83 @@ impl ModelArtifacts {
     }
 }
 
-/// Locate the artifacts root: $MIRACLE_ARTIFACTS or ./artifacts.
+/// Which backend family a [`Runtime`] hands out.
+enum BackendKind {
+    Native,
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtClient),
+}
+
+/// Backend selector. One per process; `cpu()` picks the native backend
+/// unless `MIRACLE_BACKEND=xla` requests the PJRT path (which requires
+/// building with `--features xla`).
+pub struct Runtime {
+    kind: BackendKind,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        match std::env::var("MIRACLE_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("native") => {
+                Ok(Runtime { kind: BackendKind::Native })
+            }
+            Ok("xla") | Ok("pjrt") => Runtime::pjrt(),
+            // reject typos loudly — a silent native fallback would let
+            // e.g. MIRACLE_BACKEND=XLA benchmark the wrong backend
+            Ok(other) => err!(
+                "unknown MIRACLE_BACKEND '{other}' (expected 'native' or 'xla')"
+            ),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    fn pjrt() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { kind: BackendKind::Pjrt(client) })
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn pjrt() -> Result<Runtime> {
+        err!(
+            "MIRACLE_BACKEND=xla requested, but this binary was built \
+             without the `xla` feature (cargo build --features xla)"
+        )
+    }
+}
+
+/// Locate the AOT artifacts root: $MIRACLE_ARTIFACTS or ./artifacts.
+/// Only meaningful for the PJRT backend.
 pub fn artifacts_root() -> PathBuf {
     std::env::var("MIRACLE_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// Convenience: load a model by config name from the artifacts root.
+/// Load a model by config name on the runtime's backend.
 pub fn load(rt: &Runtime, model: &str) -> Result<ModelArtifacts> {
-    let dir = artifacts_root().join(model);
-    if !dir.join("manifest.json").exists() {
-        return err!(
-            "no artifacts for '{model}' at {dir:?} — run `make artifacts` first"
-        );
+    match &rt.kind {
+        BackendKind::Native => match crate::model::arch::builtin(model) {
+            Some(cfg) => native::NativeBackend::load(cfg),
+            None => err!(
+                "no built-in native config named '{model}' \
+                 (see model::arch::builtin for the registry); the PJRT \
+                 artifact path needs MIRACLE_BACKEND=xla + --features xla"
+            ),
+        },
+        #[cfg(feature = "xla")]
+        BackendKind::Pjrt(client) => {
+            let dir = artifacts_root().join(model);
+            if !dir.join("manifest.json").exists() {
+                return err!(
+                    "no artifacts for '{model}' at {dir:?} — run `make artifacts` first"
+                );
+            }
+            pjrt::load_dir(client, &dir)
+        }
     }
-    rt.load_model(&dir)
 }

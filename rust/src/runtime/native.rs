@@ -1,0 +1,748 @@
+//! Pure-Rust reference backend: executes every manifest entry point on the
+//! host, with no Python, no XLA and no pre-generated artifacts.
+//!
+//! The implementations mirror the jax graphs in `python/compile/model.py`
+//! term by term (same objective, same closed-form KL gradients, same Adam
+//! constants) so the coordinator's Algorithm 2 control flow is identical on
+//! both backends. The differences are confined to randomness: protocol
+//! randomness (candidate generation) and reparameterization noise come from
+//! the seed-tree derivations in [`crate::prng`] instead of jax's threefry.
+//! Encoder and decoder share [`crate::prng::candidate_stream`], so the
+//! shared-randomness contract of Algorithm 1 holds by construction — but a
+//! `.mrc` encoded natively does not decode on the PJRT backend (and vice
+//! versa). See `docs/adr/001-backend-abstraction.md`.
+//!
+//! Architecture support is dense MLPs only ([`crate::model::arch`]);
+//! multi-dimensional inputs are treated as flattened feature vectors.
+
+use std::collections::BTreeMap;
+
+use crate::model::arch::{DenseLayer, NetCfg};
+use crate::prng;
+use crate::tensor::{Arg, TensorF32};
+use crate::util::Result;
+use crate::{ensure, err};
+
+use super::{Backend, DeviceBuf, Entry, Input, ModelArtifacts, ModelMeta, Spec};
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// The default execution backend: pure-Rust kernels over [`crate::tensor`].
+pub struct NativeBackend {
+    cfg: NetCfg,
+}
+
+impl NativeBackend {
+    /// Build a loaded model from a built-in config (the native analogue of
+    /// compiling an artifact directory).
+    pub fn load(cfg: NetCfg) -> Result<ModelArtifacts> {
+        cfg.validate()?;
+        let meta = cfg.meta();
+        let entries = entry_specs(&meta);
+        Ok(ModelArtifacts::new(
+            meta,
+            entries,
+            Box::new(NativeBackend { cfg }),
+        ))
+    }
+}
+
+/// The native manifest: same entry names and shapes the AOT path would load
+/// from `manifest.json`, derived from the config.
+fn entry_specs(meta: &ModelMeta) -> BTreeMap<String, Entry> {
+    let bs = || Spec::f32(vec![meta.b, meta.s]);
+    let lay = || Spec::f32(vec![meta.n_layers]);
+    let srow = || Spec::f32(vec![meta.s]);
+    let sf = || Spec::f32(vec![]);
+    let si = || Spec::i32(vec![]);
+    let mut x_shape = vec![meta.batch];
+    x_shape.extend_from_slice(&meta.input_shape);
+    let mut xe_shape = vec![meta.eval_batch];
+    xe_shape.extend_from_slice(&meta.input_shape);
+
+    let entries = [
+        Entry::new(
+            "train_step",
+            vec![
+                bs(),
+                bs(),
+                lay(),
+                bs(),
+                bs(),
+                bs(),
+                bs(),
+                lay(),
+                lay(),
+                si(),
+                Spec::f32(x_shape.clone()),
+                Spec::i32(vec![meta.batch]),
+                Spec::f32(vec![meta.b]),
+                Spec::f32(vec![meta.b]),
+                bs(),
+                si(),
+                Spec::i32(vec![meta.n_total]),
+                Spec::i32(vec![meta.b, meta.s]),
+                bs(),
+                sf(),
+                sf(),
+                sf(),
+            ],
+            vec![
+                bs(),
+                bs(),
+                lay(),
+                bs(),
+                bs(),
+                bs(),
+                bs(),
+                lay(),
+                lay(),
+                sf(),
+                sf(),
+                sf(),
+                Spec::f32(vec![meta.b]),
+            ],
+        ),
+        Entry::new(
+            "score_chunk",
+            vec![si(), si(), si(), srow(), srow(), srow(), srow()],
+            vec![Spec::f32(vec![meta.k_chunk])],
+        ),
+        Entry::new(
+            "decode_chunk",
+            vec![si(), si(), si(), srow()],
+            vec![Spec::f32(vec![meta.k_chunk, meta.s])],
+        ),
+        Entry::new(
+            "eval_batch",
+            vec![
+                bs(),
+                Spec::i32(vec![meta.n_total]),
+                Spec::f32(xe_shape.clone()),
+            ],
+            vec![Spec::f32(vec![meta.eval_batch, meta.classes])],
+        ),
+        Entry::new(
+            "eval_full",
+            vec![Spec::f32(vec![meta.n_total]), Spec::f32(xe_shape)],
+            vec![Spec::f32(vec![meta.eval_batch, meta.classes])],
+        ),
+        Entry::new(
+            "sample_weights",
+            vec![bs(), bs(), Spec::f32(vec![meta.b]), bs(), si()],
+            vec![bs()],
+        ),
+    ];
+    entries
+        .into_iter()
+        .map(|e| (e.name.clone(), e))
+        .collect()
+}
+
+/// Resolve every input to a host tensor (native buffers are host-resident).
+fn collect<'a>(ins: &'a [Input<'a>]) -> Result<Vec<&'a Arg>> {
+    ins.iter()
+        .map(|input| match input {
+            Input::Host(a) => Ok(*a),
+            Input::Dev(buf) => match buf {
+                DeviceBuf::Host(a) => Ok(a),
+                #[cfg(feature = "xla")]
+                DeviceBuf::Pjrt(_) => Err(crate::util::Error::msg(
+                    "PJRT device buffer passed to the native backend",
+                )),
+            },
+        })
+        .collect()
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn family(&self) -> crate::codec::BackendFamily {
+        crate::codec::BackendFamily::Native
+    }
+
+    fn upload(&self, arg: &Arg) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::Host(arg.clone()))
+    }
+
+    fn run(&self, entry: &Entry, ins: &[Input]) -> Result<Vec<Arg>> {
+        let args = collect(ins)?;
+        // The shared layer validates Host args only; Dev buffers are
+        // trusted there, but the native kernels index raw slices, so a
+        // wrong-shaped cached buffer would panic instead of erroring.
+        // Re-check every resolved argument here (cheap vs the kernels).
+        for (i, (a, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            ensure!(
+                a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
+                "{}: resolved arg {i} is {}{:?}, expected {}{:?}",
+                entry.name,
+                a.dtype(),
+                a.shape(),
+                spec.dtype,
+                spec.shape
+            );
+        }
+        match entry.name.as_str() {
+            "train_step" => self.train_step(&args),
+            "score_chunk" => self.score_chunk(&args),
+            "decode_chunk" => self.decode_chunk(&args),
+            "eval_batch" => self.eval_batch(&args),
+            "eval_full" => self.eval_full(&args),
+            "sample_weights" => self.sample_weights(&args),
+            other => err!("native backend has no entry '{other}'"),
+        }
+    }
+}
+
+fn f32_arg(shape: Vec<usize>, data: Vec<f32>) -> Result<Arg> {
+    Ok(Arg::F32(TensorF32::new(shape, data)?))
+}
+
+impl NativeBackend {
+    /// One Adam update of the beta-annealed objective (Eq. 3), mirroring
+    /// `make_train_step`: reparameterized forward, softmax CE, closed-form
+    /// block KL and its analytic gradients, frozen/padding masking.
+    fn train_step(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let meta_b = self.cfg.b;
+        let s = self.cfg.s;
+        let n_pad = meta_b * s;
+        let n_layers = self.cfg.layers.len();
+        let n = self.cfg.batch;
+        let classes = self.cfg.classes;
+
+        let mu = a[0].f32s()?;
+        let rho = a[1].f32s()?;
+        let lsp = a[2].f32s()?;
+        let m_mu = a[3].f32s()?;
+        let v_mu = a[4].f32s()?;
+        let m_rho = a[5].f32s()?;
+        let v_rho = a[6].f32s()?;
+        let m_lsp = a[7].f32s()?;
+        let v_lsp = a[8].f32s()?;
+        let step = a[9].i32s()?[0];
+        let x = a[10].f32s()?;
+        let y = a[11].i32s()?;
+        let beta = a[12].f32s()?;
+        let fm = a[13].f32s()?;
+        let fw = a[14].f32s()?;
+        let seed = a[15].i32s()?[0];
+        let amap = a[16].i32s()?;
+        let lmap = a[17].i32s()?;
+        let smask = a[18].f32s()?;
+        let data_scale = a[19].f32s()?[0];
+        let lsp_train = a[20].f32s()?[0];
+        let lr = a[21].f32s()?[0];
+
+        // eps ~ N(0, I) over [B, S] — the PRNGKey(seed) analogue, shared
+        // with sample_weights.
+        let mut eps_rng = prng::eps_stream(seed);
+        let eps = prng::normals_f32(&mut eps_rng, n_pad);
+
+        // per-block KL(q||p) and effective (pinned + masked) parameters
+        let mut kl_b = vec![0f32; meta_b];
+        let mut eps_eff = vec![0f32; n_pad];
+        let mut w_blocks = vec![0f32; n_pad];
+        let exp_rho: Vec<f32> = rho.iter().map(|r| r.exp()).collect();
+        for idx in 0..n_pad {
+            let blk = idx / s;
+            let lsp_e = lsp[lmap[idx] as usize];
+            let var_ratio = (2.0 * (rho[idx] - lsp_e)).exp();
+            let mu_term = {
+                let t = mu[idx] * (-lsp_e).exp();
+                t * t
+            };
+            let elem = lsp_e - rho[idx] + 0.5 * (var_ratio + mu_term) - 0.5;
+            kl_b[blk] += smask[idx] * elem;
+            let fmb = fm[blk];
+            let mu_eff = fmb * fw[idx] + (1.0 - fmb) * mu[idx];
+            eps_eff[idx] = (1.0 - fmb) * eps[idx] * smask[idx];
+            w_blocks[idx] = mu_eff + exp_rho[idx] * eps_eff[idx];
+        }
+
+        // assemble flat weights, forward, CE + accuracy
+        let w_full: Vec<f32> = amap
+            .iter()
+            .map(|&p| w_blocks[p as usize])
+            .collect();
+        let acts = forward(&self.cfg.layers, &w_full, x, n);
+        let logits = acts.last().expect("forward returns >=1 activation");
+        let (ce, acc, dlogits) = softmax_ce(logits, y, n, classes, data_scale);
+
+        // backprop to flat weights, scatter to block layout
+        let dw = backward(&self.cfg.layers, &w_full, x, &acts, dlogits, n);
+        let mut g_mu = vec![0f32; n_pad];
+        let mut g_rho = vec![0f32; n_pad];
+        for (pos, &bpos) in amap.iter().enumerate() {
+            let bpos = bpos as usize;
+            let g = dw[pos];
+            g_mu[bpos] += g * (1.0 - fm[bpos / s]);
+            g_rho[bpos] += g * exp_rho[bpos] * eps_eff[bpos];
+        }
+
+        // analytic KL gradients (cotangent beta_b * (1 - fm_b) per block)
+        let mut g_lsp = vec![0f32; n_layers];
+        for idx in 0..n_pad {
+            let blk = idx / s;
+            let gb = beta[blk] * (1.0 - fm[blk]);
+            if gb == 0.0 {
+                continue;
+            }
+            let li = lmap[idx] as usize;
+            let lsp_e = lsp[li];
+            let inv_vp = (-2.0 * lsp_e).exp();
+            let var_ratio = (2.0 * (rho[idx] - lsp_e)).exp();
+            let mask = smask[idx];
+            g_mu[idx] += mask * mu[idx] * inv_vp * gb;
+            g_rho[idx] += mask * (var_ratio - 1.0) * gb;
+            g_lsp[li] +=
+                mask * (1.0 - var_ratio - mu[idx] * mu[idx] * inv_vp) * gb;
+        }
+
+        // masked Adam update (bias-corrected, jax constants)
+        let t = step as f32;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        // frozen blocks and padding must not move
+        let mut live = vec![0f32; n_pad];
+        for i in 0..n_pad {
+            live[i] = (1.0 - fm[i / s]) * smask[i];
+            g_mu[i] *= live[i];
+            g_rho[i] *= live[i];
+        }
+        for g in g_lsp.iter_mut() {
+            *g *= lsp_train;
+        }
+        let lsp_live = vec![lsp_train; n_layers];
+        let (mu2, m_mu2, v_mu2) =
+            adam(mu, &g_mu, m_mu, v_mu, &live, lr, bc1, bc2);
+        let (rho2, m_rho2, v_rho2) =
+            adam(rho, &g_rho, m_rho, v_rho, &live, lr, bc1, bc2);
+        let (lsp2, m_lsp2, v_lsp2) =
+            adam(lsp, &g_lsp, m_lsp, v_lsp, &lsp_live, lr, bc1, bc2);
+
+        let kl_pen: f64 = kl_b
+            .iter()
+            .enumerate()
+            .map(|(b, &k)| (beta[b] * (1.0 - fm[b]) * k) as f64)
+            .sum();
+        let loss = (data_scale as f64 * ce as f64 + kl_pen) as f32;
+
+        let bs = vec![meta_b, s];
+        let lshape = vec![n_layers];
+        Ok(vec![
+            f32_arg(bs.clone(), mu2)?,
+            f32_arg(bs.clone(), rho2)?,
+            f32_arg(lshape.clone(), lsp2)?,
+            f32_arg(bs.clone(), m_mu2)?,
+            f32_arg(bs.clone(), v_mu2)?,
+            f32_arg(bs.clone(), m_rho2)?,
+            f32_arg(bs.clone(), v_rho2)?,
+            f32_arg(lshape.clone(), m_lsp2)?,
+            f32_arg(lshape, v_lsp2)?,
+            Arg::F32(TensorF32::scalar(loss)),
+            Arg::F32(TensorF32::scalar(ce)),
+            Arg::F32(TensorF32::scalar(acc)),
+            f32_arg(vec![meta_b], kl_b)?,
+        ])
+    }
+
+    /// Importance logits `log q(w_k) - log p(w_k)` for one candidate chunk
+    /// (Algorithm 1 line 4; the Pallas hot-spot on the PJRT path).
+    fn score_chunk(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let seed = a[0].i32s()?[0];
+        let block = a[1].i32s()?[0];
+        let chunk = a[2].i32s()?[0];
+        let mu_b = a[3].f32s()?;
+        let rho_b = a[4].f32s()?;
+        let lsp_b = a[5].f32s()?;
+        let mask_b = a[6].f32s()?;
+        let s = self.cfg.s;
+        let k_chunk = self.cfg.k_chunk;
+        let exp_lsp: Vec<f32> = lsp_b.iter().map(|l| l.exp()).collect();
+        let neg_exp_rho: Vec<f32> = rho_b.iter().map(|r| (-r).exp()).collect();
+        let mut rng = prng::candidate_stream(seed, block, chunk);
+        let mut logits = Vec::with_capacity(k_chunk);
+        for _ in 0..k_chunk {
+            let mut acc = 0f64;
+            for j in 0..s {
+                let z = rng.next_normal() as f32;
+                let w = exp_lsp[j] * z;
+                let zq = (w - mu_b[j]) * neg_exp_rho[j];
+                // log q - log p; the 0.5*log(2*pi) terms cancel
+                let term =
+                    (-0.5 * zq * zq - rho_b[j]) - (-0.5 * z * z - lsp_b[j]);
+                acc += (mask_b[j] * term) as f64;
+            }
+            logits.push(acc as f32);
+        }
+        Ok(vec![f32_arg(vec![k_chunk], logits)?])
+    }
+
+    /// Candidate weights `sigma_p * z` for one chunk — the decoder replays
+    /// the exact generator the encoder scored (shared randomness).
+    fn decode_chunk(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let seed = a[0].i32s()?[0];
+        let block = a[1].i32s()?[0];
+        let chunk = a[2].i32s()?[0];
+        let lsp_b = a[3].f32s()?;
+        let s = self.cfg.s;
+        let k_chunk = self.cfg.k_chunk;
+        let exp_lsp: Vec<f32> = lsp_b.iter().map(|l| l.exp()).collect();
+        let mut rng = prng::candidate_stream(seed, block, chunk);
+        let mut out = Vec::with_capacity(k_chunk * s);
+        for _ in 0..k_chunk {
+            for j in 0..s {
+                let z = rng.next_normal() as f32;
+                out.push(exp_lsp[j] * z);
+            }
+        }
+        Ok(vec![f32_arg(vec![k_chunk, s], out)?])
+    }
+
+    /// Logits from explicit block-layout weights (the serving path).
+    fn eval_batch(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let w_blocks = a[0].f32s()?;
+        let amap = a[1].i32s()?;
+        let x = a[2].f32s()?;
+        let w_full: Vec<f32> = amap
+            .iter()
+            .map(|&p| w_blocks[p as usize])
+            .collect();
+        self.logits_out(&w_full, x)
+    }
+
+    /// Logits from a raw flat weight vector (baseline path).
+    fn eval_full(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let w_full = a[0].f32s()?;
+        let x = a[1].f32s()?;
+        self.logits_out(w_full, x)
+    }
+
+    fn logits_out(&self, w_full: &[f32], x: &[f32]) -> Result<Vec<Arg>> {
+        let n = self.cfg.eval_batch;
+        let acts = forward(&self.cfg.layers, w_full, x, n);
+        let logits = acts.into_iter().last().expect("nonempty acts");
+        ensure!(
+            logits.len() == n * self.cfg.classes,
+            "native forward produced {} logits, expected {}",
+            logits.len(),
+            n * self.cfg.classes
+        );
+        f32_arg(vec![n, self.cfg.classes], logits).map(|a| vec![a])
+    }
+
+    /// One block-layout weight draw from q, frozen blocks pinned.
+    fn sample_weights(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let mu = a[0].f32s()?;
+        let rho = a[1].f32s()?;
+        let fm = a[2].f32s()?;
+        let fw = a[3].f32s()?;
+        let seed = a[4].i32s()?[0];
+        let s = self.cfg.s;
+        let n_pad = self.cfg.b * s;
+        let mut rng = prng::eps_stream(seed);
+        let eps = prng::normals_f32(&mut rng, n_pad);
+        let mut out = Vec::with_capacity(n_pad);
+        for idx in 0..n_pad {
+            let fmb = fm[idx / s];
+            let sampled = mu[idx] + rho[idx].exp() * eps[idx];
+            out.push(fmb * fw[idx] + (1.0 - fmb) * sampled);
+        }
+        f32_arg(vec![self.cfg.b, s], out).map(|a| vec![a])
+    }
+}
+
+/// One bias-corrected Adam update with a per-parameter update mask (frozen
+/// blocks / padding / lsp_train gating); returns (p', m', v').
+#[allow(clippy::too_many_arguments)]
+fn adam(
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut p2 = Vec::with_capacity(p.len());
+    let mut m2v = Vec::with_capacity(p.len());
+    let mut v2v = Vec::with_capacity(p.len());
+    for i in 0..p.len() {
+        let m2 = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        let v2 = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let upd = lr * (m2 / bc1) / ((v2 / bc2).sqrt() + ADAM_EPS);
+        p2.push(p[i] - upd * mask[i]);
+        m2v.push(m2);
+        v2v.push(v2);
+    }
+    (p2, m2v, v2v)
+}
+
+/// Forward pass: returns one activation vector per layer (`acts[i]` is the
+/// output of layer `i`, ReLU applied to all but the last; `acts.last()` is
+/// the logits). The input batch is read in place, never copied.
+fn forward(
+    layers: &[DenseLayer],
+    w: &[f32],
+    x: &[f32],
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers.len());
+    for (li, l) in layers.iter().enumerate() {
+        let (fi, fo) = (l.fan_in, l.fan_out);
+        let bias = &w[l.bias_offset()..l.bias_offset() + fo];
+        let mut out = vec![0f32; n * fo];
+        {
+            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+            for r in 0..n {
+                let xrow = &input[r * fi..(r + 1) * fi];
+                let orow = &mut out[r * fo..(r + 1) * fo];
+                orow.copy_from_slice(bias);
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv != 0.0 {
+                        let wrow =
+                            &w[l.offset + i * fo..l.offset + (i + 1) * fo];
+                        for j in 0..fo {
+                            orow[j] += xv * wrow[j];
+                        }
+                    }
+                }
+            }
+        }
+        if li + 1 != layers.len() {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        acts.push(out);
+    }
+    acts
+}
+
+/// Backprop of `dlogits` through the MLP (`acts` as returned by
+/// [`forward`], `x` the same input batch); returns the flat weight
+/// gradient. ReLU masks use the post-activations (`act > 0 ⟺ pre > 0`).
+fn backward(
+    layers: &[DenseLayer],
+    w: &[f32],
+    x: &[f32],
+    acts: &[Vec<f32>],
+    dlogits: Vec<f32>,
+    n: usize,
+) -> Vec<f32> {
+    let mut dw = vec![0f32; w.len()];
+    let mut d = dlogits;
+    for li in (0..layers.len()).rev() {
+        let l = &layers[li];
+        let (fi, fo) = (l.fan_in, l.fan_out);
+        let h_in: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+        for r in 0..n {
+            let drow = &d[r * fo..(r + 1) * fo];
+            let hrow = &h_in[r * fi..(r + 1) * fi];
+            for (i, &hv) in hrow.iter().enumerate() {
+                if hv != 0.0 {
+                    let dwrow =
+                        &mut dw[l.offset + i * fo..l.offset + (i + 1) * fo];
+                    for j in 0..fo {
+                        dwrow[j] += hv * drow[j];
+                    }
+                }
+            }
+            let dbias = &mut dw[l.bias_offset()..l.bias_offset() + fo];
+            for j in 0..fo {
+                dbias[j] += drow[j];
+            }
+        }
+        if li > 0 {
+            let mut dprev = vec![0f32; n * fi];
+            for r in 0..n {
+                let drow = &d[r * fo..(r + 1) * fo];
+                let hrow = &h_in[r * fi..(r + 1) * fi];
+                let prow = &mut dprev[r * fi..(r + 1) * fi];
+                for i in 0..fi {
+                    // ReLU gate on the *input* activation of this layer
+                    if hrow[i] > 0.0 {
+                        let wrow =
+                            &w[l.offset + i * fo..l.offset + (i + 1) * fo];
+                        let mut acc = 0f32;
+                        for j in 0..fo {
+                            acc += drow[j] * wrow[j];
+                        }
+                        prow[i] = acc;
+                    }
+                }
+            }
+            d = dprev;
+        }
+    }
+    dw
+}
+
+/// Stable softmax cross-entropy + accuracy; `dlogits` includes the
+/// `data_scale / batch` factor so it is the cotangent of the scaled loss.
+fn softmax_ce(
+    logits: &[f32],
+    y: &[i32],
+    n: usize,
+    classes: usize,
+    data_scale: f32,
+) -> (f32, f32, Vec<f32>) {
+    let mut ce_sum = 0f64;
+    let mut correct = 0usize;
+    let mut dlogits = vec![0f32; n * classes];
+    let scale = data_scale / n as f32;
+    for r in 0..n {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f64 = row.iter().map(|&v| ((v - max) as f64).exp()).sum();
+        let lse = max as f64 + sum.ln();
+        let yi = y[r] as usize;
+        ce_sum += lse - row[yi] as f64;
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+            let p = (((v as f64) - lse).exp()) as f32;
+            dlogits[r * classes + j] = p * scale;
+        }
+        dlogits[r * classes + yi] -= scale;
+        if best == yi {
+            correct += 1;
+        }
+    }
+    let ce = (ce_sum / n as f64) as f32;
+    let acc = correct as f32 / n as f32;
+    (ce, acc, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::builtin;
+
+    fn tiny() -> ModelArtifacts {
+        NativeBackend::load(builtin("tiny_mlp").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn manifest_has_all_entries() {
+        let arts = tiny();
+        for name in [
+            "train_step",
+            "score_chunk",
+            "decode_chunk",
+            "eval_batch",
+            "eval_full",
+            "sample_weights",
+        ] {
+            let e = arts.entry(name).unwrap();
+            assert!(!e.inputs.is_empty());
+            assert!(!e.outputs.is_empty());
+        }
+        assert_eq!(arts.backend_kind(), "native");
+    }
+
+    #[test]
+    fn decode_chunk_is_deterministic_and_seed_sensitive() {
+        let arts = tiny();
+        let s = arts.meta.s;
+        let lsp = Arg::F32(TensorF32::new(vec![s], vec![-1.0; s]).unwrap());
+        let scalar = |v: i32| Arg::I32(crate::tensor::TensorI32::scalar(v));
+        let run = |seed: i32| {
+            arts.invoke(
+                "decode_chunk",
+                &[scalar(seed), scalar(3), scalar(1), lsp.clone()],
+            )
+            .unwrap()[0]
+                .f32s()
+                .unwrap()
+                .to_vec()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn score_matches_decode_candidates() {
+        // score_chunk's logits must be computed on exactly the candidates
+        // decode_chunk returns (shared randomness within the backend)
+        let arts = tiny();
+        let s = arts.meta.s;
+        let scalar = |v: i32| Arg::I32(crate::tensor::TensorI32::scalar(v));
+        let row = |v: f32| Arg::F32(TensorF32::new(vec![s], vec![v; s]).unwrap());
+        let lsp = row(-0.5);
+        let outs = arts
+            .invoke(
+                "decode_chunk",
+                &[scalar(5), scalar(0), scalar(0), lsp.clone()],
+            )
+            .unwrap();
+        let cands = outs[0].as_f32().unwrap().clone();
+        let outs = arts
+            .invoke(
+                "score_chunk",
+                &[
+                    scalar(5),
+                    scalar(0),
+                    scalar(0),
+                    row(0.0),
+                    row(-0.5),
+                    lsp,
+                    row(1.0),
+                ],
+            )
+            .unwrap();
+        let logits = outs[0].f32s().unwrap().to_vec();
+        // with q == p (mu=0, rho=lsp), every importance logit is exactly 0
+        assert_eq!(cands.shape, vec![arts.meta.k_chunk, s]);
+        for &l in &logits {
+            assert!(l.abs() < 1e-5, "logit {l}");
+        }
+    }
+
+    #[test]
+    fn softmax_ce_gradient_matches_finite_difference() {
+        let logits = vec![0.3f32, -0.2, 0.9, 0.1, 0.0, -0.5];
+        let y = vec![2i32, 0];
+        let (ce, _, d) = softmax_ce(&logits, &y, 2, 3, 1.0);
+        let eps = 1e-3f32;
+        for i in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (ce_p, _, _) = softmax_ce(&lp, &y, 2, 3, 1.0);
+            let fd = (ce_p - ce) / eps;
+            assert!(
+                (fd - d[i]).abs() < 1e-2,
+                "grad[{i}]: fd {fd} vs analytic {}",
+                d[i]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_backward_shapes() {
+        let cfg = builtin("tiny_mlp").unwrap();
+        let w = vec![0.01f32; cfg.n_total()];
+        let x = vec![0.5f32; 4 * 16];
+        let acts = forward(&cfg.layers, &w, &x, 4);
+        assert_eq!(acts.len(), 2); // one activation per layer
+        assert_eq!(acts[1].len(), 4 * 4); // logits [batch, classes]
+        let dlogits = vec![0.1f32; 4 * 4];
+        let dw = backward(&cfg.layers, &w, &x, &acts, dlogits, 4);
+        assert_eq!(dw.len(), cfg.n_total());
+        // bias gradients of the last layer are sums of dlogits columns
+        let l = &cfg.layers[1];
+        for j in 0..4 {
+            assert!((dw[l.bias_offset() + j] - 0.4).abs() < 1e-5);
+        }
+    }
+}

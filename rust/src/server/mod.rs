@@ -3,12 +3,13 @@
 //!
 //! Requests are classification queries; the server decodes the `.mrc` via
 //! the shared-randomness generator (eagerly at startup, or block-by-block on
-//! demand in lazy mode), then serves batched forward passes through the AOT
-//! `eval_batch` graph.
+//! demand in lazy mode), then serves batched forward passes through the
+//! backend's `eval_batch` entry point.
 //!
-//! Threading model: PJRT handles are not `Send`, so the executor stays on
-//! the thread that built it; clients run on their own threads and talk to
-//! the server loop over an mpsc channel (router + dynamic batcher pattern).
+//! Threading model: backend handles are not assumed `Send` (PJRT's are
+//! not), so the executor stays on the thread that built it; clients run on
+//! their own threads and talk to the server loop over an mpsc channel
+//! (router + dynamic batcher pattern).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -83,7 +84,7 @@ pub struct Server<'a> {
 
 impl<'a> Server<'a> {
     pub fn new(arts: &'a ModelArtifacts, mrc: &'a MrcFile, cfg: ServerCfg) -> Result<Server<'a>> {
-        mrc.validate(&arts.meta)?;
+        mrc.validate_for(&arts.meta, arts.backend_family())?;
         let meta = &arts.meta;
         let layout = Layout::generate(meta, mrc.layout_seed);
         let mut server = Server {
@@ -197,7 +198,7 @@ impl<'a> Server<'a> {
                 ],
             )?;
             exec_times.push(t_exec.elapsed().as_secs_f64());
-            let logits = TensorF32::from_literal(&outs[0])?;
+            let logits = outs[0].as_f32()?;
             let done = Instant::now();
             for (i, r) in pending.drain(..).enumerate() {
                 let row = logits.row(i).to_vec();

@@ -1,4 +1,7 @@
-//! Minimal host tensors for shuttling data to/from the PJRT runtime.
+//! Minimal host tensors shuttled across the [`crate::runtime::Backend`]
+//! boundary. The native backend computes on these directly; the optional
+//! PJRT backend (`--features xla`) converts them to device literals via the
+//! feature-gated methods at the bottom.
 
 use crate::util::Result;
 use crate::{ensure, err};
@@ -57,6 +60,7 @@ impl TensorF32 {
         &mut self.data[i * w..(i + 1) * w]
     }
 
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {
@@ -66,6 +70,7 @@ impl TensorF32 {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<TensorF32> {
         let shape = literal_dims(lit)?;
         let data = lit.to_vec::<f32>()?;
@@ -91,6 +96,7 @@ impl TensorI32 {
         TensorI32 { shape: vec![], data: vec![v] }
     }
 
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         if self.shape.is_empty() {
             return Ok(xla::Literal::scalar(self.data[0]));
@@ -100,6 +106,7 @@ impl TensorI32 {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<TensorI32> {
         let shape = literal_dims(lit)?;
         let data = lit.to_vec::<i32>()?;
@@ -107,6 +114,7 @@ impl TensorI32 {
     }
 }
 
+#[cfg(feature = "xla")]
 fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
     match lit.shape()? {
         xla::Shape::Array(a) => Ok(a.dims().iter().map(|&d| d as usize).collect()),
@@ -122,6 +130,39 @@ pub enum Arg {
 }
 
 impl Arg {
+    /// The f32 payload, or an error for an i32 tensor.
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Arg::F32(t) => Ok(&t.data),
+            Arg::I32(_) => err!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// The i32 payload, or an error for an f32 tensor.
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Arg::I32(t) => Ok(&t.data),
+            Arg::F32(_) => err!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// The full f32 tensor (shape + data), for row access.
+    pub fn as_f32(&self) -> Result<&TensorF32> {
+        match self {
+            Arg::F32(t) => Ok(t),
+            Arg::I32(_) => err!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Consume into the f32 payload without copying (hot-path output path).
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            Arg::F32(t) => Ok(t.data),
+            Arg::I32(_) => err!("expected f32 tensor, got i32"),
+        }
+    }
+
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Arg::F32(t) => t.to_literal(),
@@ -131,6 +172,7 @@ impl Arg {
 
     /// Direct host->device transfer (bypasses the Literal path, whose
     /// C-side conversion both leaks and mishandles scalar shapes).
+    #[cfg(feature = "xla")]
     pub fn to_buffer(
         &self,
         client: &xla::PjRtClient,
@@ -191,5 +233,19 @@ mod tests {
         let t = TensorF32::scalar(7.0);
         assert!(t.shape.is_empty());
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn arg_accessors_are_typed() {
+        let f = Arg::F32(TensorF32::scalar(1.5));
+        assert_eq!(f.f32s().unwrap(), &[1.5]);
+        assert!(f.i32s().is_err());
+        assert_eq!(f.as_f32().unwrap().len(), 1);
+        let i = Arg::I32(TensorI32::scalar(3));
+        assert_eq!(i.i32s().unwrap(), &[3]);
+        assert!(i.f32s().is_err());
+        assert!(i.as_f32().is_err());
+        assert_eq!(f.into_f32s().unwrap(), vec![1.5]);
+        assert!(i.into_f32s().is_err());
     }
 }

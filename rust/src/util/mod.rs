@@ -37,6 +37,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Error {
         Error::msg(format!("xla: {e}"))
@@ -92,7 +93,7 @@ impl Timer {
 
 /// Log level gate, settable via `MIRACLE_LOG` (0=quiet, 1=info, 2=debug).
 pub fn log_level() -> u8 {
-    static LEVEL: once_cell::sync::OnceCell<u8> = once_cell::sync::OnceCell::new();
+    static LEVEL: std::sync::OnceLock<u8> = std::sync::OnceLock::new();
     *LEVEL.get_or_init(|| {
         std::env::var("MIRACLE_LOG")
             .ok()

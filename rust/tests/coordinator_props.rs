@@ -1,7 +1,7 @@
 //! Property-based tests on coordinator invariants (routing, batching,
 //! state management) — no PJRT required; pure control-plane logic.
 
-use miracle::codec::MrcFile;
+use miracle::codec::{BackendFamily, MrcFile};
 use miracle::coordinator::BetaController;
 use miracle::model::Layout;
 use miracle::prng::{categorical_from_logits, Pcg64, StreamingCategorical};
@@ -119,6 +119,7 @@ fn mrc_round_trips_for_any_geometry() {
             model: format!("m{}", g.usize_in(0, 9)),
             layout_seed: g.rng.next_u64(),
             protocol_seed: g.rng.next_u32() as i32,
+            backend: BackendFamily::Native,
             b,
             s: g.usize_in(1, 64),
             k_chunk: 1 << g.usize_in(0, 12),

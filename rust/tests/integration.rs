@@ -1,7 +1,9 @@
-//! Integration tests over the AOT artifacts + PJRT runtime + coordinator.
+//! Integration tests over the runtime backend + coordinator.
 //!
-//! These need `make artifacts` to have produced `artifacts/tiny_mlp/`.
-//! Run from the repo root (cargo sets CWD to the manifest dir).
+//! These run on the default pure-Rust native backend: no Python, no XLA and
+//! no pre-generated artifacts required. Setting `MIRACLE_BACKEND=xla` (with
+//! a `--features xla` build and `make artifacts`) exercises the same suite
+//! through the PJRT path.
 
 use miracle::codec::MrcFile;
 use miracle::coordinator::{self, encoder, MiracleCfg, Session};
@@ -247,6 +249,7 @@ fn server_respects_max_batch() {
         model: "tiny_mlp".into(),
         layout_seed: 0xABCD,
         protocol_seed: 7,
+        backend: arts.backend_family(),
         b: arts.meta.b,
         s: arts.meta.s,
         k_chunk: arts.meta.k_chunk,
@@ -360,6 +363,44 @@ fn checkpoint_rejects_wrong_model_geometry() {
 }
 
 #[test]
+fn decode_is_deterministic_across_fresh_backends() {
+    // Shared-randomness determinism: the same `.mrc` must decode to
+    // bit-identical block weights on two *independently constructed*
+    // runtimes/backends (nothing carried over but the container bytes).
+    let mk_mrc = |arts: &miracle::runtime::ModelArtifacts| MrcFile {
+        model: arts.meta.name.clone(),
+        layout_seed: 0x5EED,
+        protocol_seed: 11,
+        backend: arts.backend_family(),
+        b: arts.meta.b,
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: 10,
+        lsp: vec![-1.25f32; arts.meta.n_layers],
+        indices: (0..arts.meta.b as u64).map(|i| (i * 131) % 1024).collect(),
+    };
+    let decode_fresh = || {
+        let rt = Runtime::cpu().unwrap();
+        let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+        let mrc = mk_mrc(&arts);
+        coordinator::decode_model(&arts, &mrc).unwrap()
+    };
+    let w1 = decode_fresh();
+    let w2 = decode_fresh();
+    assert_eq!(w1, w2, "fresh backends must replay identical candidates");
+    assert!(w1.iter().any(|&v| v != 0.0));
+
+    // ...and the codebook is protocol-seed sensitive: a different seed in
+    // the container yields different weights
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mut other = mk_mrc(&arts);
+    other.protocol_seed = 12;
+    let w3 = coordinator::decode_model(&arts, &other).unwrap();
+    assert_ne!(w1, w3);
+}
+
+#[test]
 fn lazy_server_decodes_on_demand() {
     let rt = Runtime::cpu().unwrap();
     let arts = runtime::load(&rt, "tiny_mlp").unwrap();
@@ -367,6 +408,7 @@ fn lazy_server_decodes_on_demand() {
         model: "tiny_mlp".into(),
         layout_seed: 0xABCD,
         protocol_seed: 7,
+        backend: arts.backend_family(),
         b: arts.meta.b,
         s: arts.meta.s,
         k_chunk: arts.meta.k_chunk,
