@@ -1,12 +1,17 @@
 //! L3 hot-path microbenches:
 //!
 //! * backend invocation overhead + latency of each runtime entry
-//!   (train_step, score_chunk, decode_chunk, eval_batch) — pure-Rust
+//!   (train_step, score_block, decode_block, eval_batch) — pure-Rust
 //!   native kernels by default, PJRT with `--features xla`
 //! * encode throughput (blocks/s) and candidate-scoring throughput
 //!   (candidates/s) — the paper's compute hot-spot
 //! * bitstream + Huffman coder throughput
 //! * server throughput / latency under closed-loop clients
+//!
+//! Flags (after `--` under `cargo bench`):
+//! * `--json`  — additionally write `BENCH_runtime_perf.json` at the repo
+//!   root (machine-readable trajectory point; see `docs/perf.md`)
+//! * `--quick` — reduced iteration counts for CI smoke runs
 
 mod common;
 
@@ -18,43 +23,94 @@ use miracle::data;
 use miracle::prng::Pcg64;
 use miracle::runtime::{self, Runtime};
 use miracle::server::{spawn_clients, Server, ServerCfg};
-use miracle::util::stats::{bench_fn, report_bench};
+use miracle::util::json::Json;
+use miracle::util::pool;
+use miracle::util::stats::{bench_fn, report_bench, summarize};
 use miracle::util::Result;
 
-fn bench_artifacts(rt: &Runtime) -> Result<()> {
+#[derive(Clone, Copy)]
+struct Opts {
+    quick: bool,
+    json: bool,
+}
+
+impl Opts {
+    /// (warmup, iters) scaled down under --quick.
+    fn iters(&self, warmup: usize, iters: usize) -> (usize, usize) {
+        if self.quick {
+            (1, ((iters + 7) / 8).max(2))
+        } else {
+            (warmup, iters)
+        }
+    }
+}
+
+fn mean(samples: &[f64]) -> f64 {
+    summarize(samples).mean
+}
+
+fn bench_artifacts(rt: &Runtime, opts: &Opts) -> Result<(Json, &'static str)> {
     println!("\n-- backend entry latency (tiny_mlp) --");
     let arts = runtime::load(rt, "tiny_mlp")?;
+    let backend = arts.backend_kind();
+    let n_blocks = arts.meta.b;
     let train = data::synth_protos(512, 16, 4, 1);
     let cfg = MiracleCfg { i0: 0, data_scale: 512.0, ..Default::default() };
     let mut session = Session::new(&arts, &train, &cfg)?;
-    let samples = bench_fn(3, 30, || {
+    let (w, n) = opts.iters(3, 30);
+    let train_samples = bench_fn(w, n, || {
         session.train_step(true).unwrap();
     });
-    report_bench("train_step (B=22,S=8,batch=32)", &samples, None);
+    report_bench(
+        &format!(
+            "train_step (B={n_blocks},S={},batch={})",
+            arts.meta.s, arts.meta.batch
+        ),
+        &train_samples,
+        None,
+    );
 
     let mut b = 0usize;
-    let samples = bench_fn(3, 30, || {
+    let (wu, n) = opts.iters(3, 30);
+    let encode_samples = bench_fn(wu, n, || {
         // rotate blocks so freezing doesn't accumulate into the timing
-        session.frozen_mask[b % 22] = 0.0;
-        let _ = encoder::encode_block(&mut session, b % 22).unwrap();
+        session.frozen_mask[b % n_blocks] = 0.0;
+        let _ = encoder::encode_block(&mut session, b % n_blocks).unwrap();
         b += 1;
     });
     let k = 1u64 << cfg.c_loc_bits;
     report_bench(
-        &format!("encode_block (K={k}, k_chunk=64)"),
-        &samples,
+        &format!("encode_block (K={k}, k_chunk={})", arts.meta.k_chunk),
+        &encode_samples,
         Some((k as f64, "candidates")),
     );
 
     let lsp = vec![-2.0f32; arts.meta.s];
-    let samples = bench_fn(3, 50, || {
+    let (wu, n) = opts.iters(3, 50);
+    let decode_samples = bench_fn(wu, n, || {
         let _ = encoder::decode_block_row(&arts, 7, 3, 17, &lsp).unwrap();
     });
-    report_bench("decode_block_row", &samples, None);
-    Ok(())
+    report_bench("decode_block_row", &decode_samples, None);
+
+    let json = Json::obj(vec![
+        ("train_step_us", Json::num(mean(&train_samples) * 1e6)),
+        (
+            "encode_block",
+            Json::obj(vec![
+                ("k", Json::num(k as f64)),
+                ("mean_us", Json::num(mean(&encode_samples) * 1e6)),
+                (
+                    "candidates_per_s",
+                    Json::num(k as f64 / mean(&encode_samples)),
+                ),
+            ]),
+        ),
+        ("decode_block_us", Json::num(mean(&decode_samples) * 1e6)),
+    ]);
+    Ok((json, backend))
 }
 
-fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
+fn bench_lenet_hotpath(rt: &Runtime, opts: &Opts) -> Result<Json> {
     println!("\n-- paper-scale hot path (lenet_synth) --");
     let arts = runtime::load(rt, "lenet_synth")?;
     let train = data::synth_mnist(1024, 1);
@@ -65,13 +121,15 @@ fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
         arts.meta.b, arts.meta.s, arts.meta.batch
     );
     let mut session = Session::new(&arts, &train, &cfg)?;
-    let samples = bench_fn(2, 15, || {
+    let (w, n) = opts.iters(2, 15);
+    let train_samples = bench_fn(w, n, || {
         session.train_step(true).unwrap();
     });
-    report_bench(&label, &samples, None);
+    report_bench(&label, &train_samples, None);
 
     let mut b = 0usize;
-    let samples = bench_fn(2, 15, || {
+    let (wu, n) = opts.iters(2, 15);
+    let encode_samples = bench_fn(wu, n, || {
         session.frozen_mask[b % n_blocks] = 0.0;
         let _ = encoder::encode_block(&mut session, b % n_blocks).unwrap();
         b += 1;
@@ -79,7 +137,7 @@ fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
     let k = 1u64 << cfg.c_loc_bits;
     report_bench(
         &format!("encode_block (K={k}, k_chunk={})", arts.meta.k_chunk),
-        &samples,
+        &encode_samples,
         Some((k as f64, "candidates")),
     );
     // per-entry cumulative stats gathered by the runtime
@@ -91,28 +149,44 @@ fn bench_lenet_hotpath(rt: &Runtime) -> Result<()> {
             );
         }
     }
-    Ok(())
+
+    Ok(Json::obj(vec![
+        ("train_step_ms", Json::num(mean(&train_samples) * 1e3)),
+        (
+            "encode_block",
+            Json::obj(vec![
+                ("k", Json::num(k as f64)),
+                ("mean_ms", Json::num(mean(&encode_samples) * 1e3)),
+                (
+                    "candidates_per_s",
+                    Json::num(k as f64 / mean(&encode_samples)),
+                ),
+            ]),
+        ),
+    ]))
 }
 
-fn bench_bitstream() {
+fn bench_bitstream(opts: &Opts) -> Json {
     println!("\n-- bitstream / huffman substrate --");
     let mut rng = Pcg64::seed(3);
     let vals: Vec<u64> = (0..10_000).map(|_| rng.next_u64() & 0xfff).collect();
-    let samples = bench_fn(3, 50, || {
+    let (w, n) = opts.iters(3, 50);
+    let write_samples = bench_fn(w, n, || {
         let mut w = BitWriter::new();
         for &v in &vals {
             w.write_bits(v, 12);
         }
         std::hint::black_box(w.finish());
     });
-    report_bench("bitwriter 10k x 12-bit", &samples, Some((10_000.0, "sym")));
+    report_bench("bitwriter 10k x 12-bit", &write_samples, Some((10_000.0, "sym")));
 
     let mut w = BitWriter::new();
     for &v in &vals {
         w.write_bits(v, 12);
     }
     let bytes = w.finish();
-    let samples = bench_fn(3, 50, || {
+    let (wu, n) = opts.iters(3, 50);
+    let read_samples = bench_fn(wu, n, || {
         let mut r = BitReader::new(&bytes);
         let mut acc = 0u64;
         for _ in 0..vals.len() {
@@ -120,7 +194,7 @@ fn bench_bitstream() {
         }
         std::hint::black_box(acc);
     });
-    report_bench("bitreader 10k x 12-bit", &samples, Some((10_000.0, "sym")));
+    report_bench("bitreader 10k x 12-bit", &read_samples, Some((10_000.0, "sym")));
 
     let syms: Vec<u32> = (0..20_000)
         .map(|_| {
@@ -132,13 +206,20 @@ fn bench_bitstream() {
             s
         })
         .collect();
-    let samples = bench_fn(2, 20, || {
+    let (wu, n) = opts.iters(2, 20);
+    let huff_samples = bench_fn(wu, n, || {
         let _ = huffman::encode_stream(&syms).unwrap();
     });
-    report_bench("huffman build+encode 20k syms", &samples, Some((20_000.0, "sym")));
+    report_bench("huffman build+encode 20k syms", &huff_samples, Some((20_000.0, "sym")));
+
+    Json::obj(vec![
+        ("bitwriter_sym_per_s", Json::num(10_000.0 / mean(&write_samples))),
+        ("bitreader_sym_per_s", Json::num(10_000.0 / mean(&read_samples))),
+        ("huffman_sym_per_s", Json::num(20_000.0 / mean(&huff_samples))),
+    ])
 }
 
-fn bench_server(rt: &Runtime) -> Result<()> {
+fn bench_server(rt: &Runtime, opts: &Opts) -> Result<Json> {
     println!("\n-- inference server (tiny_mlp, closed-loop clients) --");
     let arts = runtime::load(rt, "tiny_mlp")?;
     let mrc = MrcFile {
@@ -158,33 +239,76 @@ fn bench_server(rt: &Runtime) -> Result<()> {
     let examples: Vec<Vec<f32>> = (0..test.len())
         .map(|i| test.x[i * feat..(i + 1) * feat].to_vec())
         .collect();
-    for clients in [1usize, 4, 16] {
+    let client_counts: &[usize] = if opts.quick { &[1, 4] } else { &[1, 4, 16] };
+    let total_requests = if opts.quick { 64 } else { 256 };
+    let mut rows = Vec::new();
+    for &clients in client_counts {
         let mut server = Server::new(&arts, &mrc, ServerCfg::default())?;
         let (rx, join) = spawn_clients(
             examples.clone(),
             clients,
-            256 / clients,
+            total_requests / clients,
             std::time::Duration::ZERO,
         );
         let stats = server.run(rx)?;
         let _ = join.join();
+        let req_per_s = stats.served as f64 / stats.wall_secs;
         println!(
-            "   {clients:>2} clients: {:>7.0} req/s   p50 {:>7.2} ms   p99 {:>7.2} ms   avg batch {:.1}",
-            stats.served as f64 / stats.wall_secs,
+            "   {clients:>2} clients: {req_per_s:>7.0} req/s   p50 {:>7.2} ms   p99 {:>7.2} ms   avg batch {:.1}",
             stats.latency.p50 * 1e3,
             stats.latency.p99 * 1e3,
             stats.served as f64 / stats.batches.max(1) as f64,
         );
+        rows.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("req_per_s", Json::num(req_per_s)),
+            ("p50_ms", Json::num(stats.latency.p50 * 1e3)),
+            ("p99_ms", Json::num(stats.latency.p99 * 1e3)),
+        ]));
     }
-    Ok(())
+    Ok(Json::Arr(rows))
+}
+
+/// `BENCH_runtime_perf.json` lives at the workspace root regardless of the
+/// invocation directory, so trajectory points across PRs land in one place.
+fn json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+        .join("BENCH_runtime_perf.json")
 }
 
 fn main() -> Result<()> {
+    let mut opts = Opts { quick: false, json: false };
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--quick" => opts.quick = true,
+            "--json" => opts.json = true,
+            other => eprintln!("bench_runtime_perf: ignoring unknown flag '{other}'"),
+        }
+    }
     common::banner("Runtime perf microbenches");
     let rt = Runtime::cpu()?;
-    bench_artifacts(&rt)?;
-    bench_lenet_hotpath(&rt)?;
-    bench_bitstream();
-    bench_server(&rt)?;
+    let (tiny, backend) = bench_artifacts(&rt, &opts)?;
+    let lenet = bench_lenet_hotpath(&rt, &opts)?;
+    let bitstream = bench_bitstream(&opts);
+    let server = bench_server(&rt, &opts)?;
+    if opts.json {
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("runtime_perf")),
+            ("quick", Json::Bool(opts.quick)),
+            ("backend", Json::str(backend)),
+            ("threads", Json::num(pool::current_threads() as f64)),
+            ("tiny_mlp", tiny),
+            ("lenet_synth", lenet),
+            ("bitstream", bitstream),
+            ("server_tiny_mlp", server),
+        ]);
+        let path = json_path();
+        std::fs::write(&path, doc.to_pretty() + "\n")?;
+        println!("\nwrote {}", path.display());
+    }
     Ok(())
 }

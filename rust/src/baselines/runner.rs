@@ -49,6 +49,7 @@ pub fn train_dense(
         layout_seed: seed ^ 0xDE,
         protocol_seed: 5,
         train_seed: seed,
+        threads: 0,
     };
     let mut session = Session::new(arts, train, &cfg)?;
     for _ in 0..steps {

@@ -30,6 +30,15 @@ use crate::{ensure, err};
 
 pub const MAGIC: &[u8; 4] = b"MRC1";
 
+/// Split a transmitted candidate index into `(chunk, row-within-chunk)` for
+/// a given scoring chunk size. The payload's index space is flat — chunking
+/// is an execution detail — but encoder, decoder and server must agree on
+/// this mapping, so it lives here next to the container spec.
+pub fn chunk_and_row(index: u64, k_chunk: usize) -> (u64, usize) {
+    let k = k_chunk.max(1) as u64;
+    (index / k, (index % k) as usize)
+}
+
 /// The backend family that encoded a container. Families use different
 /// candidate generators (jax threefry vs the Pcg64 seed tree), so decoding
 /// on the wrong family would silently produce garbage weights — the tag
@@ -350,6 +359,16 @@ mod tests {
         m.validate_for(&meta, BackendFamily::Native).unwrap();
         let err = m.validate_for(&meta, BackendFamily::Pjrt).unwrap_err();
         assert!(format!("{err}").contains("backend family"), "{err}");
+    }
+
+    #[test]
+    fn chunk_and_row_covers_the_flat_index_space() {
+        assert_eq!(chunk_and_row(0, 64), (0, 0));
+        assert_eq!(chunk_and_row(63, 64), (0, 63));
+        assert_eq!(chunk_and_row(64, 64), (1, 0));
+        assert_eq!(chunk_and_row(4095, 256), (15, 255));
+        // K smaller than one chunk: everything lands in chunk 0
+        assert_eq!(chunk_and_row(5, 64), (0, 5));
     }
 
     #[test]

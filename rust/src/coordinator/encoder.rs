@@ -1,20 +1,26 @@
-//! Block encoder/decoder — Algorithm 1 with chunked candidate scoring.
+//! Block encoder/decoder — Algorithm 1 over the batched candidate entries.
 //!
-//! `K = 2^C_loc` candidates per block are scored in `k_chunk`-sized
-//! invocations of the backend's `score_chunk` entry (the compute hot-spot);
-//! the categorical draw over the proxy distribution  q̃ streams over chunks
-//! via Gumbel-max so the full logit vector never needs to be materialized at
-//! once. Decoding replays `decode_chunk` for the chunk containing `k*` —
-//! shared randomness by construction (both entries derive candidates from
-//! the same `(protocol_seed, block, chunk)` stream: jax threefry on the
-//! PJRT backend, [`crate::prng::candidate_stream`] on the native one).
+//! `K = 2^C_loc` candidates per block are scored in ONE `score_block`
+//! backend invocation covering every `k_chunk`-sized chunk (the compute
+//! hot-spot; the native backend fans the chunks across the worker pool —
+//! see `docs/perf.md`). The categorical draw over the proxy distribution q̃
+//! uses streaming Gumbel-max in flat candidate order, so the selected index
+//! is independent of how the backend parallelized the scoring. Decoding
+//! replays only the transmitted row via `decode_block` — shared randomness
+//! by construction (both entries derive candidates from the same
+//! `(protocol_seed, block, chunk)` stream: jax threefry on the PJRT
+//! backend, [`crate::prng::candidate_stream`] on the native one).
+//!
+//! [`encode_blocks`] additionally batches the *session-level* loop: all
+//! still-unfrozen blocks of an I = 0 schedule are scored in a single
+//! `score_blocks` invocation, bit-identical to encoding them one by one.
 
 use crate::codec::MrcFile;
 use crate::model::Layout;
 use crate::prng::{Pcg64, StreamingCategorical};
 use crate::runtime::ModelArtifacts;
 use crate::tensor::{Arg, TensorF32, TensorI32};
-use crate::util::Result;
+use crate::util::{pool, Result};
 use crate::{ensure, err};
 
 /// Result of encoding one block.
@@ -35,8 +41,71 @@ pub struct EncodeOutcome {
     pub k: u64,
 }
 
+/// The per-block Gumbel-max selection stream. Deterministic per block and
+/// independent of encode order / thread count; only candidate *generation*
+/// is protocol randomness, the draw is encoder-local.
+fn draw_rng(train_seed: u64, b: usize) -> Pcg64 {
+    Pcg64::seed(train_seed ^ (b as u64) << 1 ^ 0x5E1)
+}
+
+/// Upper bound on logits materialized by one batched scoring invocation
+/// (2^21 f32 = 8 MB). Budgets above it fall back to streaming chunk-level
+/// calls, so huge `C_loc` settings cannot balloon memory — the pre-batching
+/// O(k_chunk) behavior is preserved where it matters.
+const MAX_CANDIDATES_PER_CALL: usize = 1 << 21;
+
+/// (K, n_chunks) for a session's local coding budget, bounded to the i32
+/// scalar range the backend entries speak. `n_chunks` rounds up, so chunk
+/// sizes that do not divide K still cover every candidate (the trailing
+/// chunk is scored past K and truncated by the caller).
+fn candidate_geometry(c_loc_bits: u8, k_chunk: usize) -> Result<(u64, u64)> {
+    ensure!(
+        c_loc_bits >= 1 && c_loc_bits <= 30,
+        "c_loc_bits {c_loc_bits} outside the supported range 1..=30 \
+         (indices travel as i32 scalars through the backend entries)"
+    );
+    let k: u64 = 1 << c_loc_bits;
+    let k_chunk = (k_chunk as u64).max(1);
+    let n_chunks = (k + k_chunk - 1) / k_chunk;
+    Ok((k, n_chunks))
+}
+
+/// Selection epilogue shared by every encode path: (index, IS-gap bits,
+/// realized KL bits) from a finished Gumbel-max draw.
+fn selection_stats(
+    session: &super::Session,
+    b: usize,
+    index: usize,
+    lse: f64,
+    k: u64,
+) -> (u64, f64, f64) {
+    let is_gap_bits = ((k as f64).ln() - lse) / std::f64::consts::LN_2;
+    let kl_bits = session.last_kl[b] as f64 / std::f64::consts::LN_2;
+    (index as u64, is_gap_bits, kl_bits)
+}
+
+/// Finish one block's selection from its flat logit slice.
+fn select_index(
+    session: &super::Session,
+    b: usize,
+    logits: &[f32],
+    k: u64,
+) -> (u64, f64, f64) {
+    let mut sampler = StreamingCategorical::new(draw_rng(session.cfg.train_seed, b));
+    sampler.push(&logits[..k as usize]);
+    let (index, lse) = sampler.finish();
+    selection_stats(session, b, index, lse, k)
+}
+
 /// Score all K candidates of block `b` and draw k* ~ q̃ (Algorithm 1).
 /// Freezes the block in the session.
+///
+/// For budgets within `MAX_CANDIDATES_PER_CALL` (every practical
+/// setting) this is ONE batched `score_block` invocation; larger budgets
+/// stream `score_chunk` calls with upload-once row buffers so memory stays
+/// O(k_chunk). Both paths select bit-identical indices: the logits are the
+/// same values in the same flat order, and the Gumbel-max stream is
+/// per-block deterministic.
 pub fn encode_block(
     session: &mut super::Session,
     b: usize,
@@ -44,61 +113,180 @@ pub fn encode_block(
     let arts = session.arts;
     let meta = &arts.meta;
     let s = meta.s;
-    let c_loc_bits = session.cfg.c_loc_bits as u32;
-    let k: u64 = 1 << c_loc_bits;
+    let (k, n_chunks) = candidate_geometry(session.cfg.c_loc_bits, meta.k_chunk)?;
     let (mu_b, rho_b) = session.state.block(b, s);
     let lsp_b = session.layout.block_lsp(b, &session.state.lsp);
     let mask_b = session.layout.block_mask(b).to_vec();
 
-    // upload block parameters once; reuse the device buffers across chunks
-    // (perf: K/k_chunk invocations share them)
-    let mu_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], mu_b.to_vec())?))?;
-    let rho_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], rho_b.to_vec())?))?;
-    let lsp_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], lsp_b.clone())?))?;
-    let mask_buf = arts.upload(&Arg::F32(TensorF32::new(vec![s], mask_b)?))?;
-    let seed_arg = Arg::I32(TensorI32::scalar(session.cfg.protocol_seed));
-    let block_arg = Arg::I32(TensorI32::scalar(b as i32));
-
-    // deterministic per-block sampler stream (selection need not be shared;
-    // only candidate generation is protocol randomness)
-    let draw_rng = Pcg64::seed(session.cfg.train_seed ^ (b as u64) << 1 ^ 0x5E1);
-    let mut sampler = StreamingCategorical::new(draw_rng);
-    let k_chunk = meta.k_chunk as u64;
-    let n_chunks = if k >= k_chunk { k / k_chunk } else { 1 };
-    for chunk in 0..n_chunks {
-        use crate::runtime::Input;
-        let chunk_arg = Arg::I32(TensorI32::scalar(chunk as i32));
-        let outs = arts.invoke_mixed(
-            "score_chunk",
+    let _threads = pool::override_threads(session.cfg.threads);
+    let batched = (n_chunks as usize).saturating_mul(meta.k_chunk)
+        <= MAX_CANDIDATES_PER_CALL;
+    let (index, is_gap_bits, kl_bits) = if batched {
+        let outs = arts.invoke(
+            "score_block",
             &[
-                Input::Host(&seed_arg),
-                Input::Host(&block_arg),
-                Input::Host(&chunk_arg),
-                Input::Dev(&mu_buf),
-                Input::Dev(&rho_buf),
-                Input::Dev(&lsp_buf),
-                Input::Dev(&mask_buf),
+                Arg::I32(TensorI32::scalar(session.cfg.protocol_seed)),
+                Arg::I32(TensorI32::scalar(b as i32)),
+                Arg::I32(TensorI32::scalar(n_chunks as i32)),
+                Arg::F32(TensorF32::new(vec![s], mu_b.to_vec())?),
+                Arg::F32(TensorF32::new(vec![s], rho_b.to_vec())?),
+                Arg::F32(TensorF32::new(vec![s], lsp_b.clone())?),
+                Arg::F32(TensorF32::new(vec![s], mask_b)?),
             ],
         )?;
         let logits = outs[0].f32s()?;
-        let take = if k < k_chunk { k as usize } else { logits.len() };
-        sampler.push(&logits[..take]);
-    }
-    let total = sampler.total() as u64;
-    ensure!(total == k, "scored {total} candidates, expected {k}");
-    let (index, lse) = sampler.finish();
-    let index = index as u64;
-
-    let is_gap_bits = ((k as f64).ln() - lse) / std::f64::consts::LN_2;
-    let kl_bits = session.last_kl[b] as f64 / std::f64::consts::LN_2;
+        ensure!(
+            logits.len() as u64 >= k,
+            "score_block returned {} logits, expected >= {k}",
+            logits.len()
+        );
+        select_index(session, b, logits, k)
+    } else {
+        // huge-K fallback: chunk-level calls against uploaded-once block
+        // rows, streamed straight into the Gumbel-max sampler
+        use crate::runtime::Input;
+        let mu_buf =
+            arts.upload(&Arg::F32(TensorF32::new(vec![s], mu_b.to_vec())?))?;
+        let rho_buf =
+            arts.upload(&Arg::F32(TensorF32::new(vec![s], rho_b.to_vec())?))?;
+        let lsp_buf =
+            arts.upload(&Arg::F32(TensorF32::new(vec![s], lsp_b.clone())?))?;
+        let mask_buf =
+            arts.upload(&Arg::F32(TensorF32::new(vec![s], mask_b)?))?;
+        let seed_arg = Arg::I32(TensorI32::scalar(session.cfg.protocol_seed));
+        let block_arg = Arg::I32(TensorI32::scalar(b as i32));
+        let mut sampler =
+            StreamingCategorical::new(draw_rng(session.cfg.train_seed, b));
+        let mut remaining = k as usize;
+        for chunk in 0..n_chunks {
+            let chunk_arg = Arg::I32(TensorI32::scalar(chunk as i32));
+            let outs = arts.invoke_mixed(
+                "score_chunk",
+                &[
+                    Input::Host(&seed_arg),
+                    Input::Host(&block_arg),
+                    Input::Host(&chunk_arg),
+                    Input::Dev(&mu_buf),
+                    Input::Dev(&rho_buf),
+                    Input::Dev(&lsp_buf),
+                    Input::Dev(&mask_buf),
+                ],
+            )?;
+            let logits = outs[0].f32s()?;
+            let take = remaining.min(logits.len());
+            sampler.push(&logits[..take]);
+            remaining -= take;
+        }
+        ensure!(remaining == 0, "scored {} candidates short of K={k}", remaining);
+        let (index, lse) = sampler.finish();
+        selection_stats(session, b, index, lse, k)
+    };
 
     let weights = decode_block_row(arts, session.cfg.protocol_seed, b, index, &lsp_b)?;
     session.freeze_block(b, &weights);
     Ok(EncodeOutcome { index, weights, kl_bits, is_gap_bits, k })
 }
 
-/// Decode candidate `index` of block `b`: replay the shared generator for
-/// the containing chunk and take the row.
+/// Encode several blocks against the *current* session state via batched
+/// `score_blocks` backend invocations (the session-level encode fan-out),
+/// grouped so no single call materializes more than
+/// `MAX_CANDIDATES_PER_CALL` logits.
+///
+/// Only valid when no variational updates happen between the individual
+/// encodes — the paper's I = 0 schedule — because every block is scored
+/// against the state as of entry (freezing a block never feeds back into
+/// the scoring inputs). Under that schedule the result is bit-identical to
+/// calling [`encode_block`] on each block in order: the candidate streams,
+/// per-block selection streams and logits are all independent of batching,
+/// grouping and thread count.
+pub fn encode_blocks(
+    session: &mut super::Session,
+    blocks: &[usize],
+) -> Result<Vec<EncodeOutcome>> {
+    if blocks.is_empty() {
+        return Ok(Vec::new());
+    }
+    let k_chunk = session.arts.meta.k_chunk;
+    let (_, n_chunks) = candidate_geometry(session.cfg.c_loc_bits, k_chunk)?;
+    let per = (n_chunks as usize).saturating_mul(k_chunk);
+    if per > MAX_CANDIDATES_PER_CALL {
+        // one block alone exceeds the batch budget — stream block by block
+        // (encode_block's huge-K path); freezing never feeds back into the
+        // scoring inputs, so this is still bit-identical
+        return blocks.iter().map(|&b| encode_block(session, b)).collect();
+    }
+    // bound the materialized logits at group_len * per <= the budget
+    let group_len = (MAX_CANDIDATES_PER_CALL / per).max(1);
+    let mut outcomes = Vec::with_capacity(blocks.len());
+    for group in blocks.chunks(group_len) {
+        outcomes.extend(encode_block_group(session, group)?);
+    }
+    Ok(outcomes)
+}
+
+/// One `score_blocks` invocation for a bounded group of blocks.
+fn encode_block_group(
+    session: &mut super::Session,
+    blocks: &[usize],
+) -> Result<Vec<EncodeOutcome>> {
+    let arts = session.arts;
+    let meta = &arts.meta;
+    let s = meta.s;
+    let (k, n_chunks) = candidate_geometry(session.cfg.c_loc_bits, meta.k_chunk)?;
+    let nb = blocks.len();
+    let mut blk_ids = Vec::with_capacity(nb);
+    let mut mu = Vec::with_capacity(nb * s);
+    let mut rho = Vec::with_capacity(nb * s);
+    let mut lsp_flat = Vec::with_capacity(nb * s);
+    let mut mask_flat = Vec::with_capacity(nb * s);
+    let mut lsp_rows: Vec<Vec<f32>> = Vec::with_capacity(nb);
+    for &b in blocks {
+        ensure!(b < meta.b, "block {b} out of range ({} blocks)", meta.b);
+        let (mu_b, rho_b) = session.state.block(b, s);
+        mu.extend_from_slice(mu_b);
+        rho.extend_from_slice(rho_b);
+        let lsp_b = session.layout.block_lsp(b, &session.state.lsp);
+        lsp_flat.extend_from_slice(&lsp_b);
+        lsp_rows.push(lsp_b);
+        mask_flat.extend_from_slice(session.layout.block_mask(b));
+        blk_ids.push(b as i32);
+    }
+
+    let _threads = pool::override_threads(session.cfg.threads);
+    let outs = arts.invoke(
+        "score_blocks",
+        &[
+            Arg::I32(TensorI32::scalar(session.cfg.protocol_seed)),
+            Arg::I32(TensorI32::new(vec![nb], blk_ids)?),
+            Arg::I32(TensorI32::scalar(n_chunks as i32)),
+            Arg::F32(TensorF32::new(vec![nb * s], mu)?),
+            Arg::F32(TensorF32::new(vec![nb * s], rho)?),
+            Arg::F32(TensorF32::new(vec![nb * s], lsp_flat)?),
+            Arg::F32(TensorF32::new(vec![nb * s], mask_flat)?),
+        ],
+    )?;
+    let logits = outs[0].f32s()?;
+    let per = (n_chunks as usize) * meta.k_chunk;
+    ensure!(
+        logits.len() == nb * per,
+        "score_blocks returned {} logits, expected {nb} x {per}",
+        logits.len()
+    );
+
+    let mut outcomes = Vec::with_capacity(nb);
+    for (bi, &b) in blocks.iter().enumerate() {
+        let (index, is_gap_bits, kl_bits) =
+            select_index(session, b, &logits[bi * per..(bi + 1) * per], k);
+        let weights =
+            decode_block_row(arts, session.cfg.protocol_seed, b, index, &lsp_rows[bi])?;
+        session.freeze_block(b, &weights);
+        outcomes.push(EncodeOutcome { index, weights, kl_bits, is_gap_bits, k });
+    }
+    Ok(outcomes)
+}
+
+/// Decode candidate `index` of block `b`: one `decode_block` invocation
+/// replaying only the transmitted row of the shared generator.
 pub fn decode_block_row(
     arts: &ModelArtifacts,
     protocol_seed: i32,
@@ -107,25 +295,27 @@ pub fn decode_block_row(
     lsp_b: &[f32],
 ) -> Result<Vec<f32>> {
     let meta = &arts.meta;
-    let s = meta.s;
-    let k_chunk = meta.k_chunk as u64;
-    let (chunk, row) = (index / k_chunk, (index % k_chunk) as usize);
-    let outs = arts.invoke(
-        "decode_chunk",
+    ensure!(
+        index <= i32::MAX as u64,
+        "candidate index {index} exceeds the i32 range of the decode_block entry"
+    );
+    let mut outs = arts.invoke(
+        "decode_block",
         &[
             Arg::I32(TensorI32::scalar(protocol_seed)),
             Arg::I32(TensorI32::scalar(b as i32)),
-            Arg::I32(TensorI32::scalar(chunk as i32)),
-            Arg::F32(TensorF32::new(vec![s], lsp_b.to_vec())?),
+            Arg::I32(TensorI32::scalar(index as i32)),
+            Arg::F32(TensorF32::new(vec![meta.s], lsp_b.to_vec())?),
         ],
     )?;
-    let cand = outs[0].as_f32()?;
+    let row = outs.remove(0).into_f32s()?;
     ensure!(
-        cand.shape == vec![meta.k_chunk, s],
-        "decode_chunk returned {:?}",
-        cand.shape
+        row.len() == meta.s,
+        "decode_block returned {} values, expected S={}",
+        row.len(),
+        meta.s
     );
-    Ok(cand.row(row).to_vec())
+    Ok(row)
 }
 
 /// Decode a whole `.mrc` into block-layout weights [B*S].

@@ -14,7 +14,7 @@ pub mod encoder;
 pub mod session;
 
 pub use beta::BetaController;
-pub use encoder::{decode_model, encode_block, EncodeOutcome};
+pub use encoder::{decode_model, encode_block, encode_blocks, EncodeOutcome};
 pub use session::{Session, StepMetrics};
 
 use crate::codec::MrcFile;
@@ -46,6 +46,10 @@ pub struct MiracleCfg {
     pub protocol_seed: i32,
     /// seed for batch order + per-step reparameterization keys
     pub train_seed: u64,
+    /// worker threads for the candidate hot path (0 = auto: the
+    /// `MIRACLE_THREADS` env var, else all cores). Selected indices and
+    /// decoded weights are identical at every setting — see `docs/perf.md`.
+    pub threads: usize,
 }
 
 impl Default for MiracleCfg {
@@ -65,6 +69,7 @@ impl Default for MiracleCfg {
             layout_seed: 0x4D31_7261_636C_6531, // "M1racle1"
             protocol_seed: 7,
             train_seed: 42,
+            threads: 0,
         }
     }
 }
@@ -95,6 +100,9 @@ pub fn compress(
         (1 << cfg.c_loc_bits as usize) >= 1,
         "c_loc_bits out of range"
     );
+    // honor cfg.threads for the WHOLE run (encode fan-out, eval row
+    // fan-out), not just the encoder's own invocations
+    let _threads = crate::util::pool::override_threads(cfg.threads);
     let mut session = Session::new(arts, train, cfg)?;
 
     // Phase 1: variational convergence with p learned jointly (I_0 steps).
@@ -118,25 +126,45 @@ pub fn compress(
     let mut encode_secs = 0.0;
     let mut kl_bits_sum = 0.0;
     let mut indices = vec![0u64; session.b()];
-    for (done, &b) in order.iter().enumerate() {
-        let b = b as usize;
+    if cfg.i_intermediate == 0 {
+        // No updates between encodes (paper ablation I = 0): every block is
+        // coded against the same variational state, so the whole sweep can
+        // be scored in one batched backend invocation. Bit-identical to the
+        // sequential loop below.
+        let blocks: Vec<usize> = order.iter().map(|&b| b as usize).collect();
         let t = Timer::start();
-        let outcome = encode_block(&mut session, b)?;
+        let outcomes = encode_blocks(&mut session, &blocks)?;
         encode_secs += t.secs();
-        kl_bits_sum += outcome.kl_bits;
-        indices[b] = outcome.index;
-        for _ in 0..cfg.i_intermediate {
-            session.train_step(false)?;
+        for (&b, outcome) in blocks.iter().zip(&outcomes) {
+            kl_bits_sum += outcome.kl_bits;
+            indices[b] = outcome.index;
         }
-        if (done + 1) % 200 == 0 {
-            info!(
-                "encoded {}/{} blocks (last: k*={} kl={:.2}b is-gap={:.2}b)",
-                done + 1,
-                session.b(),
-                outcome.index,
-                outcome.kl_bits,
-                outcome.is_gap_bits
-            );
+        info!(
+            "encoded {} blocks in one batched sweep ({:.2}s)",
+            blocks.len(),
+            encode_secs
+        );
+    } else {
+        for (done, &b) in order.iter().enumerate() {
+            let b = b as usize;
+            let t = Timer::start();
+            let outcome = encode_block(&mut session, b)?;
+            encode_secs += t.secs();
+            kl_bits_sum += outcome.kl_bits;
+            indices[b] = outcome.index;
+            for _ in 0..cfg.i_intermediate {
+                session.train_step(false)?;
+            }
+            if (done + 1) % 200 == 0 {
+                info!(
+                    "encoded {}/{} blocks (last: k*={} kl={:.2}b is-gap={:.2}b)",
+                    done + 1,
+                    session.b(),
+                    outcome.index,
+                    outcome.kl_bits,
+                    outcome.is_gap_bits
+                );
+            }
         }
     }
     let train_secs = t_train.secs() - encode_secs;

@@ -163,6 +163,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         layout_seed: args.u64("layout-seed", 0x4D31_7261)?,
         protocol_seed: args.usize("protocol-seed", 7)? as i32,
         train_seed: args.u64("train-seed", 42)?,
+        threads: args.usize("threads", 0)?,
     };
     args.finish()?;
 
@@ -220,6 +221,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let path = args.require("mrc")?;
     let n_test = args.usize("test-size", 1024)?;
+    let _threads =
+        miracle::util::pool::override_threads(args.usize("threads", 0)?);
     args.finish()?;
     let mrc = MrcFile::load(&path)?;
     let rt = Runtime::cpu()?;
@@ -269,6 +272,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let per_client = args.usize("requests", 32)?;
     let max_batch = args.usize("max-batch", 64)?;
     let lazy = args.flag("lazy");
+    let _threads =
+        miracle::util::pool::override_threads(args.usize("threads", 0)?);
     args.finish()?;
     let mrc = MrcFile::load(&path)?;
     let rt = Runtime::cpu()?;

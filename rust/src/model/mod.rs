@@ -93,7 +93,7 @@ impl Layout {
     }
 
     /// Per-element log-sigma_p vector for block `b`, given the per-layer
-    /// table (feeds `score_chunk`/`decode_chunk`).
+    /// table (feeds the `score_block`/`decode_block` backend entries).
     pub fn block_lsp(&self, b: usize, lsp_layers: &[f32]) -> Vec<f32> {
         (0..self.s)
             .map(|j| lsp_layers[self.layer_map[b * self.s + j] as usize])

@@ -116,11 +116,9 @@ impl Pcg64 {
         }
     }
 
-    /// Standard normal via Box-Muller.
-    pub fn next_normal(&mut self) -> f64 {
-        if let Some(z) = self.spare_normal.take() {
-            return z;
-        }
+    /// One Box-Muller pair. Factored out so the bulk/skip paths consume the
+    /// uniform stream identically to repeated [`Pcg64::next_normal`] calls.
+    fn box_muller_pair(&mut self) -> (f64, f64) {
         loop {
             let u1 = self.next_f64();
             if u1 <= f64::MIN_POSITIVE {
@@ -129,8 +127,64 @@ impl Pcg64 {
             let u2 = self.next_f64();
             let r = (-2.0 * u1.ln()).sqrt();
             let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
-            self.spare_normal = Some(r * s);
-            return r * c;
+            return (r * c, r * s);
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let (a, b) = self.box_muller_pair();
+        self.spare_normal = Some(b);
+        a
+    }
+
+    /// Fill `out` with standard normals as f32 — the exact sequence repeated
+    /// [`Pcg64::next_normal`] calls would produce, minus the per-draw spare
+    /// bookkeeping (the candidate hot path's bulk generator).
+    pub fn fill_normals_f32(&mut self, out: &mut [f32]) {
+        let mut i = 0usize;
+        if i < out.len() {
+            if let Some(z) = self.spare_normal.take() {
+                out[i] = z as f32;
+                i += 1;
+            }
+        }
+        while i + 2 <= out.len() {
+            let (a, b) = self.box_muller_pair();
+            out[i] = a as f32;
+            out[i + 1] = b as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            let (a, b) = self.box_muller_pair();
+            out[i] = a as f32;
+            self.spare_normal = Some(b);
+        }
+    }
+
+    /// Advance the stream past `n` normal draws without materializing them.
+    /// Bit-exact with drawing and discarding — the uniform consumption
+    /// (including the Box-Muller rejection branch) is replayed precisely —
+    /// but full pairs skip the `ln`/`sin_cos` calls entirely, which is what
+    /// makes single-candidate decode cheap (see `decode_block` in
+    /// `runtime/native.rs`).
+    pub fn skip_normals(&mut self, mut n: usize) {
+        if n > 0 && self.spare_normal.take().is_some() {
+            n -= 1;
+        }
+        while n >= 2 {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let _u2 = self.next_f64();
+            n -= 2;
+        }
+        if n == 1 {
+            let _ = self.next_normal();
         }
     }
 
@@ -182,7 +236,9 @@ pub fn eps_stream(seed: i32) -> Pcg64 {
 
 /// Draw `n` standard normals as f32 from a stream.
 pub fn normals_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
-    (0..n).map(|_| rng.next_normal() as f32).collect()
+    let mut out = vec![0f32; n];
+    rng.fill_normals_f32(&mut out);
+    out
 }
 
 #[cfg(test)]
@@ -262,6 +318,56 @@ mod tests {
         let b = normals_f32(&mut candidate_stream(7, 0, 0), 16);
         assert_ne!(a, b);
         assert_eq!(a, normals_f32(&mut eps_stream(7), 16));
+    }
+
+    #[test]
+    fn fill_normals_matches_sequential_draws() {
+        // every (pre-fill offset, length) parity combination, including a
+        // live spare from an odd number of prior draws
+        for pre in 0..3usize {
+            for len in [0usize, 1, 2, 5, 8, 33] {
+                let mut a = Pcg64::seed(0xF17);
+                let mut b = Pcg64::seed(0xF17);
+                for _ in 0..pre {
+                    let x = a.next_normal();
+                    let y = b.next_normal();
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                let mut bulk = vec![0f32; len];
+                a.fill_normals_f32(&mut bulk);
+                let seq: Vec<f32> =
+                    (0..len).map(|_| b.next_normal() as f32).collect();
+                assert_eq!(bulk, seq, "pre={pre} len={len}");
+                // streams stay aligned afterwards
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn skip_normals_matches_draw_and_discard() {
+        for pre in 0..3usize {
+            for skip in [0usize, 1, 2, 3, 7, 64, 129] {
+                let mut a = Pcg64::seed(0x5C1D);
+                let mut b = Pcg64::seed(0x5C1D);
+                for _ in 0..pre {
+                    a.next_normal();
+                    b.next_normal();
+                }
+                a.skip_normals(skip);
+                for _ in 0..skip {
+                    b.next_normal();
+                }
+                // the next draws must agree bit for bit
+                for _ in 0..4 {
+                    assert_eq!(
+                        a.next_normal().to_bits(),
+                        b.next_normal().to_bits(),
+                        "pre={pre} skip={skip}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Pluggable execution backends behind one manifest-validated boundary.
 //!
 //! The coordinator (L3) never talks to a compute substrate directly: every
-//! numerical entry point (`train_step`, `score_chunk`, `decode_chunk`,
-//! `eval_batch`, `eval_full`, `sample_weights`) goes through
+//! numerical entry point (`train_step`, the batched candidate entries
+//! `score_block` / `score_blocks` / `decode_block`, their chunk-level
+//! ancestors `score_chunk` / `decode_chunk`, `eval_batch`, `eval_full`,
+//! `sample_weights`) goes through
 //! [`ModelArtifacts::invoke`] / [`ModelArtifacts::invoke_mixed`], which
 //! validate argument shapes and dtypes against the model's manifest
 //! ([`Entry`] specs) and then dispatch to a [`Backend`]:
@@ -30,6 +32,22 @@ use crate::tensor::Arg;
 use crate::util::{Error, Result};
 use crate::{ensure, err};
 
+/// Wildcard extent in a [`Spec`] dimension: matches any size at validation
+/// time. The batched candidate entries (`score_block`, `score_blocks`,
+/// `decode_block`) need it because their leading dimension depends on the
+/// session's coding budget `C_loc` (number of chunks / blocks per call),
+/// which a static per-model manifest cannot know.
+pub const DYN: usize = usize::MAX;
+
+/// Render a spec shape for error messages (`?` marks dynamic dims).
+pub fn fmt_shape(shape: &[usize]) -> String {
+    let dims: Vec<String> = shape
+        .iter()
+        .map(|&d| if d == DYN { "?".to_string() } else { d.to_string() })
+        .collect();
+    format!("[{}]", dims.join(", "))
+}
+
 /// Input/output spec of one entry point, from the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Spec {
@@ -45,6 +63,65 @@ impl Spec {
     pub fn i32(shape: Vec<usize>) -> Spec {
         Spec { shape, dtype: "i32".to_string() }
     }
+
+    /// 1-D f32 tensor of any length.
+    pub fn f32_dyn() -> Spec {
+        Spec::f32(vec![DYN])
+    }
+
+    /// 1-D i32 tensor of any length.
+    pub fn i32_dyn() -> Spec {
+        Spec::i32(vec![DYN])
+    }
+
+    /// Does a concrete tensor shape satisfy this spec ([`DYN`] dims match
+    /// any extent)?
+    pub fn matches(&self, shape: &[usize]) -> bool {
+        self.shape.len() == shape.len()
+            && self
+                .shape
+                .iter()
+                .zip(shape)
+                .all(|(&spec_d, &d)| spec_d == DYN || spec_d == d)
+    }
+}
+
+/// Manifest entries of the batched candidate surface — `score_block`,
+/// `score_blocks`, `decode_block` — shared by the native spec builder and
+/// the PJRT synthesis path so the two backends' manifests cannot drift.
+pub(crate) fn batched_entry_specs(s: usize) -> [Entry; 3] {
+    let si = || Spec::i32(vec![]);
+    let srow = || Spec::f32(vec![s]);
+    [
+        // (seed, block, n_chunks, mu, rho, lsp, mask) -> all chunk logits
+        // of one block, [n_chunks * k_chunk]
+        Entry::new(
+            "score_block",
+            vec![si(), si(), si(), srow(), srow(), srow(), srow()],
+            vec![Spec::f32_dyn()],
+        ),
+        // (seed, blocks, n_chunks, mu, rho, lsp, mask) with per-block rows
+        // flattened to [n_blocks * S] -> [n_blocks * n_chunks * k_chunk]
+        Entry::new(
+            "score_blocks",
+            vec![
+                si(),
+                Spec::i32_dyn(),
+                si(),
+                Spec::f32_dyn(),
+                Spec::f32_dyn(),
+                Spec::f32_dyn(),
+                Spec::f32_dyn(),
+            ],
+            vec![Spec::f32_dyn()],
+        ),
+        // (seed, block, index, lsp) -> the single transmitted candidate row
+        Entry::new(
+            "decode_block",
+            vec![si(), si(), si(), srow()],
+            vec![srow()],
+        ),
+    ]
 }
 
 /// One manifest entry point: name + typed input/output specs, plus
@@ -104,6 +181,7 @@ pub enum DeviceBuf {
 
 /// Argument to [`ModelArtifacts::invoke_mixed`]: freshly-validated host data
 /// or a cached device buffer (trusted — validated at upload sites).
+#[derive(Clone, Copy)]
 pub enum Input<'a> {
     Host(&'a Arg),
     Dev(&'a DeviceBuf),
@@ -180,12 +258,12 @@ impl ModelArtifacts {
             if let Input::Host(a) = input {
                 let spec = &entry.inputs[i];
                 ensure!(
-                    a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
-                    "{name}: arg {i} is {}{:?}, expected {}{:?}",
+                    spec.matches(a.shape()) && a.dtype() == spec.dtype,
+                    "{name}: arg {i} is {}{:?}, expected {}{}",
                     a.dtype(),
                     a.shape(),
                     spec.dtype,
-                    spec.shape
+                    fmt_shape(&spec.shape)
                 );
             }
         }
@@ -278,6 +356,33 @@ pub fn artifacts_root() -> PathBuf {
     std::env::var("MIRACLE_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_matches_static_and_dynamic_dims() {
+        let fixed = Spec::f32(vec![4, 8]);
+        assert!(fixed.matches(&[4, 8]));
+        assert!(!fixed.matches(&[4, 9]));
+        assert!(!fixed.matches(&[4]));
+        let dynamic = Spec::f32_dyn();
+        assert!(dynamic.matches(&[1]));
+        assert!(dynamic.matches(&[100_000]));
+        assert!(!dynamic.matches(&[]));
+        assert!(!dynamic.matches(&[1, 1]));
+        let mixed = Spec { shape: vec![DYN, 8], dtype: "f32".to_string() };
+        assert!(mixed.matches(&[3, 8]));
+        assert!(!mixed.matches(&[3, 7]));
+    }
+
+    #[test]
+    fn fmt_shape_marks_dynamic_dims() {
+        assert_eq!(fmt_shape(&[2, DYN]), "[2, ?]");
+        assert_eq!(fmt_shape(&[]), "[]");
+    }
 }
 
 /// Load a model by config name on the runtime's backend.

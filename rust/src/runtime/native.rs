@@ -12,6 +12,23 @@
 //! `.mrc` encoded natively does not decode on the PJRT backend (and vice
 //! versa). See `docs/adr/001-backend-abstraction.md`.
 //!
+//! Hot-path layout (details and measurements in `docs/perf.md`):
+//! * `score_block` / `score_blocks` score all candidate chunks of one/many
+//!   blocks per invocation, fanning chunks across the scoped-thread pool
+//!   ([`crate::util::pool`]). Per-coordinate constants (`exp_lsp`,
+//!   `neg_exp_rho`, the masked `lsp - rho` base term) are hoisted once per
+//!   block, normals are bulk-generated into per-worker scratch buffers, and
+//!   chunk outputs land in disjoint slices — bit-identical at any thread
+//!   count because each chunk's randomness is independently addressable in
+//!   the seed tree.
+//! * `decode_block` decodes exactly the transmitted candidate row by
+//!   skipping earlier draws transcendental-free
+//!   ([`crate::prng::Pcg64::skip_normals`]) instead of materializing a
+//!   whole `k_chunk x S` chunk.
+//! * forward/backward matmuls run over a transposed-weight layout with
+//!   column tiling ([`crate::tensor::linalg`]); `eval_batch`/`eval_full`
+//!   additionally fan independent batch rows across the pool.
+//!
 //! Architecture support is dense MLPs only ([`crate::model::arch`]);
 //! multi-dimensional inputs are treated as flattened feature vectors.
 
@@ -19,8 +36,9 @@ use std::collections::BTreeMap;
 
 use crate::model::arch::{DenseLayer, NetCfg};
 use crate::prng;
+use crate::tensor::linalg;
 use crate::tensor::{Arg, TensorF32};
-use crate::util::Result;
+use crate::util::{pool, Result};
 use crate::{ensure, err};
 
 use super::{Backend, DeviceBuf, Entry, Input, ModelArtifacts, ModelMeta, Spec};
@@ -28,6 +46,11 @@ use super::{Backend, DeviceBuf, Entry, Input, ModelArtifacts, ModelMeta, Spec};
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
+
+/// Below this many multiply-accumulates an eval fan-out costs more in
+/// thread spawns than it saves (tiny_mlp stays sequential, lenet-scale
+/// batches parallelize).
+const PARALLEL_EVAL_MIN_MACS: usize = 200_000;
 
 /// The default execution backend: pure-Rust kernels over [`crate::tensor`].
 pub struct NativeBackend {
@@ -50,7 +73,9 @@ impl NativeBackend {
 }
 
 /// The native manifest: same entry names and shapes the AOT path would load
-/// from `manifest.json`, derived from the config.
+/// from `manifest.json`, derived from the config. The batched candidate
+/// entries use [`super::DYN`] dims where the extent depends on the session's
+/// coding budget rather than the model.
 fn entry_specs(meta: &ModelMeta) -> BTreeMap<String, Entry> {
     let bs = || Spec::f32(vec![meta.b, meta.s]);
     let lay = || Spec::f32(vec![meta.n_layers]);
@@ -135,10 +160,15 @@ fn entry_specs(meta: &ModelMeta) -> BTreeMap<String, Entry> {
             vec![bs()],
         ),
     ];
-    entries
+    let mut map: BTreeMap<String, Entry> = entries
         .into_iter()
         .map(|e| (e.name.clone(), e))
-        .collect()
+        .collect();
+    // batched candidate surface, shared with the PJRT synthesis path
+    for e in super::batched_entry_specs(meta.s) {
+        map.insert(e.name.clone(), e);
+    }
+    map
 }
 
 /// Resolve every input to a host tensor (native buffers are host-resident).
@@ -178,19 +208,22 @@ impl Backend for NativeBackend {
         // Re-check every resolved argument here (cheap vs the kernels).
         for (i, (a, spec)) in args.iter().zip(&entry.inputs).enumerate() {
             ensure!(
-                a.shape() == &spec.shape[..] && a.dtype() == spec.dtype,
-                "{}: resolved arg {i} is {}{:?}, expected {}{:?}",
+                spec.matches(a.shape()) && a.dtype() == spec.dtype,
+                "{}: resolved arg {i} is {}{:?}, expected {}{}",
                 entry.name,
                 a.dtype(),
                 a.shape(),
                 spec.dtype,
-                spec.shape
+                super::fmt_shape(&spec.shape)
             );
         }
         match entry.name.as_str() {
             "train_step" => self.train_step(&args),
             "score_chunk" => self.score_chunk(&args),
+            "score_block" => self.score_block(&args),
+            "score_blocks" => self.score_blocks(&args),
             "decode_chunk" => self.decode_chunk(&args),
+            "decode_block" => self.decode_block(&args),
             "eval_batch" => self.eval_batch(&args),
             "eval_full" => self.eval_full(&args),
             "sample_weights" => self.sample_weights(&args),
@@ -201,6 +234,71 @@ impl Backend for NativeBackend {
 
 fn f32_arg(shape: Vec<usize>, data: Vec<f32>) -> Result<Arg> {
     Ok(Arg::F32(TensorF32::new(shape, data)?))
+}
+
+/// Per-block constants of the importance logit, hoisted out of the
+/// K-candidate loop: `log q - log p` per coordinate is
+/// `0.5 * mask * (z^2 - zq^2) + mask * (lsp - rho)` with
+/// `zq = (exp(lsp) * z - mu) * exp(-rho)` (the `0.5 * log(2 pi)` terms
+/// cancel; the masked `lsp - rho` part is candidate-independent and
+/// pre-summed into `base`).
+struct BlockConsts {
+    exp_lsp: Vec<f32>,
+    neg_exp_rho: Vec<f32>,
+    mu: Vec<f32>,
+    half_mask: Vec<f32>,
+    base: f64,
+}
+
+fn block_consts(mu: &[f32], rho: &[f32], lsp: &[f32], mask: &[f32]) -> BlockConsts {
+    let s = mu.len();
+    let mut exp_lsp = Vec::with_capacity(s);
+    let mut neg_exp_rho = Vec::with_capacity(s);
+    let mut half_mask = Vec::with_capacity(s);
+    let mut base = 0f64;
+    for j in 0..s {
+        exp_lsp.push(lsp[j].exp());
+        neg_exp_rho.push((-rho[j]).exp());
+        half_mask.push(0.5 * mask[j]);
+        base += (mask[j] * (lsp[j] - rho[j])) as f64;
+    }
+    BlockConsts {
+        exp_lsp,
+        neg_exp_rho,
+        mu: mu.to_vec(),
+        half_mask,
+        base,
+    }
+}
+
+/// Fused sample + score of one chunk's candidates into `out` (one logit per
+/// candidate). `scratch` holds the chunk's bulk-generated normals and is
+/// reused across every chunk the same worker processes.
+fn score_chunk_into(
+    rng: &mut prng::Pcg64,
+    c: &BlockConsts,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let s = c.mu.len();
+    let need = out.len() * s;
+    if scratch.len() < need {
+        // grow once per worker; no per-chunk zeroing — fill_normals_f32
+        // overwrites every slot
+        scratch.resize(need, 0.0);
+    }
+    let scratch = &mut scratch[..need];
+    rng.fill_normals_f32(scratch);
+    for (r, o) in out.iter_mut().enumerate() {
+        let zs = &scratch[r * s..(r + 1) * s];
+        let mut acc = 0f64;
+        for j in 0..s {
+            let z = zs[j];
+            let zq = (c.exp_lsp[j] * z - c.mu[j]) * c.neg_exp_rho[j];
+            acc += (c.half_mask[j] * (z * z - zq * zq)) as f64;
+        }
+        *o = (acc + c.base) as f32;
+    }
 }
 
 impl NativeBackend {
@@ -352,35 +450,98 @@ impl NativeBackend {
     }
 
     /// Importance logits `log q(w_k) - log p(w_k)` for one candidate chunk
-    /// (Algorithm 1 line 4; the Pallas hot-spot on the PJRT path).
+    /// (Algorithm 1 line 4) — kept for PJRT-manifest parity; the encoder
+    /// calls the batched `score_block` instead.
     fn score_chunk(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
         let seed = a[0].i32s()?[0];
         let block = a[1].i32s()?[0];
         let chunk = a[2].i32s()?[0];
-        let mu_b = a[3].f32s()?;
-        let rho_b = a[4].f32s()?;
-        let lsp_b = a[5].f32s()?;
-        let mask_b = a[6].f32s()?;
-        let s = self.cfg.s;
+        let consts =
+            block_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
         let k_chunk = self.cfg.k_chunk;
-        let exp_lsp: Vec<f32> = lsp_b.iter().map(|l| l.exp()).collect();
-        let neg_exp_rho: Vec<f32> = rho_b.iter().map(|r| (-r).exp()).collect();
+        let mut out = vec![0f32; k_chunk];
+        let mut scratch = Vec::new();
         let mut rng = prng::candidate_stream(seed, block, chunk);
-        let mut logits = Vec::with_capacity(k_chunk);
-        for _ in 0..k_chunk {
-            let mut acc = 0f64;
-            for j in 0..s {
-                let z = rng.next_normal() as f32;
-                let w = exp_lsp[j] * z;
-                let zq = (w - mu_b[j]) * neg_exp_rho[j];
-                // log q - log p; the 0.5*log(2*pi) terms cancel
-                let term =
-                    (-0.5 * zq * zq - rho_b[j]) - (-0.5 * z * z - lsp_b[j]);
-                acc += (mask_b[j] * term) as f64;
+        score_chunk_into(&mut rng, &consts, &mut scratch, &mut out);
+        Ok(vec![f32_arg(vec![k_chunk], out)?])
+    }
+
+    /// All chunk logits of one block in a single invocation, chunks fanned
+    /// across the worker pool — the encode hot-spot.
+    fn score_block(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let seed = a[0].i32s()?[0];
+        let block = a[1].i32s()?[0];
+        let n_chunks = a[2].i32s()?[0];
+        ensure!(
+            n_chunks > 0,
+            "score_block: n_chunks must be positive, got {n_chunks}"
+        );
+        let n_chunks = n_chunks as usize;
+        let consts =
+            block_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
+        let k_chunk = self.cfg.k_chunk;
+        let mut out = vec![0f32; n_chunks * k_chunk];
+        pool::parallel_runs_mut(&mut out, k_chunk, |first_chunk, span| {
+            let mut scratch = Vec::new();
+            for (i, chunk_out) in span.chunks_mut(k_chunk).enumerate() {
+                let mut rng = prng::candidate_stream(
+                    seed,
+                    block,
+                    (first_chunk + i) as i32,
+                );
+                score_chunk_into(&mut rng, &consts, &mut scratch, chunk_out);
             }
-            logits.push(acc as f32);
+        });
+        Ok(vec![f32_arg(vec![n_chunks * k_chunk], out)?])
+    }
+
+    /// All chunk logits of *several* blocks in one invocation — the
+    /// session-level encode fan-out. The task list is (block, chunk) pairs;
+    /// output order is block-major then chunk-major, so the caller's
+    /// per-block reduction order is independent of the thread count.
+    fn score_blocks(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let seed = a[0].i32s()?[0];
+        let blocks = a[1].i32s()?;
+        let n_chunks = a[2].i32s()?[0];
+        ensure!(
+            n_chunks > 0,
+            "score_blocks: n_chunks must be positive, got {n_chunks}"
+        );
+        let n_chunks = n_chunks as usize;
+        let nb = blocks.len();
+        ensure!(nb > 0, "score_blocks: empty block list");
+        let s = self.cfg.s;
+        let mu = a[3].f32s()?;
+        let rho = a[4].f32s()?;
+        let lsp = a[5].f32s()?;
+        let mask = a[6].f32s()?;
+        for (name, v) in [("mu", mu), ("rho", rho), ("lsp", lsp), ("mask", mask)]
+        {
+            ensure!(
+                v.len() == nb * s,
+                "score_blocks: {name} has {} values, expected {nb} blocks x S={s}",
+                v.len()
+            );
         }
-        Ok(vec![f32_arg(vec![k_chunk], logits)?])
+        let consts: Vec<BlockConsts> = (0..nb)
+            .map(|i| {
+                let r = i * s..(i + 1) * s;
+                block_consts(&mu[r.clone()], &rho[r.clone()], &lsp[r.clone()], &mask[r])
+            })
+            .collect();
+        let k_chunk = self.cfg.k_chunk;
+        let mut out = vec![0f32; nb * n_chunks * k_chunk];
+        pool::parallel_runs_mut(&mut out, k_chunk, |first, span| {
+            let mut scratch = Vec::new();
+            for (i, chunk_out) in span.chunks_mut(k_chunk).enumerate() {
+                let g = first + i;
+                let (bi, ch) = (g / n_chunks, g % n_chunks);
+                let mut rng =
+                    prng::candidate_stream(seed, blocks[bi], ch as i32);
+                score_chunk_into(&mut rng, &consts[bi], &mut scratch, chunk_out);
+            }
+        });
+        Ok(vec![f32_arg(vec![nb * n_chunks * k_chunk], out)?])
     }
 
     /// Candidate weights `sigma_p * z` for one chunk — the decoder replays
@@ -393,15 +554,43 @@ impl NativeBackend {
         let s = self.cfg.s;
         let k_chunk = self.cfg.k_chunk;
         let exp_lsp: Vec<f32> = lsp_b.iter().map(|l| l.exp()).collect();
+        let mut out = vec![0f32; k_chunk * s];
         let mut rng = prng::candidate_stream(seed, block, chunk);
-        let mut out = Vec::with_capacity(k_chunk * s);
-        for _ in 0..k_chunk {
-            for j in 0..s {
-                let z = rng.next_normal() as f32;
-                out.push(exp_lsp[j] * z);
+        rng.fill_normals_f32(&mut out);
+        for r in 0..k_chunk {
+            let row = &mut out[r * s..(r + 1) * s];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= exp_lsp[j];
             }
         }
         Ok(vec![f32_arg(vec![k_chunk, s], out)?])
+    }
+
+    /// The single transmitted candidate row of a block: replay the
+    /// containing chunk's stream, skipping the `row * S` earlier draws
+    /// without computing them. Bit-identical to `decode_chunk` + row
+    /// selection, at a fraction of the work and with no `k_chunk x S`
+    /// allocation — the decode/serving hot path.
+    fn decode_block(&self, a: &[&Arg]) -> Result<Vec<Arg>> {
+        let seed = a[0].i32s()?[0];
+        let block = a[1].i32s()?[0];
+        let index = a[2].i32s()?[0];
+        ensure!(
+            index >= 0,
+            "decode_block: negative candidate index {index}"
+        );
+        let lsp_b = a[3].f32s()?;
+        let s = self.cfg.s;
+        let (chunk, row) =
+            crate::codec::chunk_and_row(index as u64, self.cfg.k_chunk);
+        let mut rng = prng::candidate_stream(seed, block, chunk as i32);
+        rng.skip_normals(row * s);
+        let mut out = vec![0f32; s];
+        rng.fill_normals_f32(&mut out);
+        for (j, v) in out.iter_mut().enumerate() {
+            *v *= lsp_b[j].exp();
+        }
+        Ok(vec![f32_arg(vec![s], out)?])
     }
 
     /// Logits from explicit block-layout weights (the serving path).
@@ -425,15 +614,50 @@ impl NativeBackend {
 
     fn logits_out(&self, w_full: &[f32], x: &[f32]) -> Result<Vec<Arg>> {
         let n = self.cfg.eval_batch;
-        let acts = forward(&self.cfg.layers, w_full, x, n);
-        let logits = acts.into_iter().last().expect("nonempty acts");
+        let classes = self.cfg.classes;
+        let feat = self.cfg.feature_dim();
+        // validated up front with a clear message: a malformed batch must
+        // not reach the raw-slice indexing inside the forward pass
         ensure!(
-            logits.len() == n * self.cfg.classes,
-            "native forward produced {} logits, expected {}",
-            logits.len(),
-            n * self.cfg.classes
+            x.len() == n * feat,
+            "eval: input batch has {} values, expected eval_batch {n} x \
+             feature_dim {feat} = {}",
+            x.len(),
+            n * feat
         );
-        f32_arg(vec![n, self.cfg.classes], logits).map(|a| vec![a])
+        ensure!(
+            w_full.len() == self.cfg.n_total(),
+            "eval: weight vector has {} values, expected {}",
+            w_full.len(),
+            self.cfg.n_total()
+        );
+        let macs: usize =
+            self.cfg.layers.iter().map(|l| l.fan_in * l.fan_out).sum();
+        let layers = &self.cfg.layers;
+        // transpose every layer once; all row tiles share the packed form
+        let packed = pack_weights(layers, w_full);
+        let mut logits = vec![0f32; n * classes];
+        // each worker runs the full layer stack for its contiguous row
+        // range; rows are independent, so the result is bit-identical to
+        // the sequential pass at every thread count
+        let tile = |first_row: usize, span: &mut [f32]| {
+            let rows = span.len() / classes;
+            let acts = forward_packed(
+                layers,
+                &packed,
+                w_full,
+                &x[first_row * feat..(first_row + rows) * feat],
+                rows,
+            );
+            let last = acts.last().expect("forward returns >=1 activation");
+            span.copy_from_slice(last);
+        };
+        if n * macs >= PARALLEL_EVAL_MIN_MACS && pool::current_threads() > 1 {
+            pool::parallel_runs_mut(&mut logits, classes, tile);
+        } else {
+            tile(0, &mut logits);
+        }
+        f32_arg(vec![n, classes], logits).map(|a| vec![a])
     }
 
     /// One block-layout weight draw from q, frozen blocks pinned.
@@ -484,11 +708,46 @@ fn adam(
     (p2, m2v, v2v)
 }
 
+/// Transposed (`[fan_out, fan_in]`) copy of every layer's weights — built
+/// once per weight set so repeated/parallel forward passes share it.
+fn pack_weights(layers: &[DenseLayer], w: &[f32]) -> Vec<Vec<f32>> {
+    layers
+        .iter()
+        .map(|l| {
+            let mut wt = Vec::new();
+            linalg::transpose_into(
+                &w[l.offset..l.offset + l.fan_in * l.fan_out],
+                l.fan_in,
+                l.fan_out,
+                &mut wt,
+            );
+            wt
+        })
+        .collect()
+}
+
 /// Forward pass: returns one activation vector per layer (`acts[i]` is the
 /// output of layer `i`, ReLU applied to all but the last; `acts.last()` is
-/// the logits). The input batch is read in place, never copied.
+/// the logits). Convenience wrapper packing the weights itself; callers
+/// that run several passes over one weight set (parallel eval tiles) pack
+/// once and use [`forward_packed`].
 fn forward(
     layers: &[DenseLayer],
+    w: &[f32],
+    x: &[f32],
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let packed = pack_weights(layers, w);
+    forward_packed(layers, &packed, w, x, n)
+}
+
+/// [`forward`] over pre-transposed weights: the batched product runs as
+/// contiguous dot products with column tiling
+/// ([`crate::tensor::linalg::matmul_bias_wt`]); the input batch is read in
+/// place, never copied (`w` is still needed for the bias rows).
+fn forward_packed(
+    layers: &[DenseLayer],
+    packed: &[Vec<f32>],
     w: &[f32],
     x: &[f32],
     n: usize,
@@ -500,20 +759,7 @@ fn forward(
         let mut out = vec![0f32; n * fo];
         {
             let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
-            for r in 0..n {
-                let xrow = &input[r * fi..(r + 1) * fi];
-                let orow = &mut out[r * fo..(r + 1) * fo];
-                orow.copy_from_slice(bias);
-                for (i, &xv) in xrow.iter().enumerate() {
-                    if xv != 0.0 {
-                        let wrow =
-                            &w[l.offset + i * fo..l.offset + (i + 1) * fo];
-                        for j in 0..fo {
-                            orow[j] += xv * wrow[j];
-                        }
-                    }
-                }
-            }
+            linalg::matmul_bias_wt(input, &packed[li], bias, &mut out, n, fi, fo);
         }
         if li + 1 != layers.len() {
             for v in out.iter_mut() {
@@ -529,7 +775,9 @@ fn forward(
 
 /// Backprop of `dlogits` through the MLP (`acts` as returned by
 /// [`forward`], `x` the same input batch); returns the flat weight
-/// gradient. ReLU masks use the post-activations (`act > 0 ⟺ pre > 0`).
+/// gradient. ReLU masks use the post-activations (`act > 0 ⟺ pre > 0`);
+/// the input-gradient pass runs as contiguous dot products against the
+/// row-major weight rows.
 fn backward(
     layers: &[DenseLayer],
     w: &[f32],
@@ -572,11 +820,7 @@ fn backward(
                     if hrow[i] > 0.0 {
                         let wrow =
                             &w[l.offset + i * fo..l.offset + (i + 1) * fo];
-                        let mut acc = 0f32;
-                        for j in 0..fo {
-                            acc += drow[j] * wrow[j];
-                        }
-                        prow[i] = acc;
+                        prow[i] = linalg::dot(drow, wrow);
                     }
                 }
             }
@@ -628,9 +872,19 @@ fn softmax_ce(
 mod tests {
     use super::*;
     use crate::model::arch::builtin;
+    use crate::tensor::TensorI32;
 
     fn tiny() -> ModelArtifacts {
         NativeBackend::load(builtin("tiny_mlp").unwrap()).unwrap()
+    }
+
+    fn scalar(v: i32) -> Arg {
+        Arg::I32(TensorI32::scalar(v))
+    }
+
+    fn row(arts: &ModelArtifacts, v: f32) -> Arg {
+        let s = arts.meta.s;
+        Arg::F32(TensorF32::new(vec![s], vec![v; s]).unwrap())
     }
 
     #[test]
@@ -639,7 +893,10 @@ mod tests {
         for name in [
             "train_step",
             "score_chunk",
+            "score_block",
+            "score_blocks",
             "decode_chunk",
+            "decode_block",
             "eval_batch",
             "eval_full",
             "sample_weights",
@@ -656,7 +913,6 @@ mod tests {
         let arts = tiny();
         let s = arts.meta.s;
         let lsp = Arg::F32(TensorF32::new(vec![s], vec![-1.0; s]).unwrap());
-        let scalar = |v: i32| Arg::I32(crate::tensor::TensorI32::scalar(v));
         let run = |seed: i32| {
             arts.invoke(
                 "decode_chunk",
@@ -677,9 +933,7 @@ mod tests {
         // decode_chunk returns (shared randomness within the backend)
         let arts = tiny();
         let s = arts.meta.s;
-        let scalar = |v: i32| Arg::I32(crate::tensor::TensorI32::scalar(v));
-        let row = |v: f32| Arg::F32(TensorF32::new(vec![s], vec![v; s]).unwrap());
-        let lsp = row(-0.5);
+        let lsp = row(&arts, -0.5);
         let outs = arts
             .invoke(
                 "decode_chunk",
@@ -694,10 +948,10 @@ mod tests {
                     scalar(5),
                     scalar(0),
                     scalar(0),
-                    row(0.0),
-                    row(-0.5),
+                    row(&arts, 0.0),
+                    row(&arts, -0.5),
                     lsp,
-                    row(1.0),
+                    row(&arts, 1.0),
                 ],
             )
             .unwrap();
@@ -707,6 +961,190 @@ mod tests {
         for &l in &logits {
             assert!(l.abs() < 1e-5, "logit {l}");
         }
+    }
+
+    #[test]
+    fn score_block_matches_chunked_scoring() {
+        let arts = tiny();
+        let n_chunks = 4usize;
+        let args_tail = [
+            row(&arts, 0.1),
+            row(&arts, -0.7),
+            row(&arts, -0.5),
+            row(&arts, 1.0),
+        ];
+        let outs = arts
+            .invoke(
+                "score_block",
+                &[
+                    scalar(9),
+                    scalar(2),
+                    scalar(n_chunks as i32),
+                    args_tail[0].clone(),
+                    args_tail[1].clone(),
+                    args_tail[2].clone(),
+                    args_tail[3].clone(),
+                ],
+            )
+            .unwrap();
+        let batched = outs[0].f32s().unwrap().to_vec();
+        assert_eq!(batched.len(), n_chunks * arts.meta.k_chunk);
+        let mut chunked = Vec::new();
+        for c in 0..n_chunks {
+            let outs = arts
+                .invoke(
+                    "score_chunk",
+                    &[
+                        scalar(9),
+                        scalar(2),
+                        scalar(c as i32),
+                        args_tail[0].clone(),
+                        args_tail[1].clone(),
+                        args_tail[2].clone(),
+                        args_tail[3].clone(),
+                    ],
+                )
+                .unwrap();
+            chunked.extend_from_slice(outs[0].f32s().unwrap());
+        }
+        assert_eq!(batched, chunked);
+    }
+
+    #[test]
+    fn score_blocks_matches_per_block_scoring() {
+        let arts = tiny();
+        let s = arts.meta.s;
+        let n_chunks = 3usize;
+        let blocks = [1i32, 4, 0];
+        let per_block: Vec<[Arg; 4]> = blocks
+            .iter()
+            .map(|&b| {
+                let base = 0.01 * b as f32;
+                [
+                    row(&arts, base),
+                    row(&arts, -0.6 - base),
+                    row(&arts, -0.4),
+                    row(&arts, 1.0),
+                ]
+            })
+            .collect();
+        let cat = |k: usize| -> Arg {
+            let mut v = Vec::with_capacity(blocks.len() * s);
+            for args in &per_block {
+                v.extend_from_slice(args[k].f32s().unwrap());
+            }
+            Arg::F32(TensorF32::new(vec![blocks.len() * s], v).unwrap())
+        };
+        let outs = arts
+            .invoke(
+                "score_blocks",
+                &[
+                    scalar(11),
+                    Arg::I32(
+                        TensorI32::new(vec![blocks.len()], blocks.to_vec())
+                            .unwrap(),
+                    ),
+                    scalar(n_chunks as i32),
+                    cat(0),
+                    cat(1),
+                    cat(2),
+                    cat(3),
+                ],
+            )
+            .unwrap();
+        let batched = outs[0].f32s().unwrap().to_vec();
+        let per = n_chunks * arts.meta.k_chunk;
+        assert_eq!(batched.len(), blocks.len() * per);
+        for (bi, (&b, args)) in blocks.iter().zip(&per_block).enumerate() {
+            let outs = arts
+                .invoke(
+                    "score_block",
+                    &[
+                        scalar(11),
+                        scalar(b),
+                        scalar(n_chunks as i32),
+                        args[0].clone(),
+                        args[1].clone(),
+                        args[2].clone(),
+                        args[3].clone(),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(
+                &batched[bi * per..(bi + 1) * per],
+                outs[0].f32s().unwrap(),
+                "block {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_block_matches_decode_chunk_row() {
+        let arts = tiny();
+        let s = arts.meta.s;
+        let k_chunk = arts.meta.k_chunk;
+        let lsp = row(&arts, -1.25);
+        for index in [0usize, 1, k_chunk - 1, k_chunk, 3 * k_chunk + 17] {
+            let (chunk, r) = crate::codec::chunk_and_row(index as u64, k_chunk);
+            let outs = arts
+                .invoke(
+                    "decode_chunk",
+                    &[scalar(7), scalar(3), scalar(chunk as i32), lsp.clone()],
+                )
+                .unwrap();
+            let want = outs[0].as_f32().unwrap().row(r).to_vec();
+            let outs = arts
+                .invoke(
+                    "decode_block",
+                    &[scalar(7), scalar(3), scalar(index as i32), lsp.clone()],
+                )
+                .unwrap();
+            let got = outs[0].f32s().unwrap().to_vec();
+            assert_eq!(got.len(), s);
+            assert_eq!(got, want, "index {index}");
+        }
+    }
+
+    #[test]
+    fn batched_entries_are_thread_count_invariant() {
+        let arts = tiny();
+        let invoke = || {
+            arts.invoke(
+                "score_block",
+                &[
+                    scalar(3),
+                    scalar(1),
+                    scalar(8),
+                    row(&arts, 0.2),
+                    row(&arts, -1.0),
+                    row(&arts, -0.5),
+                    row(&arts, 1.0),
+                ],
+            )
+            .unwrap()[0]
+                .f32s()
+                .unwrap()
+                .to_vec()
+        };
+        let base = pool::with_threads(1, invoke);
+        for threads in [2usize, 8] {
+            assert_eq!(pool::with_threads(threads, invoke), base, "{threads}");
+        }
+    }
+
+    #[test]
+    fn eval_rejects_malformed_input_with_clear_error() {
+        // the manifest validation layer rejects this before the kernel; the
+        // additional ensure! in logits_out is defense-in-depth for the only
+        // remaining route (a manifest whose eval spec drifted from the
+        // NetCfg geometry), which the public API cannot construct
+        let arts = tiny();
+        let n_total = arts.meta.n_total;
+        let w = Arg::F32(TensorF32::new(vec![n_total], vec![0.01; n_total]).unwrap());
+        let bad_x = Arg::F32(TensorF32::new(vec![3, 3], vec![0.0; 9]).unwrap());
+        let err = arts.invoke("eval_full", &[w, bad_x]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("expected"), "{msg}");
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! validation against the manifest happens in the shared
 //! [`ModelArtifacts`] layer, so this module only moves buffers and executes.
 //!
+//! The batched candidate entries (`score_block`, `score_blocks`,
+//! `decode_block`) are *synthesized* when an artifact directory predates
+//! them: the coordinator always talks to the batched surface, and this
+//! backend decomposes a batched call into the chunk-level executables the
+//! manifest does provide (`score_chunk` / `decode_chunk`). Chunk order is
+//! preserved, so results are identical to the native decomposition.
+//!
 //! Compiled only with `--features xla`. The in-tree `xla` package is a
 //! compile-time stub (see `rust/xla-stub`); patch in a real PJRT binding to
 //! execute artifacts for real.
@@ -27,10 +34,13 @@ fn spec_from_json(j: &Json) -> Result<Spec> {
     })
 }
 
-/// The PJRT execution backend: one compiled executable per manifest entry.
+/// The PJRT execution backend: one compiled executable per manifest entry,
+/// plus block geometry for the synthesized batched entries.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    k_chunk: usize,
+    s: usize,
 }
 
 /// Load and compile every entry of an artifact directory.
@@ -66,11 +76,35 @@ pub fn load_dir(client: &xla::PjRtClient, dir: &Path) -> Result<ModelArtifacts> 
         entries.insert(name.clone(), Entry::new(name, inputs, outputs));
         exes.insert(name.clone(), exe);
     }
+    synthesize_batched_entries(&mut entries, &meta);
     Ok(ModelArtifacts::new(
-        meta,
+        meta.clone(),
         entries,
-        Box::new(PjrtBackend { client: client.clone(), exes }),
+        Box::new(PjrtBackend {
+            client: client.clone(),
+            exes,
+            k_chunk: meta.k_chunk,
+            s: meta.s,
+        }),
     ))
+}
+
+/// Manifest entries for the batched candidate surface when the artifact
+/// directory only ships the chunk-level executables (executed by
+/// decomposition at run time, see `synth_*` below). The specs come from
+/// the shared `runtime::batched_entry_specs`, so they cannot drift from
+/// the native manifest.
+fn synthesize_batched_entries(entries: &mut BTreeMap<String, Entry>, meta: &ModelMeta) {
+    for e in super::batched_entry_specs(meta.s) {
+        let base = if e.name == "decode_block" {
+            "decode_chunk"
+        } else {
+            "score_chunk"
+        };
+        if entries.contains_key(base) && !entries.contains_key(&e.name) {
+            entries.insert(e.name.clone(), e);
+        }
+    }
 }
 
 fn parse_meta(m: &Json) -> Result<ModelMeta> {
@@ -98,6 +132,45 @@ fn parse_meta(m: &Json) -> Result<ModelMeta> {
     })
 }
 
+/// Read a host-resident i32 scalar argument of a synthesized batched call
+/// (the decomposition needs its value on the host to drive the chunk loop).
+fn host_i32_scalar(ins: &[Input], i: usize, entry: &str) -> Result<i32> {
+    match ins.get(i) {
+        Some(Input::Host(a)) => Ok(a.i32s()?[0]),
+        Some(Input::Dev(_)) => err!(
+            "{entry}: arg {i} must be host-resident for the synthesized \
+             batched path"
+        ),
+        None => err!("{entry}: missing arg {i}"),
+    }
+}
+
+/// The hoisted device buffer for arg `i` when one was uploaded, else the
+/// caller's original input (already device-resident).
+fn hoisted_input<'a>(
+    hoisted: &'a [Option<DeviceBuf>],
+    ins: &[Input<'a>],
+    base: usize,
+    i: usize,
+) -> Input<'a> {
+    match &hoisted[i - base] {
+        Some(buf) => Input::Dev(buf),
+        None => ins[i],
+    }
+}
+
+/// Read a host-resident f32 row argument of a synthesized batched call.
+fn host_f32s<'a>(ins: &'a [Input<'a>], i: usize, entry: &str) -> Result<&'a [f32]> {
+    match ins.get(i) {
+        Some(Input::Host(a)) => a.f32s(),
+        Some(Input::Dev(_)) => err!(
+            "{entry}: arg {i} must be host-resident for the synthesized \
+             batched path"
+        ),
+        None => err!("{entry}: missing arg {i}"),
+    }
+}
+
 impl Backend for PjrtBackend {
     fn kind(&self) -> &'static str {
         "pjrt"
@@ -112,10 +185,25 @@ impl Backend for PjrtBackend {
     }
 
     fn run(&self, entry: &Entry, ins: &[Input]) -> Result<Vec<Arg>> {
+        if !self.exes.contains_key(&entry.name) {
+            // batched entries synthesized over the chunk-level executables
+            return match entry.name.as_str() {
+                "score_block" => self.synth_score_block(ins),
+                "score_blocks" => self.synth_score_blocks(ins),
+                "decode_block" => self.synth_decode_block(ins),
+                other => err!("no executable '{other}'"),
+            };
+        }
+        self.exec(&entry.name, &entry.outputs, ins)
+    }
+}
+
+impl PjrtBackend {
+    fn exec(&self, name: &str, out_specs: &[Spec], ins: &[Input]) -> Result<Vec<Arg>> {
         let exe = self
             .exes
-            .get(&entry.name)
-            .ok_or_else(|| Error::msg(format!("no executable '{}'", entry.name)))?;
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("no executable '{name}'")))?;
         // Explicit host->device transfer so every buffer is rust-owned and
         // freed by Drop (the C-side `execute(literals)` path leaks its
         // internal arg buffers — measured ~1.7 MB/step on train_step).
@@ -136,8 +224,7 @@ impl Backend for PjrtBackend {
                 Input::Dev(DeviceBuf::Pjrt(b)) => refs.push(b),
                 Input::Dev(DeviceBuf::Host(_)) => {
                     return err!(
-                        "{}: host-resident buffer passed to the PJRT backend",
-                        entry.name
+                        "{name}: host-resident buffer passed to the PJRT backend"
                     );
                 }
             }
@@ -146,18 +233,166 @@ impl Backend for PjrtBackend {
         let tuple = result[0][0].to_literal_sync()?;
         let outs = tuple.to_tuple()?;
         ensure!(
-            outs.len() == entry.outputs.len(),
-            "{}: {} outputs, {} expected",
-            entry.name,
+            outs.len() == out_specs.len(),
+            "{name}: {} outputs, {} expected",
             outs.len(),
-            entry.outputs.len()
+            out_specs.len()
         );
         outs.iter()
-            .zip(&entry.outputs)
+            .zip(out_specs)
             .map(|(lit, spec)| match spec.dtype.as_str() {
                 "i32" => Ok(Arg::I32(TensorI32::from_literal(lit)?)),
                 _ => Ok(Arg::F32(TensorF32::from_literal(lit)?)),
             })
             .collect()
+    }
+
+    fn score_chunk_specs(&self) -> Vec<Spec> {
+        vec![Spec::f32(vec![self.k_chunk])]
+    }
+
+    /// Upload the host-resident args at `range` once so the chunk loop
+    /// reuses device buffers instead of re-transferring per chunk (the
+    /// upload-once fast path the monolithic entries get for free).
+    fn hoist_host_args(
+        &self,
+        ins: &[Input],
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<Option<DeviceBuf>>> {
+        range
+            .map(|i| match ins[i] {
+                Input::Host(a) => Ok(Some(self.upload(a)?)),
+                Input::Dev(_) => Ok(None),
+            })
+            .collect()
+    }
+
+    /// `score_block` = `score_chunk` over `n_chunks` consecutive chunks,
+    /// concatenated in chunk order.
+    fn synth_score_block(&self, ins: &[Input]) -> Result<Vec<Arg>> {
+        ensure!(ins.len() == 7, "score_block: 7 args expected");
+        let n_chunks = host_i32_scalar(ins, 2, "score_block")?;
+        ensure!(
+            n_chunks > 0,
+            "score_block: n_chunks must be positive, got {n_chunks}"
+        );
+        let out_specs = self.score_chunk_specs();
+        let rows = self.hoist_host_args(ins, 3..7)?;
+        let mut logits = Vec::with_capacity(n_chunks as usize * self.k_chunk);
+        for c in 0..n_chunks {
+            let chunk = Arg::I32(TensorI32::scalar(c));
+            let sub: Vec<Input> = vec![
+                ins[0],
+                ins[1],
+                Input::Host(&chunk),
+                hoisted_input(&rows, ins, 3, 3),
+                hoisted_input(&rows, ins, 3, 4),
+                hoisted_input(&rows, ins, 3, 5),
+                hoisted_input(&rows, ins, 3, 6),
+            ];
+            let outs = self.exec("score_chunk", &out_specs, &sub)?;
+            logits.extend_from_slice(outs[0].f32s()?);
+        }
+        let n = logits.len();
+        Ok(vec![Arg::F32(TensorF32::new(vec![n], logits)?)])
+    }
+
+    /// `score_blocks` = `score_chunk` over every (block, chunk) pair,
+    /// block-major then chunk-major — the order the encoder reduces in.
+    fn synth_score_blocks(&self, ins: &[Input]) -> Result<Vec<Arg>> {
+        ensure!(ins.len() == 7, "score_blocks: 7 args expected");
+        let blocks: Vec<i32> = match ins.get(1) {
+            Some(Input::Host(a)) => a.i32s()?.to_vec(),
+            _ => {
+                return err!(
+                    "score_blocks: arg 1 must be host-resident for the \
+                     synthesized batched path"
+                )
+            }
+        };
+        let n_chunks = host_i32_scalar(ins, 2, "score_blocks")?;
+        ensure!(
+            n_chunks > 0,
+            "score_blocks: n_chunks must be positive, got {n_chunks}"
+        );
+        let nb = blocks.len();
+        ensure!(nb > 0, "score_blocks: empty block list");
+        let s = self.s;
+        let rows = [
+            host_f32s(ins, 3, "score_blocks")?,
+            host_f32s(ins, 4, "score_blocks")?,
+            host_f32s(ins, 5, "score_blocks")?,
+            host_f32s(ins, 6, "score_blocks")?,
+        ];
+        for v in rows.iter() {
+            ensure!(
+                v.len() == nb * s,
+                "score_blocks: row arg has {} values, expected {nb} blocks x S={s}",
+                v.len()
+            );
+        }
+        let out_specs = self.score_chunk_specs();
+        let mut logits =
+            Vec::with_capacity(nb * n_chunks as usize * self.k_chunk);
+        for (bi, &b) in blocks.iter().enumerate() {
+            let block_arg = Arg::I32(TensorI32::scalar(b));
+            // upload this block's rows once; all its chunks reuse them
+            let row_bufs: Vec<DeviceBuf> = rows
+                .iter()
+                .map(|v| {
+                    self.upload(&Arg::F32(TensorF32::new(
+                        vec![s],
+                        v[bi * s..(bi + 1) * s].to_vec(),
+                    )?))
+                })
+                .collect::<Result<Vec<DeviceBuf>>>()?;
+            for c in 0..n_chunks {
+                let chunk = Arg::I32(TensorI32::scalar(c));
+                let sub: Vec<Input> = vec![
+                    ins[0],
+                    Input::Host(&block_arg),
+                    Input::Host(&chunk),
+                    Input::Dev(&row_bufs[0]),
+                    Input::Dev(&row_bufs[1]),
+                    Input::Dev(&row_bufs[2]),
+                    Input::Dev(&row_bufs[3]),
+                ];
+                let outs = self.exec("score_chunk", &out_specs, &sub)?;
+                logits.extend_from_slice(outs[0].f32s()?);
+            }
+        }
+        let n = logits.len();
+        Ok(vec![Arg::F32(TensorF32::new(vec![n], logits)?)])
+    }
+
+    /// `decode_block` = `decode_chunk` of the containing chunk + row
+    /// selection on the host.
+    fn synth_decode_block(&self, ins: &[Input]) -> Result<Vec<Arg>> {
+        ensure!(ins.len() == 4, "decode_block: 4 args expected");
+        let index = host_i32_scalar(ins, 2, "decode_block")?;
+        ensure!(
+            index >= 0,
+            "decode_block: negative candidate index {index}"
+        );
+        let (chunk, row) =
+            crate::codec::chunk_and_row(index as u64, self.k_chunk);
+        let chunk_arg = Arg::I32(TensorI32::scalar(chunk as i32));
+        let sub: Vec<Input> =
+            vec![ins[0], ins[1], Input::Host(&chunk_arg), ins[3]];
+        let outs = self.exec(
+            "decode_chunk",
+            &[Spec::f32(vec![self.k_chunk, self.s])],
+            &sub,
+        )?;
+        let cand = outs[0].as_f32()?;
+        ensure!(
+            cand.shape == vec![self.k_chunk, self.s],
+            "decode_chunk returned {:?}",
+            cand.shape
+        );
+        Ok(vec![Arg::F32(TensorF32::new(
+            vec![self.s],
+            cand.row(row).to_vec(),
+        )?)])
     }
 }

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::codec::MrcFile;
 use crate::coordinator::encoder::decode_single_block;
 use crate::model::Layout;
-use crate::runtime::ModelArtifacts;
+use crate::runtime::{Input, ModelArtifacts};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::util::stats::{summarize, Summary};
 use crate::util::Result;
@@ -143,11 +143,16 @@ impl<'a> Server<'a> {
         if self.cfg.lazy_decode {
             self.decode_all()?; // first request would need all layers anyway
         }
-        let w = TensorF32::new(vec![meta.b, meta.s], self.w_blocks.clone())?;
-        let amap = TensorI32::new(
+        // weights + assemble map uploaded once and reused for every batch:
+        // no per-request clone or re-validation of ~B*S + n_total values
+        let w_buf = self.arts.upload(&Arg::F32(TensorF32::new(
+            vec![meta.b, meta.s],
+            self.w_blocks.clone(),
+        )?))?;
+        let amap_buf = self.arts.upload(&Arg::I32(TensorI32::new(
             vec![meta.n_total],
             self.layout.assemble_map.clone(),
-        )?;
+        )?))?;
 
         let wall = Instant::now();
         let mut latencies = Vec::new();
@@ -189,12 +194,13 @@ impl<'a> Server<'a> {
             let mut shape = vec![eb];
             shape.extend_from_slice(&meta.input_shape);
             let t_exec = Instant::now();
-            let outs = self.arts.invoke(
+            let x_arg = Arg::F32(TensorF32::new(shape, xb)?);
+            let outs = self.arts.invoke_mixed(
                 "eval_batch",
                 &[
-                    Arg::F32(w.clone()),
-                    Arg::I32(amap.clone()),
-                    Arg::F32(TensorF32::new(shape, xb)?),
+                    Input::Dev(&w_buf),
+                    Input::Dev(&amap_buf),
+                    Input::Host(&x_arg),
                 ],
             )?;
             exec_times.push(t_exec.elapsed().as_secs_f64());

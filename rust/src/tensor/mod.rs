@@ -1,7 +1,10 @@
 //! Minimal host tensors shuttled across the [`crate::runtime::Backend`]
-//! boundary. The native backend computes on these directly; the optional
-//! PJRT backend (`--features xla`) converts them to device literals via the
-//! feature-gated methods at the bottom.
+//! boundary, plus the cache-blocked dense kernels ([`linalg`]) the native
+//! backend computes with. The optional PJRT backend (`--features xla`)
+//! converts tensors to device literals via the feature-gated methods at the
+//! bottom.
+
+pub mod linalg;
 
 use crate::util::Result;
 use crate::{ensure, err};

@@ -1,7 +1,9 @@
-//! Shared utilities: error type, CLI args, JSON, stats, logging, prop-testing.
+//! Shared utilities: error type, CLI args, JSON, stats, logging,
+//! prop-testing, and the scoped-thread worker pool ([`pool`]).
 
 pub mod args;
 pub mod json;
+pub mod pool;
 pub mod quickprop;
 pub mod stats;
 

@@ -1,0 +1,217 @@
+//! Scoped-thread worker pool for the candidate hot path — zero dependencies,
+//! deterministic by construction.
+//!
+//! The only primitive is [`parallel_runs_mut`]: split a mutable buffer into
+//! fixed-size *runs* (one per independent work item — e.g. one candidate
+//! chunk's logits), hand each worker a contiguous span of whole runs, and
+//! join. Workers write disjoint spans, so the result is bit-identical at
+//! every thread count; any ordered reduction (Gumbel-max sampling, argmax)
+//! happens afterwards on the caller's thread in run order. See
+//! `docs/perf.md` for why this preserves the `.mrc` protocol exactly.
+//!
+//! Thread-count resolution, most specific wins:
+//! 1. a scoped [`override_threads`]/[`with_threads`] guard on the calling
+//!    thread (how `MiracleCfg::threads` and the invariance tests plumb in),
+//! 2. the `MIRACLE_THREADS` env var (`0`/unset/invalid = auto, with a
+//!    warning on invalid values),
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! Threads are scoped (`std::thread::scope`) and spawned per call: at the
+//! hot path's granularity (a block's worth of chunks, millions of normal
+//! draws) the ~tens of microseconds of spawn cost is noise, and no idle
+//! pool threads linger in library callers.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    static OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("MIRACLE_THREADS") {
+        Err(_) => 0,
+        Ok(v) if v.is_empty() || v == "0" => 0,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                crate::info!(
+                    "ignoring invalid MIRACLE_THREADS '{v}' \
+                     (want a positive integer; using auto)"
+                );
+                0
+            }
+        },
+    })
+}
+
+/// The worker count a parallel region started from this thread would use.
+pub fn current_threads() -> usize {
+    let o = OVERRIDE.with(|c| c.get());
+    if o != 0 {
+        return o;
+    }
+    let e = env_threads();
+    if e != 0 {
+        return e;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// RAII guard restoring the previous per-thread override on drop.
+pub struct ThreadsGuard {
+    prev: usize,
+    active: bool,
+}
+
+/// Override the worker count for parallel regions started from this thread
+/// until the guard drops. `n = 0` is a no-op (keep env/auto resolution) so
+/// config fields can be plumbed through unconditionally.
+pub fn override_threads(n: usize) -> ThreadsGuard {
+    if n == 0 {
+        return ThreadsGuard { prev: 0, active: false };
+    }
+    let prev = OVERRIDE.with(|c| {
+        let p = c.get();
+        c.set(n);
+        p
+    });
+    ThreadsGuard { prev, active: true }
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        if self.active {
+            let p = self.prev;
+            OVERRIDE.with(|c| c.set(p));
+        }
+    }
+}
+
+/// Run `f` with the worker count overridden to `n` (0 = no override).
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _guard = override_threads(n);
+    f()
+}
+
+/// Process `data` as `data.len() / run_len` fixed-size runs, fanned across
+/// the pool. Each worker receives `f(first_run_index, span)` exactly once
+/// with a contiguous span of whole runs and must handle
+/// `span.chunks_mut(run_len)` itself (this lets it reuse per-worker scratch
+/// buffers across its runs). Spans are disjoint, so output bytes are
+/// identical at every thread count.
+///
+/// Panics if `run_len` is zero or does not divide `data.len()`. Worker
+/// panics propagate to the caller after all workers joined.
+pub fn parallel_runs_mut<T, F>(data: &mut [T], run_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(run_len > 0, "parallel_runs_mut: run_len must be positive");
+    assert!(
+        data.len() % run_len == 0,
+        "parallel_runs_mut: data length {} is not a multiple of run length {run_len}",
+        data.len()
+    );
+    let n_runs = data.len() / run_len;
+    if n_runs == 0 {
+        return;
+    }
+    let nt = current_threads().min(n_runs);
+    if nt <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = (n_runs + nt - 1) / nt;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut start = 0usize;
+        while start < n_runs {
+            let take = per.min(n_runs - start);
+            let slice = std::mem::take(&mut rest);
+            let (head, tail) = slice.split_at_mut(take * run_len);
+            rest = tail;
+            scope.spawn(move || f(start, head));
+            start += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_run_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let mut data = vec![0u32; 40];
+            with_threads(threads, || {
+                parallel_runs_mut(&mut data, 4, |first_run, span| {
+                    for (i, run) in span.chunks_mut(4).enumerate() {
+                        for v in run.iter_mut() {
+                            *v += (first_run + i) as u32 + 1;
+                        }
+                    }
+                });
+            });
+            let expect: Vec<u32> =
+                (0..10u32).flat_map(|r| [r + 1; 4]).collect();
+            assert_eq!(data, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn output_is_thread_count_invariant() {
+        let work = |first: usize, span: &mut [f64]| {
+            for (i, run) in span.chunks_mut(3).enumerate() {
+                let r = (first + i) as f64;
+                run[0] = r.sin();
+                run[1] = r.cos();
+                run[2] = (r + 1.0).ln();
+            }
+        };
+        let mut base = vec![0f64; 3 * 17];
+        with_threads(1, || parallel_runs_mut(&mut base, 3, work));
+        for threads in [2, 5, 16] {
+            let mut out = vec![0f64; 3 * 17];
+            with_threads(threads, || parallel_runs_mut(&mut out, 3, work));
+            assert_eq!(out, base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_runs_is_fine() {
+        let mut data = vec![0usize; 2];
+        with_threads(64, || {
+            parallel_runs_mut(&mut data, 1, |first, span| {
+                span[0] = first + 7;
+            });
+        });
+        assert_eq!(data, vec![7, 8]);
+    }
+
+    #[test]
+    fn override_guard_scopes_and_restores() {
+        let auto = current_threads();
+        assert!(auto >= 1);
+        with_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            with_threads(5, || assert_eq!(current_threads(), 5));
+            assert_eq!(current_threads(), 3);
+            // 0 = no override: outer scope still visible
+            with_threads(0, || assert_eq!(current_threads(), 3));
+        });
+        assert_eq!(current_threads(), auto);
+    }
+
+    #[test]
+    fn empty_data_is_a_no_op() {
+        let mut data: Vec<u8> = Vec::new();
+        parallel_runs_mut(&mut data, 4, |_, _| panic!("no runs to process"));
+    }
+}

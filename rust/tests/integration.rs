@@ -25,6 +25,7 @@ fn tiny_cfg() -> MiracleCfg {
         layout_seed: 0xABCD,
         protocol_seed: 7,
         train_seed: 42,
+        threads: 0,
     }
 }
 

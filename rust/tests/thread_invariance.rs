@@ -1,0 +1,153 @@
+//! Thread-count invariance of the candidate hot path.
+//!
+//! The seed tree makes every chunk's randomness independently addressable,
+//! so fanning chunk scoring across workers must not change a single bit of
+//! the protocol: the selected candidate indices, the `.mrc` bytes, and the
+//! decoded weights have to be identical with `MIRACLE_THREADS` = 1, 2 and 8
+//! (plumbed here through `MiracleCfg::threads` / the pool's scoped
+//! override, which take precedence over the env var).
+
+use miracle::codec::MrcFile;
+use miracle::coordinator::{self, encoder, MiracleCfg, Session};
+use miracle::data;
+use miracle::runtime::{self, Runtime};
+use miracle::util::pool;
+use miracle::util::quickprop;
+
+fn cfg(threads: usize) -> MiracleCfg {
+    MiracleCfg {
+        c_loc_bits: 9,
+        i0: 0,
+        i_intermediate: 0,
+        data_scale: 256.0,
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Train briefly, encode every block, decode the resulting container.
+/// Returns (indices, frozen weights, mrc bytes, decoded model).
+fn encode_everything(threads: usize) -> (Vec<u64>, Vec<Vec<f32>>, Vec<u8>, Vec<f32>) {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let train = data::synth_protos(256, 16, 4, 77);
+    let cfg = cfg(threads);
+    let mut session = Session::new(&arts, &train, &cfg).unwrap();
+    for _ in 0..40 {
+        session.train_step(true).unwrap();
+    }
+    let mut indices = Vec::new();
+    let mut weights = Vec::new();
+    for b in 0..arts.meta.b {
+        let outcome = encoder::encode_block(&mut session, b).unwrap();
+        indices.push(outcome.index);
+        weights.push(outcome.weights);
+    }
+    let mrc = MrcFile {
+        model: arts.meta.name.clone(),
+        layout_seed: cfg.layout_seed,
+        protocol_seed: cfg.protocol_seed,
+        backend: arts.backend_family(),
+        b: arts.meta.b,
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: cfg.c_loc_bits,
+        lsp: session.state.lsp.clone(),
+        indices: indices.clone(),
+    };
+    let decoded = coordinator::decode_model(&arts, &mrc).unwrap();
+    (indices, weights, mrc.to_bytes(), decoded)
+}
+
+#[test]
+fn encode_and_decode_are_identical_at_every_thread_count() {
+    let base = encode_everything(1);
+    assert!(
+        base.0.iter().any(|&i| i != 0),
+        "degenerate run: every selected index is 0"
+    );
+    for threads in [2usize, 8] {
+        let got = encode_everything(threads);
+        assert_eq!(got.0, base.0, "indices differ at {threads} threads");
+        assert_eq!(got.1, base.1, "frozen weights differ at {threads} threads");
+        assert_eq!(got.2, base.2, ".mrc bytes differ at {threads} threads");
+        assert_eq!(got.3, base.3, "decoded model differs at {threads} threads");
+    }
+}
+
+#[test]
+fn batched_encode_blocks_matches_sequential_encode() {
+    // Same session state, same blocks: one score_blocks sweep must select
+    // exactly what per-block encode_block calls select (and freeze the same
+    // weights), at any thread count.
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let train = data::synth_protos(256, 16, 4, 123);
+    let run = |batched: bool, threads: usize| {
+        let mut session = Session::new(&arts, &train, &cfg(threads)).unwrap();
+        for _ in 0..25 {
+            session.train_step(true).unwrap();
+        }
+        let blocks: Vec<usize> = (0..arts.meta.b).collect();
+        let outcomes = if batched {
+            encoder::encode_blocks(&mut session, &blocks).unwrap()
+        } else {
+            blocks
+                .iter()
+                .map(|&b| encoder::encode_block(&mut session, b).unwrap())
+                .collect()
+        };
+        let indices: Vec<u64> = outcomes.iter().map(|o| o.index).collect();
+        let weights: Vec<Vec<f32>> =
+            outcomes.iter().map(|o| o.weights.clone()).collect();
+        (indices, weights, session.frozen_w.clone())
+    };
+    let sequential = run(false, 1);
+    for threads in [1usize, 2, 8] {
+        let batched = run(true, threads);
+        assert_eq!(batched, sequential, "threads={threads}");
+    }
+}
+
+#[test]
+fn property_thread_invariance_across_seeds_and_budgets() {
+    // Random protocol seeds and coding budgets: 1-thread and 4-thread
+    // encodes of a single block must agree exactly.
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let train = data::synth_protos(128, 16, 4, 5);
+    quickprop::check("thread invariance", 6, |g| {
+        let c_loc_bits = g.usize_in(6, 10) as u8;
+        let protocol_seed = g.i64_in(-1000, 1000) as i32;
+        let train_seed = g.rng.next_u64();
+        let block = g.usize_in(0, arts.meta.b - 1);
+        let encode = |threads: usize| {
+            let cfg = MiracleCfg {
+                c_loc_bits,
+                i0: 0,
+                i_intermediate: 0,
+                data_scale: 128.0,
+                protocol_seed,
+                train_seed,
+                threads,
+                ..Default::default()
+            };
+            let mut session = Session::new(&arts, &train, &cfg).unwrap();
+            for _ in 0..10 {
+                session.train_step(true).unwrap();
+            }
+            let o = encoder::encode_block(&mut session, block).unwrap();
+            (o.index, o.weights)
+        };
+        let single = encode(1);
+        let multi = encode(4);
+        assert_eq!(single, multi, "c_loc={c_loc_bits} seed={protocol_seed}");
+    });
+}
+
+#[test]
+fn pool_override_beats_env_resolution() {
+    // guard-scoped overrides are what the tests above rely on — make sure
+    // they actually apply on this thread
+    pool::with_threads(3, || assert_eq!(pool::current_threads(), 3));
+}
