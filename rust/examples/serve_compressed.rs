@@ -54,6 +54,7 @@ fn main() -> Result<()> {
         max_batch,
         batch_window: Duration::from_millis(2),
         lazy_decode: lazy,
+        ..Default::default()
     };
     let mut server = Server::new(&arts, &result.mrc, server_cfg)?;
     let feat = test.feature_dim();
@@ -84,7 +85,10 @@ fn main() -> Result<()> {
     );
     println!("exec/batch:  {:.2} ms", stats.exec_time.mean * 1e3);
     println!("decode:      {:.3} s for {} blocks", stats.decode_secs, result.mrc.b);
-    let agree = responses.iter().filter(|r| r.pred < 4).count();
+    let agree = responses
+        .iter()
+        .filter(|r| r.prediction().map(|p| p.pred < 4).unwrap_or(false))
+        .count();
     assert_eq!(agree, responses.len());
     Ok(())
 }

@@ -198,6 +198,13 @@ impl<'a> BitReader<'a> {
     pub fn bit_pos(&self) -> usize {
         self.pos
     }
+
+    /// Bits left before exhaustion. Container parsers use this to bound
+    /// header-declared lengths against the physical input size *before*
+    /// allocating (a hostile varint must not drive `Vec::with_capacity`).
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
 }
 
 /// Code length (bits) of the Vitányi–Li code for n — used to *account* for
@@ -303,6 +310,17 @@ mod tests {
         let mut r = BitReader::new(&bytes);
         assert!(r.read_bits(8).is_ok());
         assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn remaining_bits_tracks_consumption() {
+        let bytes = [0u8; 4];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.remaining_bits(), 32);
+        r.read_bits(5).unwrap();
+        assert_eq!(r.remaining_bits(), 27);
+        r.read_bits(27).unwrap();
+        assert_eq!(r.remaining_bits(), 0);
     }
 
     #[test]

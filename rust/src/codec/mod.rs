@@ -10,10 +10,19 @@
 //! deterministically; the index payload is the Vitányi–Li "transmit the
 //! index of the sample" code.
 //!
-//! Layout (byte-aligned header, then a packed bit payload):
+//! Because the file *is* the model, a single undetected bit flip in the
+//! index stream silently replays the wrong candidate and decodes a
+//! plausible-but-wrong network. The current container revision (`MRC2`)
+//! therefore carries a CRC-32 over the header and one CRC-32 per
+//! [`PAYLOAD_PAGE_BYTES`]-sized page of the packed index payload; readers
+//! verify both before any index is trusted, and every header-declared
+//! length is bounds-checked against the actual file size before any
+//! allocation. Legacy `MRC1` files (no integrity section) remain readable.
+//!
+//! v2 layout (byte-aligned header, then a packed bit payload):
 //!
 //! ```text
-//! magic "MRC1"
+//! magic "MRC2"
 //! varint  name_len, name bytes
 //! u64     layout_seed
 //! u32     protocol_seed (candidate-stream base key)
@@ -21,14 +30,116 @@
 //! varint  B, S, k_chunk
 //! u8      c_loc_bits
 //! varint  n_layers, then n_layers * f32 (log sigma_p)
-//! payload: B indices, c_loc_bits each (MSB first)
+//! u32     header CRC-32 (over every preceding byte)
+//! n_pages * u32  payload page CRC-32s (n_pages = ceil(payload_bytes/1024))
+//! payload: B indices, c_loc_bits each (MSB first), zero-padded to a byte
 //! ```
+//!
+//! Malformed input is reported through the structured [`MrcError`] type so
+//! callers (CLI, server, tests) can give a one-line diagnosis instead of a
+//! low-level parse trace.
 
 use crate::bitstream::{BitReader, BitWriter};
+use crate::util::crc32::crc32;
 use crate::util::{Error, Result};
 use crate::{ensure, err};
 
-pub const MAGIC: &[u8; 4] = b"MRC1";
+/// Current container magic (format revision 2: CRC-protected).
+pub const MAGIC: &[u8; 4] = b"MRC2";
+/// Legacy magic (revision 1: no integrity section). Still readable.
+pub const MAGIC_V1: &[u8; 4] = b"MRC1";
+
+/// Payload bytes covered by one payload CRC-32. A page spans
+/// `⌈8·1024/C_loc⌉` blocks, so a page-CRC mismatch localizes corruption to
+/// that block range; for small models the whole payload is one page and the
+/// integrity section costs 8 bytes total (header CRC + one page CRC).
+pub const PAYLOAD_PAGE_BYTES: usize = 1024;
+
+/// Structured decode/load failure for `.mrc` containers. Every variant
+/// renders as a one-line diagnosis; none of them can be produced by a panic
+/// or an unbounded allocation — malformed input of any shape (truncation,
+/// bit flips, hostile length fields) lands here instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MrcError {
+    /// Reading the file itself failed.
+    Io { path: String, detail: String },
+    /// The first four bytes are not an MRC magic.
+    NotMrc { found: [u8; 4] },
+    /// The buffer ended before the declared content did.
+    Truncated,
+    /// A header-declared length/count does not fit the actual file size
+    /// (checked before any allocation).
+    Bounds { field: &'static str, declared: u64, limit: u64 },
+    /// Header bytes fail their CRC — seeds/geometry cannot be trusted.
+    HeaderCrc { stored: u32, computed: u32 },
+    /// A payload page fails its CRC — the index stream is corrupt within
+    /// the given block range `[blocks.0, blocks.1)`.
+    PayloadCrc { page: usize, blocks: (u64, u64), stored: u32, computed: u32 },
+    /// Bytes remain after the declared content (e.g. a v2 file whose magic
+    /// was damaged into a v1 magic, or appended garbage).
+    TrailingGarbage { extra_bits: usize },
+    /// Anything else structurally wrong (bad UTF-8 name, unknown backend
+    /// code, out-of-range field values).
+    Malformed(String),
+}
+
+impl std::fmt::Display for MrcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MrcError::Io { path, detail } => write!(f, "read {path}: {detail}"),
+            MrcError::NotMrc { found } => {
+                write!(f, "not an MRC file (magic {found:?})")
+            }
+            MrcError::Truncated => {
+                write!(f, "container truncated: ran out of bytes mid-field")
+            }
+            MrcError::Bounds { field, declared, limit } => write!(
+                f,
+                "header declares {field} = {declared} but the file can hold \
+                 at most {limit} — refusing to allocate"
+            ),
+            MrcError::HeaderCrc { stored, computed } => write!(
+                f,
+                "header CRC mismatch (stored {stored:#010x}, computed \
+                 {computed:#010x}) — header bytes are corrupt"
+            ),
+            MrcError::PayloadCrc { page, blocks, stored, computed } => write!(
+                f,
+                "payload page {page} CRC mismatch (blocks {}..{}, stored \
+                 {stored:#010x}, computed {computed:#010x}) — index stream \
+                 is corrupt",
+                blocks.0, blocks.1
+            ),
+            MrcError::TrailingGarbage { extra_bits } => write!(
+                f,
+                "{extra_bits} unexpected bits after the declared payload"
+            ),
+            MrcError::Malformed(m) => write!(f, "malformed container: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MrcError {}
+
+impl From<MrcError> for Error {
+    fn from(e: MrcError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl MrcError {
+    /// Map a low-level bitstream error onto the structured kinds.
+    fn from_read(e: Error) -> MrcError {
+        let m = e.to_string();
+        if m.contains("exhausted") {
+            MrcError::Truncated
+        } else {
+            MrcError::Malformed(m)
+        }
+    }
+}
+
+pub type MrcResult<T> = std::result::Result<T, MrcError>;
 
 /// Split a transmitted candidate index into `(chunk, row-within-chunk)` for
 /// a given scoring chunk size. The payload's index space is flat — chunking
@@ -86,10 +197,10 @@ pub struct MrcFile {
 }
 
 impl MrcFile {
-    /// Serialize to bytes.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut w = BitWriter::new();
-        for &b in MAGIC {
+    /// Header fields shared by both revisions (everything between the magic
+    /// and the integrity/payload section), byte-aligned.
+    fn write_header(&self, w: &mut BitWriter, magic: &[u8; 4]) {
+        for &b in magic {
             w.write_bits(b as u64, 8);
         }
         w.write_varint(self.model.len() as u64);
@@ -107,56 +218,229 @@ impl MrcFile {
         for &v in &self.lsp {
             w.write_bits(v.to_bits() as u64, 32);
         }
+    }
+
+    /// The packed index payload: B × c_loc_bits bits, zero-padded to a byte.
+    fn payload_bytes(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
         for &idx in &self.indices {
             w.write_bits(idx, self.c_loc_bits as u32);
         }
         w.finish()
     }
 
-    pub fn from_bytes(bytes: &[u8]) -> Result<MrcFile> {
-        let mut r = BitReader::new(bytes);
-        let mut magic = [0u8; 4];
-        for m in magic.iter_mut() {
-            *m = r.read_bits(8)? as u8;
+    /// Serialize to bytes in the current (v2, CRC-protected) revision.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        self.write_header(&mut w, MAGIC);
+        let mut out = w.finish(); // header is byte-aligned by construction
+        let header_crc = crc32(&out);
+        out.extend_from_slice(&header_crc.to_be_bytes());
+        let payload = self.payload_bytes();
+        for page in payload.chunks(PAYLOAD_PAGE_BYTES) {
+            out.extend_from_slice(&crc32(page).to_be_bytes());
         }
-        ensure!(&magic == MAGIC, "not an MRC file (magic {magic:?})");
-        let name_len = r.read_varint()? as usize;
-        ensure!(name_len < 4096, "unreasonable name length {name_len}");
-        let mut name = Vec::with_capacity(name_len);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Serialize in the legacy v1 layout (no integrity section). Kept for
+    /// the golden-format compatibility fixtures and migration tooling; new
+    /// files should always use [`MrcFile::to_bytes`].
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        self.write_header(&mut w, MAGIC_V1);
+        for &idx in &self.indices {
+            w.write_bits(idx, self.c_loc_bits as u32);
+        }
+        w.finish()
+    }
+
+    /// Container revision of a byte buffer (1 or 2) from its magic, without
+    /// parsing anything else.
+    pub fn version_of(bytes: &[u8]) -> MrcResult<u8> {
+        match bytes.get(..4) {
+            Some(m) if m == MAGIC_V1 => Ok(1),
+            Some(m) if m == MAGIC => Ok(2),
+            Some(m) => Err(MrcError::NotMrc { found: [m[0], m[1], m[2], m[3]] }),
+            None => Err(MrcError::Truncated),
+        }
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> MrcResult<MrcFile> {
+        let version = MrcFile::version_of(bytes)?;
+        let mut r = BitReader::new(bytes);
+        r.read_bits(32).map_err(MrcError::from_read)?; // past the magic
+
+        // --- header fields, every declared size bounded by what the file
+        // can actually hold BEFORE the corresponding allocation ---
+        let name_len = r.read_varint().map_err(MrcError::from_read)?;
+        let name_limit = (r.remaining_bits() / 8).min(4095) as u64;
+        if name_len > name_limit {
+            return Err(MrcError::Bounds {
+                field: "name_len",
+                declared: name_len,
+                limit: name_limit,
+            });
+        }
+        let mut name = Vec::with_capacity(name_len as usize);
         for _ in 0..name_len {
-            name.push(r.read_bits(8)? as u8);
+            name.push(r.read_bits(8).map_err(MrcError::from_read)? as u8);
         }
         let model = String::from_utf8(name)
-            .map_err(|_| Error::msg("bad model name encoding"))?;
-        let layout_seed = r.read_bits(64)?;
-        let protocol_seed = r.read_bits(32)? as u32 as i32;
-        let backend = BackendFamily::from_code(r.read_bits(8)? as u8)?;
-        let b = r.read_varint()? as usize;
-        let s = r.read_varint()? as usize;
-        let k_chunk = r.read_varint()? as usize;
-        let c_loc_bits = r.read_bits(8)? as u8;
-        ensure!(
-            (1..=63).contains(&c_loc_bits),
-            "bad c_loc_bits {c_loc_bits}"
-        );
-        let n_layers = r.read_varint()? as usize;
-        ensure!(n_layers < 1024, "unreasonable layer count {n_layers}");
-        let mut lsp = Vec::with_capacity(n_layers);
+            .map_err(|_| MrcError::Malformed("bad model name encoding".into()))?;
+        let layout_seed = r.read_bits(64).map_err(MrcError::from_read)?;
+        let protocol_seed =
+            r.read_bits(32).map_err(MrcError::from_read)? as u32 as i32;
+        let backend_code = r.read_bits(8).map_err(MrcError::from_read)? as u8;
+        let backend = BackendFamily::from_code(backend_code)
+            .map_err(|e| MrcError::Malformed(e.to_string()))?;
+        let b = r.read_varint().map_err(MrcError::from_read)?;
+        let s = r.read_varint().map_err(MrcError::from_read)?;
+        let k_chunk = r.read_varint().map_err(MrcError::from_read)?;
+        for (field, v) in [("S", s), ("k_chunk", k_chunk)] {
+            if v > u32::MAX as u64 {
+                return Err(MrcError::Bounds {
+                    field,
+                    declared: v,
+                    limit: u32::MAX as u64,
+                });
+            }
+        }
+        let c_loc_bits = r.read_bits(8).map_err(MrcError::from_read)? as u8;
+        if !(1..=63).contains(&c_loc_bits) {
+            return Err(MrcError::Malformed(format!(
+                "bad c_loc_bits {c_loc_bits}"
+            )));
+        }
+        let n_layers = r.read_varint().map_err(MrcError::from_read)?;
+        let layer_limit = ((r.remaining_bits() / 32) as u64).min(1023);
+        if n_layers > layer_limit {
+            return Err(MrcError::Bounds {
+                field: "n_layers",
+                declared: n_layers,
+                limit: layer_limit,
+            });
+        }
+        let mut lsp = Vec::with_capacity(n_layers as usize);
         for _ in 0..n_layers {
-            lsp.push(f32::from_bits(r.read_bits(32)? as u32));
+            lsp.push(f32::from_bits(
+                r.read_bits(32).map_err(MrcError::from_read)? as u32,
+            ));
         }
-        let mut indices = Vec::with_capacity(b);
-        for _ in 0..b {
-            indices.push(r.read_bits(c_loc_bits as u32)?);
-        }
+
+        // payload size implied by the (not yet trusted) header
+        let payload_bits = b
+            .checked_mul(c_loc_bits as u64)
+            .ok_or(MrcError::Bounds { field: "B", declared: b, limit: u64::MAX })?;
+        let payload_len = payload_bits.div_ceil(8);
+
+        let indices = if version >= 2 {
+            // --- integrity section: header CRC, then per-page payload CRCs ---
+            debug_assert_eq!(r.bit_pos() % 8, 0, "header must be byte-aligned");
+            let header_end = r.bit_pos() / 8;
+            let stored = r.read_bits(32).map_err(MrcError::from_read)? as u32;
+            let computed = crc32(&bytes[..header_end]);
+            if stored != computed {
+                return Err(MrcError::HeaderCrc { stored, computed });
+            }
+            // header is now authentic: its declared sizes are what the
+            // encoder wrote, but the file must still physically hold them
+            let n_pages = payload_len.div_ceil(PAYLOAD_PAGE_BYTES as u64);
+            let expected_rest = n_pages
+                .checked_mul(4)
+                .and_then(|v| v.checked_add(payload_len))
+                .ok_or(MrcError::Bounds {
+                    field: "B",
+                    declared: b,
+                    limit: u64::MAX,
+                })?;
+            let rest = (r.remaining_bits() / 8) as u64;
+            if expected_rest > rest {
+                return Err(MrcError::Bounds {
+                    field: "payload",
+                    declared: expected_rest,
+                    limit: rest,
+                });
+            }
+            if expected_rest < rest {
+                return Err(MrcError::TrailingGarbage {
+                    extra_bits: (rest - expected_rest) as usize * 8,
+                });
+            }
+            let mut page_crcs = Vec::with_capacity(n_pages as usize);
+            for _ in 0..n_pages {
+                page_crcs
+                    .push(r.read_bits(32).map_err(MrcError::from_read)? as u32);
+            }
+            let payload_start = r.bit_pos() / 8;
+            let payload = &bytes[payload_start..];
+            debug_assert_eq!(payload.len() as u64, payload_len);
+            for (page, (slice, &stored)) in
+                payload.chunks(PAYLOAD_PAGE_BYTES).zip(&page_crcs).enumerate()
+            {
+                let computed = crc32(slice);
+                if stored != computed {
+                    let lo = (page * PAYLOAD_PAGE_BYTES) as u64 * 8
+                        / c_loc_bits as u64;
+                    let end_byte =
+                        (page * PAYLOAD_PAGE_BYTES + slice.len()) as u64;
+                    let hi = b.min(
+                        (end_byte * 8 + c_loc_bits as u64 - 1)
+                            / c_loc_bits as u64,
+                    );
+                    return Err(MrcError::PayloadCrc {
+                        page,
+                        blocks: (lo, hi),
+                        stored,
+                        computed,
+                    });
+                }
+            }
+            let mut pr = BitReader::new(payload);
+            let mut indices = Vec::with_capacity(b as usize);
+            for _ in 0..b {
+                indices.push(
+                    pr.read_bits(c_loc_bits as u32)
+                        .map_err(MrcError::from_read)?,
+                );
+            }
+            indices
+        } else {
+            // --- legacy v1: no integrity section; still refuse to allocate
+            // past what the file holds, and reject trailing bytes (a v2
+            // container whose magic byte was damaged into "MRC1" would
+            // otherwise misparse its CRC section as indices) ---
+            if payload_bits > r.remaining_bits() as u64 {
+                return Err(MrcError::Bounds {
+                    field: "B",
+                    declared: b,
+                    limit: r.remaining_bits() as u64 / c_loc_bits as u64,
+                });
+            }
+            let mut indices = Vec::with_capacity(b as usize);
+            for _ in 0..b {
+                indices.push(
+                    r.read_bits(c_loc_bits as u32)
+                        .map_err(MrcError::from_read)?,
+                );
+            }
+            if r.remaining_bits() >= 8 {
+                return Err(MrcError::TrailingGarbage {
+                    extra_bits: r.remaining_bits(),
+                });
+            }
+            indices
+        };
+
         Ok(MrcFile {
             model,
             layout_seed,
             protocol_seed,
             backend,
-            b,
-            s,
-            k_chunk,
+            b: b as usize,
+            s: s as usize,
+            k_chunk: k_chunk as usize,
             c_loc_bits,
             lsp,
             indices,
@@ -168,13 +452,16 @@ impl MrcFile {
         Ok(())
     }
 
-    pub fn load(path: &str) -> Result<MrcFile> {
-        let bytes = std::fs::read(path)
-            .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
+    pub fn load(path: &str) -> MrcResult<MrcFile> {
+        let bytes = std::fs::read(path).map_err(|e| MrcError::Io {
+            path: path.to_string(),
+            detail: e.to_string(),
+        })?;
         MrcFile::from_bytes(&bytes)
     }
 
-    /// Total size in bits (header + payload) — the number Table 1 reports.
+    /// Total size in bits (header + integrity section + payload) — the
+    /// honest on-disk figure Table 1 reports.
     pub fn total_bits(&self) -> usize {
         self.to_bytes().len() * 8
     }
@@ -248,10 +535,34 @@ mod tests {
     }
 
     #[test]
+    fn v1_round_trip_still_supported() {
+        let m = sample();
+        let bytes = m.to_bytes_v1();
+        assert_eq!(MrcFile::version_of(&bytes).unwrap(), 1);
+        let m2 = MrcFile::from_bytes(&bytes).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn version_detection() {
+        let m = sample();
+        assert_eq!(MrcFile::version_of(&m.to_bytes()).unwrap(), 2);
+        assert_eq!(MrcFile::version_of(&m.to_bytes_v1()).unwrap(), 1);
+        assert!(matches!(
+            MrcFile::version_of(b"JUNKJUNK"),
+            Err(MrcError::NotMrc { .. })
+        ));
+        assert_eq!(MrcFile::version_of(b"MR"), Err(MrcError::Truncated));
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let mut bytes = sample().to_bytes();
         bytes[0] = b'X';
-        assert!(MrcFile::from_bytes(&bytes).is_err());
+        assert!(matches!(
+            MrcFile::from_bytes(&bytes),
+            Err(MrcError::NotMrc { .. })
+        ));
     }
 
     #[test]
@@ -259,7 +570,7 @@ mod tests {
         let m = sample();
         assert_eq!(m.payload_bits(), 22 * 12);
         assert!(m.total_bits() > m.payload_bits());
-        // header overhead is small
+        // header + integrity overhead stays small (one page CRC here)
         assert!(m.total_bits() < m.payload_bits() + 400);
     }
 
@@ -288,6 +599,8 @@ mod tests {
             };
             let m2 = MrcFile::from_bytes(&m.to_bytes()).unwrap();
             assert_eq!(m, m2);
+            let m3 = MrcFile::from_bytes(&m.to_bytes_v1()).unwrap();
+            assert_eq!(m, m3);
         });
     }
 
@@ -295,6 +608,119 @@ mod tests {
     fn truncated_fails() {
         let bytes = sample().to_bytes();
         assert!(MrcFile::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn header_bit_flip_detected() {
+        // byte 6 sits inside the model name: without the header CRC this
+        // would "just" rename the model; with it, the flip is a hard error
+        let mut bytes = sample().to_bytes();
+        bytes[6] ^= 0x01;
+        assert!(matches!(
+            MrcFile::from_bytes(&bytes),
+            Err(MrcError::HeaderCrc { .. })
+        ));
+    }
+
+    #[test]
+    fn payload_bit_flip_detected() {
+        let m = sample();
+        let bytes = m.to_bytes();
+        // flip the very last payload byte — in v1 this silently decoded a
+        // different candidate for the final block
+        let mut mutated = bytes.clone();
+        let last = mutated.len() - 1;
+        mutated[last] ^= 0x80;
+        match MrcFile::from_bytes(&mutated) {
+            Err(MrcError::PayloadCrc { page, blocks, .. }) => {
+                assert_eq!(page, 0);
+                assert_eq!(blocks.1, m.b as u64);
+            }
+            other => panic!("expected PayloadCrc, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn magic_downgrade_to_v1_rejected() {
+        // damaging the version byte of a v2 file into "MRC1" must not let
+        // the CRC section be misparsed as index payload
+        let mut bytes = sample().to_bytes();
+        assert_eq!(&bytes[..4], MAGIC);
+        bytes[3] = b'1';
+        assert!(matches!(
+            MrcFile::from_bytes(&bytes),
+            Err(MrcError::TrailingGarbage { .. })
+        ));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut v2 = sample().to_bytes();
+        v2.push(0xAB);
+        assert!(matches!(
+            MrcFile::from_bytes(&v2),
+            Err(MrcError::TrailingGarbage { .. })
+        ));
+        let mut v1 = sample().to_bytes_v1();
+        v1.push(0xAB);
+        assert!(matches!(
+            MrcFile::from_bytes(&v1),
+            Err(MrcError::TrailingGarbage { .. })
+        ));
+    }
+
+    #[test]
+    fn hostile_block_count_refused_before_allocation() {
+        // hand-craft a v1 header declaring B = 2^40 blocks in a ~40-byte
+        // file: the parser must reject from the size bound, not allocate
+        let mut w = BitWriter::new();
+        for &b in MAGIC_V1 {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_varint(1);
+        w.write_bits(b'm' as u64, 8);
+        w.write_bits(0, 64); // layout seed
+        w.write_bits(0, 32); // protocol seed
+        w.write_bits(0, 8); // backend: native
+        w.write_varint(1u64 << 40); // B — hostile
+        w.write_varint(8); // S
+        w.write_varint(64); // k_chunk
+        w.write_bits(12, 8); // c_loc_bits
+        w.write_varint(0); // n_layers
+        let bytes = w.finish();
+        match MrcFile::from_bytes(&bytes) {
+            Err(MrcError::Bounds { field, declared, .. }) => {
+                assert_eq!(field, "B");
+                assert_eq!(declared, 1u64 << 40);
+            }
+            other => panic!("expected Bounds, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_name_length_refused_before_allocation() {
+        let mut w = BitWriter::new();
+        for &b in MAGIC {
+            w.write_bits(b as u64, 8);
+        }
+        w.write_varint(u64::MAX >> 1); // name_len — hostile
+        let bytes = w.finish();
+        assert!(matches!(
+            MrcFile::from_bytes(&bytes),
+            Err(MrcError::Bounds { field: "name_len", .. })
+        ));
+    }
+
+    #[test]
+    fn error_display_is_one_line() {
+        let m = sample();
+        let mut bytes = m.to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        let e = MrcFile::from_bytes(&bytes).unwrap_err();
+        let msg = e.to_string();
+        assert!(!msg.contains('\n'), "multi-line diagnosis: {msg}");
+        assert!(msg.contains("CRC"), "{msg}");
     }
 
     fn meta_for(m: &MrcFile) -> crate::runtime::ModelMeta {
@@ -377,5 +803,39 @@ mod tests {
             assert_eq!(BackendFamily::from_code(f.code()).unwrap(), f);
         }
         assert!(BackendFamily::from_code(7).is_err());
+    }
+
+    #[test]
+    fn multi_page_payload_round_trips_and_localizes_corruption() {
+        // enough blocks that the packed payload spans several CRC pages
+        let bits = 16u8;
+        let b = 2048; // 2048 * 16 bits = 4096 bytes = 4 pages
+        let m = MrcFile {
+            model: "paged".into(),
+            layout_seed: 1,
+            protocol_seed: 2,
+            backend: BackendFamily::Native,
+            b,
+            s: 4,
+            k_chunk: 64,
+            c_loc_bits: bits,
+            lsp: vec![-1.0],
+            indices: (0..b as u64).map(|i| i % (1 << bits)).collect(),
+        };
+        let bytes = m.to_bytes();
+        assert_eq!(MrcFile::from_bytes(&bytes).unwrap(), m);
+        // corrupt a byte in the third payload page
+        let payload_len = (b * bits as usize).div_ceil(8);
+        let payload_start = bytes.len() - payload_len;
+        let mut mutated = bytes.clone();
+        mutated[payload_start + 2 * PAYLOAD_PAGE_BYTES + 10] ^= 0x40;
+        match MrcFile::from_bytes(&mutated) {
+            Err(MrcError::PayloadCrc { page, blocks, .. }) => {
+                assert_eq!(page, 2);
+                // 2 bytes per index: page 2 covers blocks [1024, 1536)
+                assert_eq!(blocks, (1024, 1536));
+            }
+            other => panic!("expected PayloadCrc on page 2, got {other:?}"),
+        }
     }
 }

@@ -47,7 +47,13 @@ fn write_f32s(w: &mut BitWriter, xs: &[f32]) {
 
 fn read_f32s(r: &mut BitReader) -> Result<Vec<f32>> {
     let n = r.read_varint()? as usize;
-    ensure!(n < 100_000_000, "unreasonable vector length {n}");
+    // bound by what the buffer physically holds BEFORE allocating: a
+    // hostile varint must not drive Vec::with_capacity
+    ensure!(
+        n <= r.remaining_bits() / 32,
+        "declared vector length {n} exceeds the {} f32s left in the file",
+        r.remaining_bits() / 32
+    );
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         out.push(f32::from_bits(r.read_bits(32)? as u32));
@@ -142,7 +148,10 @@ impl Checkpoint {
             return err!("not a checkpoint file");
         }
         let name_len = r.read_varint()? as usize;
-        ensure!(name_len < 4096, "bad name length");
+        ensure!(
+            name_len < 4096 && name_len <= r.remaining_bits() / 8,
+            "bad name length {name_len}"
+        );
         let mut name = Vec::with_capacity(name_len);
         for _ in 0..name_len {
             name.push(r.read_bits(8)? as u8);
@@ -157,7 +166,12 @@ impl Checkpoint {
             vecs.push(read_f32s(&mut r)?);
         }
         let n_idx = r.read_varint()? as usize;
-        ensure!(n_idx < 100_000_000, "bad index count");
+        // each index varint is at least one byte on the wire
+        ensure!(
+            n_idx <= r.remaining_bits() / 8,
+            "declared index count {n_idx} exceeds the {} bytes left",
+            r.remaining_bits() / 8
+        );
         let mut indices = Vec::with_capacity(n_idx);
         for _ in 0..n_idx {
             indices.push(r.read_varint()?);
@@ -243,5 +257,21 @@ mod tests {
     fn truncation_detected() {
         let bytes = sample().to_bytes();
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn hostile_vector_length_refused_before_allocation() {
+        // overwrite the first f32-vector length varint (right after the
+        // fixed-width step field) with ~2^28: must fail fast, not OOM
+        let c = sample();
+        let bytes = c.to_bytes();
+        // locate the step field's end: magic + name varint + name + 3 geometry
+        // varints (all single-byte here) + 4-byte step
+        let off = 4 + 1 + c.model.len() + 3 + 4;
+        let mut hostile = bytes.clone();
+        hostile.splice(off..off + 1, [0xFF, 0xFF, 0xFF, 0x7F]);
+        let t = std::time::Instant::now();
+        assert!(Checkpoint::from_bytes(&hostile).is_err());
+        assert!(t.elapsed().as_secs_f64() < 1.0);
     }
 }

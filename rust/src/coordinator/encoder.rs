@@ -326,7 +326,8 @@ pub fn decode_model(arts: &ModelArtifacts, mrc: &MrcFile) -> Result<Vec<f32>> {
     let mut w = vec![0f32; meta.b * meta.s];
     for b in 0..meta.b {
         let lsp_b = layout.block_lsp(b, &mrc.lsp);
-        let row = decode_block_row(arts, mrc.protocol_seed, b, mrc.indices[b], &lsp_b)?;
+        let row = decode_block_row(arts, mrc.protocol_seed, b, mrc.indices[b], &lsp_b)
+            .map_err(|e| e.context(format!("decode block {b}")))?;
         w[b * meta.s..(b + 1) * meta.s].copy_from_slice(&row);
     }
     Ok(w)

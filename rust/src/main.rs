@@ -18,14 +18,14 @@
 //! miracle serve --mrc /tmp/m.mrc --clients 4 --requests 64
 //! ```
 
-use miracle::codec::MrcFile;
+use miracle::codec::{MrcError, MrcFile};
 use miracle::coordinator::{self, MiracleCfg};
 use miracle::data;
 use miracle::metrics::fmt_size;
 use miracle::runtime::{self, Runtime};
 use miracle::server::{spawn_clients, Server, ServerCfg};
 use miracle::util::args::Args;
-use miracle::util::Result;
+use miracle::util::{faultline, Error, Result};
 
 fn main() {
     if let Err(e) = run() {
@@ -48,6 +48,8 @@ fn run() -> Result<()> {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
         "pareto" => cmd_pareto(&args),
+        // hidden: deterministic corruption fuzzing of the decode path (CI)
+        "fuzz-decode" => cmd_fuzz_decode(&args),
         other => {
             eprintln!("unknown command '{other}' (compress|eval|info|serve|pareto)");
             std::process::exit(2);
@@ -218,13 +220,23 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load an `.mrc`, routing structured codec errors into a one-line
+/// diagnosis that names the offending file (I/O errors already carry the
+/// path; parse/integrity errors get it prefixed here).
+fn load_mrc(path: &str) -> Result<MrcFile> {
+    MrcFile::load(path).map_err(|e| match e {
+        e @ MrcError::Io { .. } => Error::msg(e.to_string()),
+        e => Error::msg(format!("{path}: {e}")),
+    })
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let path = args.require("mrc")?;
     let n_test = args.usize("test-size", 1024)?;
     let _threads =
         miracle::util::pool::override_threads(args.usize("threads", 0)?);
     args.finish()?;
-    let mrc = MrcFile::load(&path)?;
+    let mrc = load_mrc(&path)?;
     let rt = Runtime::cpu()?;
     let arts = runtime::load(&rt, &mrc.model)?;
     let (_, test) = datasets_for(&mrc.model, 1, n_test, 1234);
@@ -242,8 +254,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let path = args.require("mrc")?;
     args.finish()?;
-    let mrc = MrcFile::load(&path)?;
+    let bytes = std::fs::read(&path)
+        .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
+    let version = MrcFile::version_of(&bytes)
+        .map_err(|e| Error::msg(format!("{path}: {e}")))?;
+    let mrc = MrcFile::from_bytes(&bytes)
+        .map_err(|e| Error::msg(format!("{path}: {e}")))?;
     println!("model:        {}", mrc.model);
+    println!(
+        "format:       v{version} {}",
+        if version >= 2 {
+            "(header + payload CRC32 verified)"
+        } else {
+            "(legacy, no integrity checks)"
+        }
+    );
     println!("blocks:       {} x {} slots", mrc.b, mrc.s);
     println!(
         "C_loc:        {} bits (K = {})",
@@ -271,11 +296,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_clients = args.usize("clients", 4)?;
     let per_client = args.usize("requests", 32)?;
     let max_batch = args.usize("max-batch", 64)?;
+    let deadline_ms = args.u64("deadline-ms", 30_000)?;
     let lazy = args.flag("lazy");
     let _threads =
         miracle::util::pool::override_threads(args.usize("threads", 0)?);
     args.finish()?;
-    let mrc = MrcFile::load(&path)?;
+    let mrc = load_mrc(&path)?;
     let rt = Runtime::cpu()?;
     let arts = runtime::load(&rt, &mrc.model)?;
     let (_, test) = datasets_for(&mrc.model, 1, 256, 99);
@@ -283,15 +309,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let examples: Vec<Vec<f32>> = (0..test.len())
         .map(|i| test.x[i * feat..(i + 1) * feat].to_vec())
         .collect();
-    let cfg = ServerCfg { max_batch, lazy_decode: lazy, ..Default::default() };
+    let cfg = ServerCfg {
+        max_batch,
+        lazy_decode: lazy,
+        deadline: std::time::Duration::from_millis(deadline_ms),
+        ..Default::default()
+    };
     let mut server = Server::new(&arts, &mrc, cfg)?;
     let (rx, clients) =
         spawn_clients(examples, n_clients, per_client, std::time::Duration::ZERO);
     let stats = server.run(rx)?;
     let _ = clients.join();
     println!(
-        "served:      {} requests in {} batches",
-        stats.served, stats.batches
+        "served:      {} requests in {} batches ({} rejected)",
+        stats.served, stats.batches, stats.rejected
     );
     println!(
         "throughput:  {:.0} req/s",
@@ -306,4 +337,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("exec/batch:  {:.2}ms mean", stats.exec_time.mean * 1e3);
     println!("decode time: {:.2}s", stats.decode_secs);
     Ok(())
+}
+
+/// Hidden subcommand (CI): deterministic corruption fuzzing of the `.mrc`
+/// decode path. Every mutated v2 container must either fail to parse with a
+/// structured error or parse byte-identically — a parse that *succeeds but
+/// differs* is silent corruption and exits 1. Legacy v1 containers carry no
+/// integrity data, so their silent diffs are counted and reported instead
+/// of failing. Any failure reproduces from `(--seed, iter)` alone.
+fn cmd_fuzz_decode(args: &Args) -> Result<()> {
+    let seed = args.u64("seed", 0xF00D)?;
+    let iters = args.usize("iters", 500)?;
+    let base_path = args.opt_str("mrc").map(str::to_string);
+    args.finish()?;
+
+    let corpora: Vec<(String, Vec<u8>)> = match base_path {
+        Some(p) => {
+            let bytes = std::fs::read(&p)
+                .map_err(|e| Error::msg(format!("read {p}: {e}")))?;
+            vec![(p, bytes)]
+        }
+        None => {
+            let mrc = synth_fuzz_mrc();
+            vec![
+                ("synthetic v2".into(), mrc.to_bytes()),
+                ("synthetic v1 (legacy)".into(), mrc.to_bytes_v1()),
+            ]
+        }
+    };
+
+    for (label, base) in &corpora {
+        let version = MrcFile::version_of(base)
+            .map_err(|e| Error::msg(format!("{label}: {e}")))?;
+        let reference = MrcFile::from_bytes(base)
+            .map_err(|e| Error::msg(format!("{label}: base does not parse: {e}")))?;
+        let protected = version >= 2;
+        let (mut rejected, mut identical, mut silent) = (0usize, 0usize, 0usize);
+        for (i, fault) in
+            faultline::plan(seed, iters, base.len()).into_iter().enumerate()
+        {
+            let mutated = fault.apply(base);
+            match MrcFile::from_bytes(&mutated) {
+                Err(_) => rejected += 1,
+                Ok(parsed) if parsed == reference => identical += 1,
+                Ok(_) if protected => {
+                    eprintln!(
+                        "SILENT CORRUPTION in {label}: seed {seed} iter {i}: {}",
+                        fault.describe()
+                    );
+                    std::process::exit(1);
+                }
+                Ok(_) => silent += 1,
+            }
+        }
+        println!(
+            "fuzz-decode {label} (v{version}): {iters} mutations -> \
+             {rejected} rejected, {identical} parsed identically, {silent} silent diffs{}",
+            if protected { " (0 tolerated)" } else { " (legacy, unprotected)" }
+        );
+    }
+    Ok(())
+}
+
+/// A fixed tiny_mlp-geometry container for fuzzing without a runtime.
+fn synth_fuzz_mrc() -> MrcFile {
+    MrcFile {
+        model: "tiny_mlp".into(),
+        layout_seed: 0x4D31_7261,
+        protocol_seed: 7,
+        backend: miracle::codec::BackendFamily::Native,
+        b: 22,
+        s: 8,
+        k_chunk: 64,
+        c_loc_bits: 10,
+        lsp: vec![-1.5, -2.25],
+        indices: (0..22u64).map(|i| (i * 37 + 11) % 1024).collect(),
+    }
 }

@@ -10,6 +10,14 @@
 //! not), so the executor stays on the thread that built it; clients run on
 //! their own threads and talk to the server loop over an mpsc channel
 //! (router + dynamic batcher pattern).
+//!
+//! Degradation model: the serve loop never dies because of one bad input.
+//! Malformed requests, per-request deadline overruns, lazy-decode failures
+//! and backend execution errors are all reported to the *affected* clients
+//! as structured [`Response::Err`] values while the loop keeps serving
+//! everyone else. The only way `run` returns is the request channel
+//! closing (or a startup-time invariant failing before any request is
+//! taken). [`ServerFaults`] injects decode/execution faults for tests.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -17,11 +25,11 @@ use std::time::{Duration, Instant};
 use crate::codec::MrcFile;
 use crate::coordinator::encoder::decode_single_block;
 use crate::model::Layout;
-use crate::runtime::{Input, ModelArtifacts};
+use crate::runtime::{DeviceBuf, Input, ModelArtifacts};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::util::stats::{summarize, Summary};
 use crate::util::Result;
-use crate::{ensure, info};
+use crate::{err, info};
 
 /// One inference request: a flattened input example.
 pub struct Request {
@@ -30,12 +38,89 @@ pub struct Request {
     pub reply: Sender<Response>,
 }
 
+/// What a client gets back: a prediction, or a structured serving error.
+/// Errors never wedge the reply channel — every admitted request receives
+/// exactly one `Response`.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Ok(Prediction),
+    Err(ServeError),
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Response::Ok(_))
+    }
+
+    pub fn prediction(&self) -> Option<&Prediction> {
+        match self {
+            Response::Ok(p) => Some(p),
+            Response::Err(_) => None,
+        }
+    }
+
+    pub fn error(&self) -> Option<&ServeError> {
+        match self {
+            Response::Ok(_) => None,
+            Response::Err(e) => Some(e),
+        }
+    }
+}
+
 /// Prediction + timing.
 #[derive(Debug, Clone)]
-pub struct Response {
+pub struct Prediction {
     pub logits: Vec<f32>,
     pub pred: usize,
     pub latency: Duration,
+}
+
+/// Structured per-request failure. The variant tells the client whether the
+/// fault was theirs (`BadRequest`), load-induced (`DeadlineExceeded`) or
+/// server-side (`DecodeFailed`, `ExecFailed` — retryable once the operator
+/// replaces the corrupt container / unwedges the backend).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is malformed (wrong feature dimension).
+    BadRequest(String),
+    /// The request waited longer than [`ServerCfg::deadline`] before its
+    /// batch was admitted; it was shed rather than served stale.
+    DeadlineExceeded { waited: Duration, deadline: Duration },
+    /// Lazily decoding the `.mrc` failed (corrupt container, injected
+    /// fault). The loop stays alive and later requests retry the decode.
+    DecodeFailed(String),
+    /// The backend rejected or failed the batched forward pass.
+    ExecFailed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::DeadlineExceeded { waited, deadline } => write!(
+                f,
+                "deadline exceeded: waited {:.1}ms against a {:.1}ms budget",
+                waited.as_secs_f64() * 1e3,
+                deadline.as_secs_f64() * 1e3
+            ),
+            ServeError::DecodeFailed(m) => write!(f, "model decode failed: {m}"),
+            ServeError::ExecFailed(m) => write!(f, "execution failed: {m}"),
+        }
+    }
+}
+
+/// Test-only fault injection, threaded through [`ServerCfg`]. Defaults are
+/// inert; production paths never set them. Compiled unconditionally so the
+/// corruption/robustness suites and `miracle fuzz-decode` exercise the
+/// exact shipping code paths rather than a cfg(test) twin.
+#[derive(Debug, Clone, Default)]
+pub struct ServerFaults {
+    /// Fail this many upcoming block decodes with an injected error before
+    /// behaving normally again (simulates a transiently corrupt container).
+    pub fail_decodes: usize,
+    /// Sleep this long before every batched execution (simulates a slow or
+    /// overloaded backend so deadline shedding can be observed).
+    pub exec_delay: Duration,
 }
 
 /// Server tuning knobs.
@@ -48,6 +133,12 @@ pub struct ServerCfg {
     pub batch_window: Duration,
     /// decode blocks on first use instead of at startup
     pub lazy_decode: bool,
+    /// per-request admission deadline: a request still queued after this
+    /// long is answered with [`ServeError::DeadlineExceeded`] instead of
+    /// being served stale (load shedding)
+    pub deadline: Duration,
+    /// fault injection hooks (inert by default)
+    pub faults: ServerFaults,
 }
 
 impl Default for ServerCfg {
@@ -56,6 +147,8 @@ impl Default for ServerCfg {
             max_batch: usize::MAX,
             batch_window: Duration::from_millis(2),
             lazy_decode: false,
+            deadline: Duration::from_secs(30),
+            faults: ServerFaults::default(),
         }
     }
 }
@@ -65,6 +158,9 @@ impl Default for ServerCfg {
 pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
+    /// requests answered with a structured error (deadline, bad request,
+    /// decode/exec failure) instead of a prediction
+    pub rejected: usize,
     pub latency: Summary,
     pub exec_time: Summary,
     pub decode_secs: f64,
@@ -121,6 +217,10 @@ impl<'a> Server<'a> {
         if self.decoded[b] {
             return Ok(());
         }
+        if self.cfg.faults.fail_decodes > 0 {
+            self.cfg.faults.fail_decodes -= 1;
+            return err!("injected decode fault at block {b}");
+        }
         let t = crate::util::Timer::start();
         let row = decode_single_block(self.arts, self.mrc, &self.layout, b)?;
         let s = self.arts.meta.s;
@@ -134,17 +234,10 @@ impl<'a> Server<'a> {
         self.decoded.iter().filter(|&&d| d).count()
     }
 
-    /// Run the serve loop until the request channel closes. Returns stats.
-    pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+    /// Upload decoded weights + assemble map once; reused for every batch
+    /// (no per-request clone or re-validation of ~B*S + n_total values).
+    fn upload_model(&self) -> Result<(DeviceBuf, DeviceBuf)> {
         let meta = &self.arts.meta;
-        let feat: usize = meta.input_shape.iter().product();
-        let eb = meta.eval_batch;
-        let max_batch = self.cfg.max_batch.min(eb);
-        if self.cfg.lazy_decode {
-            self.decode_all()?; // first request would need all layers anyway
-        }
-        // weights + assemble map uploaded once and reused for every batch:
-        // no per-request clone or re-validation of ~B*S + n_total values
         let w_buf = self.arts.upload(&Arg::F32(TensorF32::new(
             vec![meta.b, meta.s],
             self.w_blocks.clone(),
@@ -153,12 +246,34 @@ impl<'a> Server<'a> {
             vec![meta.n_total],
             self.layout.assemble_map.clone(),
         )?))?;
+        Ok((w_buf, amap_buf))
+    }
+
+    /// Run the serve loop until the request channel closes. Returns stats.
+    ///
+    /// Per-request failures (deadline, malformed input, lazy-decode or
+    /// backend errors) are answered with [`Response::Err`] and counted in
+    /// [`ServeStats::rejected`]; they never terminate the loop.
+    pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let meta = &self.arts.meta;
+        let feat: usize = meta.input_shape.iter().product();
+        let eb = meta.eval_batch;
+        let max_batch = self.cfg.max_batch.min(eb).max(1);
+        // eager path decoded at construction; lazy path decodes inside the
+        // loop so a corrupt block degrades to per-request errors
+        let mut bufs: Option<(DeviceBuf, DeviceBuf)> =
+            if self.blocks_decoded() == meta.b {
+                Some(self.upload_model()?)
+            } else {
+                None
+            };
 
         let wall = Instant::now();
         let mut latencies = Vec::new();
         let mut exec_times = Vec::new();
         let mut served = 0usize;
         let mut batches = 0usize;
+        let mut rejected = 0usize;
         let mut pending: Vec<Request> = Vec::new();
         loop {
             // block for the first request of a batch
@@ -180,38 +295,107 @@ impl<'a> Server<'a> {
                     Err(_) => break,
                 }
             }
+            // admission triage: shed stale requests, bounce malformed ones
+            let now = Instant::now();
+            let mut batch: Vec<Request> = Vec::with_capacity(pending.len());
+            for r in pending.drain(..) {
+                let waited = now.saturating_duration_since(r.submitted);
+                if waited > self.cfg.deadline {
+                    let _ = r.reply.send(Response::Err(
+                        ServeError::DeadlineExceeded {
+                            waited,
+                            deadline: self.cfg.deadline,
+                        },
+                    ));
+                    rejected += 1;
+                } else if r.x.len() != feat {
+                    let _ = r.reply.send(Response::Err(ServeError::BadRequest(
+                        format!("feature dim {} != {feat}", r.x.len()),
+                    )));
+                    rejected += 1;
+                } else {
+                    batch.push(r);
+                }
+            }
+            if batch.is_empty() {
+                continue;
+            }
+            // lazy decode + one-time upload, degrading to per-request
+            // errors on failure (the next batch retries)
+            if bufs.is_none() {
+                match self.decode_all().and_then(|_| self.upload_model()) {
+                    Ok(b) => bufs = Some(b),
+                    Err(e) => {
+                        let err = ServeError::DecodeFailed(e.to_string());
+                        rejected += batch.len();
+                        for r in batch.drain(..) {
+                            let _ = r.reply.send(Response::Err(err.clone()));
+                        }
+                        continue;
+                    }
+                }
+            }
+            let (w_buf, amap_buf) =
+                bufs.as_ref().expect("uploaded above when absent");
+            // fault hook: simulate a slow backend
+            if !self.cfg.faults.exec_delay.is_zero() {
+                std::thread::sleep(self.cfg.faults.exec_delay);
+            }
             // assemble the padded batch
-            let n = pending.len();
+            let n = batch.len();
             let mut xb = vec![0f32; eb * feat];
-            for (i, r) in pending.iter().enumerate() {
-                ensure!(
-                    r.x.len() == feat,
-                    "request feature dim {} != {feat}",
-                    r.x.len()
-                );
+            for (i, r) in batch.iter().enumerate() {
                 xb[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
             }
             let mut shape = vec![eb];
             shape.extend_from_slice(&meta.input_shape);
             let t_exec = Instant::now();
-            let x_arg = Arg::F32(TensorF32::new(shape, xb)?);
-            let outs = self.arts.invoke_mixed(
-                "eval_batch",
-                &[
-                    Input::Dev(&w_buf),
-                    Input::Dev(&amap_buf),
-                    Input::Host(&x_arg),
-                ],
-            )?;
+            let exec = TensorF32::new(shape, xb)
+                .map(Arg::F32)
+                .and_then(|x_arg| {
+                    self.arts.invoke_mixed(
+                        "eval_batch",
+                        &[
+                            Input::Dev(w_buf),
+                            Input::Dev(amap_buf),
+                            Input::Host(&x_arg),
+                        ],
+                    )
+                });
+            let outs = match exec {
+                Ok(outs) => outs,
+                Err(e) => {
+                    let err = ServeError::ExecFailed(e.to_string());
+                    rejected += n;
+                    for r in batch.drain(..) {
+                        let _ = r.reply.send(Response::Err(err.clone()));
+                    }
+                    continue;
+                }
+            };
             exec_times.push(t_exec.elapsed().as_secs_f64());
-            let logits = outs[0].as_f32()?;
+            let logits = match outs[0].as_f32() {
+                Ok(l) => l,
+                Err(e) => {
+                    let err = ServeError::ExecFailed(e.to_string());
+                    rejected += n;
+                    for r in batch.drain(..) {
+                        let _ = r.reply.send(Response::Err(err.clone()));
+                    }
+                    continue;
+                }
+            };
             let done = Instant::now();
-            for (i, r) in pending.drain(..).enumerate() {
+            for (i, r) in batch.drain(..).enumerate() {
                 let row = logits.row(i).to_vec();
                 let pred = argmax(&row);
                 let latency = done - r.submitted;
                 latencies.push(latency.as_secs_f64());
-                let _ = r.reply.send(Response { logits: row, pred, latency });
+                let _ = r.reply.send(Response::Ok(Prediction {
+                    logits: row,
+                    pred,
+                    latency,
+                }));
             }
             served += n;
             batches += 1;
@@ -219,6 +403,7 @@ impl<'a> Server<'a> {
         Ok(ServeStats {
             served,
             batches,
+            rejected,
             latency: summarize(&latencies),
             exec_time: summarize(&exec_times),
             decode_secs: self.decode_secs,
@@ -291,5 +476,35 @@ mod tests {
         let c = ServerCfg::default();
         assert!(!c.lazy_decode);
         assert!(c.batch_window > Duration::ZERO);
+        assert!(c.deadline > Duration::ZERO);
+        assert_eq!(c.faults.fail_decodes, 0);
+        assert!(c.faults.exec_delay.is_zero());
+    }
+
+    #[test]
+    fn response_accessors() {
+        let ok = Response::Ok(Prediction {
+            logits: vec![0.0, 1.0],
+            pred: 1,
+            latency: Duration::from_millis(1),
+        });
+        assert!(ok.is_ok());
+        assert_eq!(ok.prediction().unwrap().pred, 1);
+        assert!(ok.error().is_none());
+        let err = Response::Err(ServeError::BadRequest("dim".into()));
+        assert!(!err.is_ok());
+        assert!(err.prediction().is_none());
+        assert!(matches!(err.error(), Some(ServeError::BadRequest(_))));
+    }
+
+    #[test]
+    fn serve_error_displays_one_line() {
+        let e = ServeError::DeadlineExceeded {
+            waited: Duration::from_millis(50),
+            deadline: Duration::from_millis(10),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("deadline"), "{msg}");
+        assert!(!msg.contains('\n'));
     }
 }

@@ -1,0 +1,75 @@
+//! CRC-32 (IEEE 802.3, the zlib/`crc32` polynomial) — the integrity check
+//! behind the `.mrc` v2 container ([`crate::codec`]).
+//!
+//! Reflected algorithm, polynomial `0xEDB88320`, initial value `!0`, final
+//! xor `!0` — byte-for-byte compatible with `zlib.crc32`, so fixtures and
+//! external tooling can produce/verify checksums without this crate.
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Continue a running CRC over `data`. `state` is the *internal* (already
+/// inverted) register: start from [`crc32`] for one-shot use, or thread
+/// `update(update(!0, a), b)` and finish with `!state` for streaming.
+pub fn update(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = (state >> 8) ^ TABLE[((state ^ b as u32) & 0xff) as usize];
+    }
+    state
+}
+
+/// One-shot CRC-32 of `data` (equals `zlib.crc32(data)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    !update(!0u32, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical check value for CRC-32/ISO-HDLC
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+                   0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"minimal random code learning";
+        let (a, b) = data.split_at(7);
+        assert_eq!(!update(update(!0, a), b), crc32(data));
+    }
+
+    #[test]
+    fn any_single_bit_flip_changes_the_crc() {
+        let data: Vec<u8> = (0..64u8).collect();
+        let base = crc32(&data);
+        for bit in 0..data.len() * 8 {
+            let mut m = data.clone();
+            m[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32(&m), base, "flip at bit {bit} undetected");
+        }
+    }
+}

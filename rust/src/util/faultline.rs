@@ -1,0 +1,131 @@
+//! Deterministic fault injection for serialized containers.
+//!
+//! A `.mrc` plus shared randomness *is* the model, so a single flipped bit
+//! that goes unnoticed replays the wrong candidate and decodes a
+//! plausible-but-wrong network. This module produces the adversarial inputs
+//! that prove the codec's integrity layer holds: seed-driven truncations,
+//! single-bit flips and byte mutations of an in-memory byte buffer. The same
+//! plans drive `rust/tests/corruption.rs` and the hidden
+//! `miracle fuzz-decode` subcommand, so a CI failure is reproducible from
+//! `(seed, iter)` alone.
+//!
+//! Faults are never identity transforms: every [`Fault`] produced by
+//! [`sample`] yields bytes that differ from the input.
+
+use crate::prng::Pcg64;
+
+/// One mutation of a byte buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Keep only the first `len` bytes (`len` strictly less than the input).
+    Truncate { len: usize },
+    /// Flip the bit at absolute bit offset `bit` (MSB-first within a byte,
+    /// matching the container's bit order).
+    FlipBit { bit: usize },
+    /// XOR the byte at `offset` with `xor` (`xor != 0`).
+    MutateByte { offset: usize, xor: u8 },
+}
+
+impl Fault {
+    /// Apply to `bytes`, returning the mutated copy.
+    pub fn apply(&self, bytes: &[u8]) -> Vec<u8> {
+        match *self {
+            Fault::Truncate { len } => bytes[..len.min(bytes.len())].to_vec(),
+            Fault::FlipBit { bit } => {
+                let mut out = bytes.to_vec();
+                if bit / 8 < out.len() {
+                    out[bit / 8] ^= 0x80 >> (bit % 8);
+                }
+                out
+            }
+            Fault::MutateByte { offset, xor } => {
+                let mut out = bytes.to_vec();
+                if offset < out.len() {
+                    out[offset] ^= xor;
+                }
+                out
+            }
+        }
+    }
+
+    /// Short reproducible description for diagnostics.
+    pub fn describe(&self) -> String {
+        match *self {
+            Fault::Truncate { len } => format!("truncate to {len} bytes"),
+            Fault::FlipBit { bit } => {
+                format!("flip bit {bit} (byte {}, bit {})", bit / 8, bit % 8)
+            }
+            Fault::MutateByte { offset, xor } => {
+                format!("xor byte {offset} with {xor:#04x}")
+            }
+        }
+    }
+}
+
+/// The `iter`-th fault of the `(seed)` plan against a `len`-byte buffer.
+/// Deterministic: the same `(seed, iter, len)` always yields the same fault,
+/// and the fault is never an identity transform. Panics if `len == 0`
+/// (there is nothing to corrupt).
+pub fn sample(seed: u64, iter: u64, len: usize) -> Fault {
+    assert!(len > 0, "cannot corrupt an empty buffer");
+    let mut rng = Pcg64::seed(seed).fold_in(iter);
+    match rng.below(3) {
+        0 => Fault::Truncate { len: rng.below(len as u64) as usize },
+        1 => Fault::FlipBit { bit: rng.below(len as u64 * 8) as usize },
+        _ => Fault::MutateByte {
+            offset: rng.below(len as u64) as usize,
+            xor: 1 + rng.below(255) as u8,
+        },
+    }
+}
+
+/// The full `iters`-long plan for a buffer of `len` bytes.
+pub fn plan(seed: u64, iters: usize, len: usize) -> Vec<Fault> {
+    (0..iters as u64).map(|i| sample(seed, i, len)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let a = plan(42, 50, 128);
+        let b = plan(42, 50, 128);
+        assert_eq!(a, b);
+        let c = plan(43, 50, 128);
+        assert_ne!(a, c, "different seeds must give different plans");
+    }
+
+    #[test]
+    fn faults_are_never_identity() {
+        let bytes: Vec<u8> = (0..97u8).collect();
+        for f in plan(7, 300, bytes.len()) {
+            let m = f.apply(&bytes);
+            assert_ne!(m, bytes, "identity fault: {}", f.describe());
+        }
+    }
+
+    #[test]
+    fn truncate_shortens_flip_preserves_length() {
+        let bytes = vec![0xAAu8; 16];
+        let t = Fault::Truncate { len: 5 }.apply(&bytes);
+        assert_eq!(t.len(), 5);
+        let f = Fault::FlipBit { bit: 0 }.apply(&bytes);
+        assert_eq!(f.len(), 16);
+        assert_eq!(f[0], 0x2A, "bit 0 is the MSB of byte 0");
+        let m = Fault::MutateByte { offset: 3, xor: 0xFF }.apply(&bytes);
+        assert_eq!(m[3], 0x55);
+    }
+
+    #[test]
+    fn out_of_range_faults_are_noops_not_panics() {
+        let bytes = vec![1u8, 2, 3];
+        assert_eq!(Fault::FlipBit { bit: 999 }.apply(&bytes), bytes);
+        assert_eq!(
+            Fault::MutateByte { offset: 99, xor: 1 }.apply(&bytes),
+            bytes
+        );
+        assert_eq!(Fault::Truncate { len: 99 }.apply(&bytes), bytes);
+    }
+}

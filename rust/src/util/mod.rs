@@ -1,7 +1,11 @@
 //! Shared utilities: error type, CLI args, JSON, stats, logging,
-//! prop-testing, and the scoped-thread worker pool ([`pool`]).
+//! prop-testing, the scoped-thread worker pool ([`pool`]), CRC-32
+//! ([`crc32`]) and the deterministic fault-injection harness
+//! ([`faultline`]).
 
 pub mod args;
+pub mod crc32;
+pub mod faultline;
 pub mod json;
 pub mod pool;
 pub mod quickprop;

@@ -1,0 +1,106 @@
+//! Golden-format regression tests: canonical `.mrc` fixtures committed
+//! under `tests/data/` pin the byte-level container layout. If either
+//! serializer drifts — even by one bit — these fail, which is the point:
+//! every `.mrc` ever written must stay readable, and v1 files must keep
+//! decoding unchanged.
+//!
+//! The decoded-weight hash is bless-on-absent: the expected-hash file is
+//! written on the first run (weights depend on the platform's libm-exact
+//! float behavior, so the hash cannot be authored by hand) and compared on
+//! every run after.
+
+use miracle::codec::{BackendFamily, MrcFile};
+use miracle::coordinator;
+use miracle::runtime::{self, Runtime};
+
+const TINY_V1: &[u8] = include_bytes!("data/tiny_v1.mrc");
+const TINY_V2: &[u8] = include_bytes!("data/tiny_v2.mrc");
+
+fn expected() -> MrcFile {
+    MrcFile {
+        model: "tiny_mlp".into(),
+        layout_seed: 0x4D31_7261,
+        protocol_seed: 7,
+        backend: BackendFamily::Native,
+        b: 22,
+        s: 8,
+        k_chunk: 64,
+        c_loc_bits: 10,
+        lsp: vec![-1.5, -2.25],
+        indices: (0..22u64).map(|i| (i * 37 + 11) % 1024).collect(),
+    }
+}
+
+#[test]
+fn v1_fixture_parses_to_the_expected_struct() {
+    assert_eq!(MrcFile::version_of(TINY_V1).unwrap(), 1);
+    let m = MrcFile::from_bytes(TINY_V1).unwrap();
+    assert_eq!(m, expected());
+}
+
+#[test]
+fn v2_fixture_parses_to_the_expected_struct() {
+    assert_eq!(MrcFile::version_of(TINY_V2).unwrap(), 2);
+    let m = MrcFile::from_bytes(TINY_V2).unwrap();
+    assert_eq!(m, expected());
+}
+
+#[test]
+fn serializers_reproduce_the_fixtures_byte_for_byte() {
+    let m = expected();
+    assert_eq!(m.to_bytes_v1(), TINY_V1, "v1 writer drifted from the fixture");
+    assert_eq!(m.to_bytes(), TINY_V2, "v2 writer drifted from the fixture");
+}
+
+#[test]
+fn both_revisions_decode_to_identical_weights() {
+    // upgrading the container revision must not change a single weight
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let w1 = coordinator::decode_model(&arts, &MrcFile::from_bytes(TINY_V1).unwrap())
+        .unwrap();
+    let w2 = coordinator::decode_model(&arts, &MrcFile::from_bytes(TINY_V2).unwrap())
+        .unwrap();
+    assert_eq!(w1, w2);
+    assert!(w1.iter().any(|&v| v != 0.0));
+    assert!(w1.iter().all(|v| v.is_finite()));
+}
+
+/// FNV-1a over the exact bit patterns of the decoded weights.
+fn weight_hash(w: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in w {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[test]
+fn decoded_weight_hash_matches_blessed_value() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = MrcFile::from_bytes(TINY_V2).unwrap();
+    let w = coordinator::decode_model(&arts, &mrc).unwrap();
+    let got = format!("{:016x}", weight_hash(&w));
+
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/data/tiny_weights.fnv1a"
+    );
+    match std::fs::read_to_string(path) {
+        Ok(blessed) => assert_eq!(
+            got,
+            blessed.trim(),
+            "decoded weights changed: the shared-randomness replay no longer \
+             reproduces the blessed model (delete {path} only if the change \
+             is intentional)"
+        ),
+        Err(_) => {
+            std::fs::write(path, format!("{got}\n")).unwrap();
+            eprintln!("blessed decoded-weight hash {got} -> {path}");
+        }
+    }
+}

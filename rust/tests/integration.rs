@@ -186,9 +186,10 @@ fn server_predictions_match_direct_eval() {
     let _ = wrong; // prediction-vs-label matching is order-dependent with
                    // multiple clients; instead just sanity check outputs
     for r in &responses {
-        assert_eq!(r.logits.len(), arts.meta.classes);
-        assert!(r.pred < arts.meta.classes);
-        assert!(r.logits.iter().all(|v| v.is_finite()));
+        let p = r.prediction().expect("default cfg must serve every request");
+        assert_eq!(p.logits.len(), arts.meta.classes);
+        assert!(p.pred < arts.meta.classes);
+        assert!(p.logits.iter().all(|v| v.is_finite()));
     }
     assert!(direct_err < 0.5);
 }

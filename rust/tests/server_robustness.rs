@@ -1,0 +1,235 @@
+//! Server graceful-degradation tests: a wedged client, a corrupt container
+//! in lazy mode, a malformed request or a slow backend must never kill the
+//! serve loop — affected requests get structured [`ServeError`]s and
+//! everyone else keeps getting predictions.
+
+use miracle::codec::MrcFile;
+use miracle::data;
+use miracle::runtime::{self, Runtime};
+use miracle::server::{Request, Server, ServerCfg, ServerFaults, ServeError};
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+fn test_mrc(arts: &runtime::ModelArtifacts) -> MrcFile {
+    MrcFile {
+        model: "tiny_mlp".into(),
+        layout_seed: 0xABCD,
+        protocol_seed: 7,
+        backend: arts.backend_family(),
+        b: arts.meta.b,
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: 10,
+        lsp: vec![-2.0f32; arts.meta.n_layers],
+        indices: (0..arts.meta.b as u64).map(|i| i % 1024).collect(),
+    }
+}
+
+fn example() -> Vec<f32> {
+    let test = data::synth_protos(4, 16, 4, 11);
+    test.x[..16].to_vec()
+}
+
+#[test]
+fn dead_client_does_not_wedge_the_loop() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let mut server = Server::new(&arts, &mrc, ServerCfg::default()).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    // a client that sent a request and immediately went away
+    let (dead_tx, dead_rx) = channel();
+    drop(dead_rx);
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: dead_tx })
+        .unwrap();
+    // eight live clients behind it
+    let mut live = Vec::new();
+    for _ in 0..8 {
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+            .unwrap();
+        live.push(rrx);
+    }
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    for rrx in live {
+        let resp = rrx.recv().expect("live client must get a response");
+        assert!(resp.is_ok(), "live request failed: {:?}", resp.error());
+    }
+    assert_eq!(stats.served, 9, "dead client's request is still executed");
+    assert_eq!(stats.rejected, 0);
+}
+
+#[test]
+fn lazy_decode_failure_degrades_and_recovers() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        lazy_decode: true,
+        faults: ServerFaults { fail_decodes: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+    assert_eq!(server.blocks_decoded(), 0);
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        // wave 1: hits the injected decode fault
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+            .unwrap();
+        let first = rrx.recv().unwrap();
+        // wave 2: decode retries and succeeds; the loop must still be alive
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+            .unwrap();
+        let second = rrx.recv().unwrap();
+        (first, second)
+    });
+    let stats = server.run(rx).unwrap();
+    let (first, second) = client.join().unwrap();
+    assert!(
+        matches!(first.error(), Some(ServeError::DecodeFailed(m)) if m.contains("injected")),
+        "expected injected DecodeFailed, got {first:?}"
+    );
+    assert!(second.is_ok(), "decode must recover: {second:?}");
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(server.blocks_decoded(), arts.meta.b);
+}
+
+#[test]
+fn malformed_request_is_bounced_not_fatal() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let mut server = Server::new(&arts, &mrc, ServerCfg::default()).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let (bad_tx, bad_rx) = channel();
+    tx.send(Request {
+        x: vec![1.0; 3], // wrong feature dimension
+        submitted: Instant::now(),
+        reply: bad_tx,
+    })
+    .unwrap();
+    let (ok_tx, ok_rx) = channel();
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: ok_tx })
+        .unwrap();
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    assert!(matches!(
+        bad_rx.recv().unwrap().error(),
+        Some(ServeError::BadRequest(_))
+    ));
+    assert!(ok_rx.recv().unwrap().is_ok());
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn stale_requests_are_shed_with_deadline_exceeded() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        deadline: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let (stale_tx, stale_rx) = channel();
+    tx.send(Request {
+        x: example(),
+        // submitted long before its deadline budget
+        submitted: Instant::now() - Duration::from_millis(500),
+        reply: stale_tx,
+    })
+    .unwrap();
+    let (fresh_tx, fresh_rx) = channel();
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: fresh_tx })
+        .unwrap();
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    match stale_rx.recv().unwrap().error() {
+        Some(ServeError::DeadlineExceeded { waited, deadline }) => {
+            assert!(*waited >= Duration::from_millis(500));
+            assert_eq!(*deadline, Duration::from_millis(20));
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(fresh_rx.recv().unwrap().is_ok());
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn slow_backend_requests_queued_past_deadline_are_shed() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        deadline: Duration::from_millis(100),
+        faults: ServerFaults {
+            exec_delay: Duration::from_millis(400),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        // request A is admitted and served (slowly)
+        let (rtx_a, rrx_a) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx_a })
+            .unwrap();
+        // request B arrives while the backend sleeps on A's batch; by the
+        // time the loop gets back to triage, B is far past its deadline
+        std::thread::sleep(Duration::from_millis(100));
+        let (rtx_b, rrx_b) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx_b })
+            .unwrap();
+        (rrx_a.recv().unwrap(), rrx_b.recv().unwrap())
+    });
+    let stats = server.run(rx).unwrap();
+    let (a, b) = client.join().unwrap();
+    assert!(a.is_ok(), "admitted request must complete: {a:?}");
+    assert!(
+        matches!(b.error(), Some(ServeError::DeadlineExceeded { .. })),
+        "queued-past-deadline request must be shed, got {b:?}"
+    );
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn exec_delay_fault_is_observable_in_wall_time() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        faults: ServerFaults {
+            exec_delay: Duration::from_millis(30),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+    let (tx, rx) = channel::<Request>();
+    let (rtx, rrx) = channel();
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+        .unwrap();
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    assert!(rrx.recv().unwrap().is_ok());
+    assert_eq!(stats.served, 1);
+    assert!(
+        stats.wall_secs >= 0.03,
+        "injected 30ms exec delay not observed (wall {}s)",
+        stats.wall_secs
+    );
+}
