@@ -1,0 +1,223 @@
+#!/usr/bin/env python3
+"""Compute the blessed decoded-weight hash for the golden-format suite.
+
+`rust/tests/golden_format.rs::decoded_weight_hash_matches_blessed_value`
+pins the FNV-1a hash of the weights decoded from the committed
+`tests/data/tiny_v2.mrc` fixture. The hash cannot be authored by hand —
+the candidate normals go through platform libm — so this script is a
+bit-exact port of the native decode path (Pcg64 seed tree -> Box-Muller
+-> sigma_p scaling), calling the *same* libm symbols the Rust build links
+(`log`, `sin`, `cos` for the f64 Box-Muller, `expf` for the f32 sigma
+scale) via ctypes. Run it on the platform family CI uses and commit the
+output to `rust/tests/data/tiny_weights.fnv1a`.
+
+Port of: rust/src/prng/mod.rs (SplitMix64, mix64, Pcg64, candidate_stream,
+skip_normals, fill_normals_f32), rust/src/model/mod.rs (Layout layer_map),
+rust/src/runtime/native.rs (decode_block), rust/src/coordinator/encoder.rs
+(decode_model) — over the fixture parameters of golden_format.rs.
+"""
+
+import ctypes
+import ctypes.util
+import math
+import struct
+
+MASK64 = (1 << 64) - 1
+
+_libm = ctypes.CDLL(ctypes.util.find_library("m"))
+_libm.log.restype, _libm.log.argtypes = ctypes.c_double, [ctypes.c_double]
+_libm.sin.restype, _libm.sin.argtypes = ctypes.c_double, [ctypes.c_double]
+_libm.cos.restype, _libm.cos.argtypes = ctypes.c_double, [ctypes.c_double]
+_libm.expf.restype, _libm.expf.argtypes = ctypes.c_float, [ctypes.c_float]
+
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+PI = 3.141592653589793  # std::f64::consts::PI
+
+
+def f32(x):
+    """Round a Python float to f32 precision (Rust `as f32`)."""
+    return struct.unpack("f", struct.pack("f", x))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("I", struct.pack("f", x))[0]
+
+
+def mix64(z):
+    z = (z + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+class SplitMix64:
+    def __init__(self, s):
+        self.state = s & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+
+class Pcg64:
+    """PCG-XSH-RR 64/32, bit-identical to rust/src/prng/mod.rs."""
+
+    def __init__(self, state, inc):
+        self.state = state
+        self.inc = inc
+        self.spare = None
+
+    @classmethod
+    def seed(cls, s):
+        sm = SplitMix64(s)
+        p = cls(sm.next_u64(), sm.next_u64() | 1)
+        p.next_u32()
+        return p
+
+    def fold_in(self, tag):
+        return Pcg64.seed(mix64(self.state ^ mix64((tag ^ self.inc) & MASK64)))
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << (32 - rot) & 0xFFFFFFFF)) & 0xFFFFFFFF \
+            if rot else xorshifted
+
+    def next_u64(self):
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        zone = MASK64 - (MASK64 % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def box_muller_pair(self):
+        while True:
+            u1 = self.next_f64()
+            if u1 <= F64_MIN_POSITIVE:
+                continue
+            u2 = self.next_f64()
+            # math.sqrt is the IEEE-exact sqrt instruction, like Rust's
+            r = math.sqrt(-2.0 * _libm.log(u1))
+            a = 2.0 * PI * u2
+            return r * _libm.cos(a), r * _libm.sin(a)
+
+    def next_normal(self):
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        a, b = self.box_muller_pair()
+        self.spare = b
+        return a
+
+    def fill_normals_f32(self, n):
+        out = []
+        if n and self.spare is not None:
+            out.append(f32(self.spare))
+            self.spare = None
+        while len(out) + 2 <= n:
+            a, b = self.box_muller_pair()
+            out.append(f32(a))
+            out.append(f32(b))
+        if len(out) < n:
+            a, b = self.box_muller_pair()
+            out.append(f32(a))
+            self.spare = b
+        return out
+
+    def skip_normals(self, n):
+        if n > 0 and self.spare is not None:
+            self.spare = None
+            n -= 1
+        while n >= 2:
+            u1 = self.next_f64()
+            if u1 <= F64_MIN_POSITIVE:
+                continue
+            self.next_f64()
+            n -= 2
+        if n == 1:
+            self.next_normal()
+
+    def permutation(self, n):
+        v = list(range(n))
+        for i in range(n - 1, 0, -1):
+            j = self.below(i + 1)
+            v[i], v[j] = v[j], v[i]
+        return v
+
+
+TAG_PROTOCOL = 0x4D52_4331_5052_4F54  # "MRC1PROT"
+
+
+def candidate_stream(protocol_seed, block, chunk):
+    return (
+        Pcg64.seed(mix64((protocol_seed & 0xFFFFFFFF) ^ TAG_PROTOCOL))
+        .fold_in(block & 0xFFFFFFFF)
+        .fold_in(chunk & 0xFFFFFFFF)
+    )
+
+
+def tiny_mlp_layer_map(layout_seed):
+    """layer_map of Layout::generate for tiny_mlp (dense: 136 + 36 slots,
+    22 blocks x 8, 4 padding slots mapped to layer 0)."""
+    b, s = 22, 8
+    n_pad = b * s
+    layer_slots = [136, 36]  # 16x8+8, 8x4+4
+    n_slots = sum(layer_slots)
+    slot_layer = [0] * n_pad
+    base = 0
+    for l, m in enumerate(layer_slots):
+        for i in range(m):
+            slot_layer[base + i] = l
+        base += m
+    perm = Pcg64.seed(layout_seed ^ 0xB10C5EED).permutation(n_pad)
+    layer_map = [0] * n_pad
+    for slot, bpos in enumerate(perm):
+        if slot < n_slots:
+            layer_map[bpos] = slot_layer[slot]
+    return layer_map
+
+
+def decode_tiny_v2():
+    """decode_model over the golden_format.rs fixture parameters."""
+    b_total, s, k_chunk = 22, 8, 64
+    layout_seed, protocol_seed = 0x4D31_7261, 7
+    lsp = [f32(-1.5), f32(-2.25)]
+    indices = [(i * 37 + 11) % 1024 for i in range(b_total)]
+    layer_map = tiny_mlp_layer_map(layout_seed)
+    exp_lsp = [_libm.expf(v) for v in lsp]
+    w = []
+    for b in range(b_total):
+        chunk, row = indices[b] // k_chunk, indices[b] % k_chunk
+        rng = candidate_stream(protocol_seed, b, chunk)
+        rng.skip_normals(row * s)
+        out = rng.fill_normals_f32(s)
+        for j in range(s):
+            scale = exp_lsp[layer_map[b * s + j]]
+            # product of two f32s is exact in double; one rounding to f32
+            w.append(f32(out[j] * scale))
+    return w
+
+
+def fnv1a(ws):
+    h = 0xCBF29CE484222325
+    for v in ws:
+        for byte in struct.pack("<I", f32_bits(v)):
+            h = ((h ^ byte) * 0x00000100000001B3) & MASK64
+    return h
+
+
+if __name__ == "__main__":
+    w = decode_tiny_v2()
+    assert len(w) == 176
+    print(f"{fnv1a(w):016x}")

@@ -1,18 +1,174 @@
-//! Session checkpointing: resumable compression runs.
+//! Session checkpointing: crash-safe, resume-exact compression runs.
 //!
-//! Paper-scale runs (I_0 = 10^4 steps + thousands of block encodes) benefit
-//! from durable progress. A checkpoint captures everything Algorithm 2
-//! mutates — variational state, Adam slots, β vector, freeze set and the
-//! already-transmitted indices — keyed by the config fingerprint so a resume
-//! cannot silently change the protocol.
+//! Paper-scale runs (I_0 = 10^4 steps + thousands of block encodes) are
+//! hours-long; a checkpoint captures everything Algorithm 2 mutates —
+//! variational state, Adam slots, β vector, freeze set, metric history and
+//! the already-transmitted indices — so a killed run resumes to a
+//! **byte-identical** `.mrc` (see `docs/checkpoint-format.md` for the
+//! contract and why no PRNG internals need to travel: the per-step streams
+//! are fast-forwarded by the step counter, everything else is re-derived
+//! from the config).
+//!
+//! On disk a checkpoint is an `MCK2` container: a fixed 28-byte CRC-32
+//! protected header (magic, config fingerprint, payload length, payload
+//! CRC) followed by the serialized snapshot. Like the `.mrc` MRC2 container
+//! (PR 6), every load failure is a structured one-line [`CkptError`] —
+//! never a panic, never an unbounded allocation, and never a silently-wrong
+//! resume: the fingerprint pins the protocol-relevant config, so a
+//! checkpoint from a different run (or a different model, dataset, seed …)
+//! is rejected instead of quietly changing what gets encoded.
+//!
+//! ```text
+//! magic "MCK2"
+//! u64   config fingerprint (big-endian; see [`fingerprint`])
+//! u64   payload length in bytes
+//! u32   payload CRC-32
+//! u32   header CRC-32 (over the 24 preceding bytes)
+//! payload: the MCK1 snapshot body (bitstream-serialized)
+//! ```
+//!
+//! Writes are torn-write-proof: [`Checkpoint::save`] writes `PATH.tmp`,
+//! fsyncs, then atomically renames onto `PATH` — a reader observes either
+//! the previous complete checkpoint or the new one, never a prefix.
 
 use crate::bitstream::{BitReader, BitWriter};
+use crate::codec::BackendFamily;
+use crate::data::Dataset;
+use crate::runtime::ModelMeta;
+use crate::util::crc32::crc32;
 use crate::util::{Error, Result};
 use crate::{ensure, err};
 
-use super::session::Session;
+use super::session::{Session, StepMetrics};
+use super::MiracleCfg;
 
-const MAGIC: &[u8; 4] = b"MCK1";
+/// Container magic (framing revision 2: CRC + fingerprint protected).
+pub const MAGIC: &[u8; 4] = b"MCK2";
+/// Inner snapshot-body magic (kept as a second line of defense).
+const BODY_MAGIC: &[u8; 4] = b"MCK1";
+/// magic + fingerprint + payload_len + payload CRC + header CRC
+const HEADER_LEN: usize = 4 + 8 + 8 + 4 + 4;
+
+/// Structured load failure for `MCK2` checkpoint files. Mirrors
+/// [`crate::codec::MrcError`]: every variant renders as a one-line
+/// diagnosis, and no input of any shape (truncation, bit flips, hostile
+/// length fields, stale configs) can produce a panic or an unbounded
+/// allocation — it lands here instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CkptError {
+    /// Reading or writing the file itself failed.
+    Io { path: String, detail: String },
+    /// The first four bytes are not the MCK2 magic.
+    NotCheckpoint { found: [u8; 4] },
+    /// The file ended before the declared content did.
+    Truncated,
+    /// Header bytes fail their CRC — nothing in the file can be trusted.
+    HeaderCrc { stored: u32, computed: u32 },
+    /// The snapshot body fails its CRC — the state is corrupt.
+    PayloadCrc { stored: u32, computed: u32 },
+    /// The checkpoint was written by a run with a different
+    /// protocol-relevant config — resuming would silently change the
+    /// encoded stream, so it is refused.
+    Fingerprint { stored: u64, expected: u64 },
+    /// Bytes remain after the declared payload.
+    TrailingGarbage { extra_bytes: u64 },
+    /// Anything else structurally wrong inside the snapshot body.
+    Malformed(String),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io { path, detail } => write!(f, "{path}: {detail}"),
+            CkptError::NotCheckpoint { found } => {
+                write!(f, "not an MCK2 checkpoint file (magic {found:?})")
+            }
+            CkptError::Truncated => {
+                write!(f, "checkpoint truncated: ran out of bytes mid-field")
+            }
+            CkptError::HeaderCrc { stored, computed } => write!(
+                f,
+                "checkpoint header CRC mismatch (stored {stored:#010x}, \
+                 computed {computed:#010x}) — header bytes are corrupt"
+            ),
+            CkptError::PayloadCrc { stored, computed } => write!(
+                f,
+                "checkpoint payload CRC mismatch (stored {stored:#010x}, \
+                 computed {computed:#010x}) — snapshot state is corrupt"
+            ),
+            CkptError::Fingerprint { stored, expected } => write!(
+                f,
+                "checkpoint config fingerprint {stored:#018x} does not match \
+                 this run's {expected:#018x} — resuming would change the \
+                 protocol, refusing"
+            ),
+            CkptError::TrailingGarbage { extra_bytes } => write!(
+                f,
+                "{extra_bytes} unexpected bytes after the declared payload"
+            ),
+            CkptError::Malformed(m) => {
+                write!(f, "malformed checkpoint: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<CkptError> for Error {
+    fn from(e: CkptError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type CkptResult<T> = std::result::Result<T, CkptError>;
+
+/// Order-sensitive FNV-1a over every input that pins the encode protocol:
+/// model geometry, backend family, all [`MiracleCfg`] fields except
+/// `threads` (selected indices are thread-count invariant — `docs/perf.md`)
+/// and the training data itself (batch contents feed the gradient stream).
+/// A resume under any differing input would produce a different `.mrc`, so
+/// [`Checkpoint::load_verified`] refuses mismatches.
+pub fn fingerprint(
+    meta: &ModelMeta,
+    backend: BackendFamily,
+    cfg: &MiracleCfg,
+    train: &Dataset,
+) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(b"MCK2-fp-v1");
+    eat(meta.name.as_bytes());
+    for v in [meta.b, meta.s, meta.k_chunk, meta.n_layers, meta.batch] {
+        eat(&(v as u64).to_le_bytes());
+    }
+    eat(&[backend.code()]);
+    eat(&[cfg.c_loc_bits]);
+    for v in [cfg.i0 as u64, cfg.i_intermediate as u64] {
+        eat(&v.to_le_bytes());
+    }
+    for v in [cfg.lr, cfg.beta0, cfg.eps_beta, cfg.data_scale] {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    eat(&cfg.layout_seed.to_le_bytes());
+    eat(&cfg.protocol_seed.to_le_bytes());
+    eat(&cfg.train_seed.to_le_bytes());
+    eat(&(train.len() as u64).to_le_bytes());
+    eat(&(train.feature_dim() as u64).to_le_bytes());
+    eat(&(train.classes as u64).to_le_bytes());
+    for &x in &train.x {
+        eat(&x.to_bits().to_le_bytes());
+    }
+    for &y in &train.y {
+        eat(&y.to_le_bytes());
+    }
+    h
+}
 
 /// Serializable snapshot of a running compression session.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +192,13 @@ pub struct Checkpoint {
     pub frozen_w: Vec<f32>,
     /// indices of blocks already encoded (u64::MAX = not yet encoded)
     pub indices: Vec<u64>,
+    /// last per-block KL (nats) — `selection_stats` reads it at encode time
+    pub last_kl: Vec<f32>,
+    /// running sum of realized per-block KL bits (reporting state of the
+    /// compress loop, so a resumed run's mean matches the uninterrupted one)
+    pub kl_bits_sum: f64,
+    /// full metric history, so `CompressResult::history` is resume-invariant
+    pub history: Vec<StepMetrics>,
 }
 
 fn write_f32s(w: &mut BitWriter, xs: &[f32]) {
@@ -62,7 +225,12 @@ fn read_f32s(r: &mut BitReader) -> Result<Vec<f32>> {
 }
 
 impl Checkpoint {
-    pub fn capture(session: &Session, indices: &[u64]) -> Checkpoint {
+    /// Snapshot a session plus the compress loop's own reporting state.
+    pub fn capture(
+        session: &Session,
+        indices: &[u64],
+        kl_bits_sum: f64,
+    ) -> Checkpoint {
         let st = &session.state;
         Checkpoint {
             model: session.arts.meta.name.clone(),
@@ -83,16 +251,36 @@ impl Checkpoint {
             frozen_mask: session.frozen_mask.clone(),
             frozen_w: session.frozen_w.clone(),
             indices: indices.to_vec(),
+            last_kl: session.last_kl.clone(),
+            kl_bits_sum,
+            history: session.history.clone(),
         }
     }
 
-    /// Restore into a freshly-created session (same config + seeds).
+    /// Number of blocks already encoded at capture time.
+    pub fn encoded_blocks(&self) -> usize {
+        self.indices.iter().filter(|&&i| i != u64::MAX).count()
+    }
+
+    /// Restore into a freshly-created session (same config + seeds) and
+    /// fast-forward its per-step streams so the next `train_step` consumes
+    /// exactly the draws an uninterrupted run would have. Returns the
+    /// indices of already-encoded blocks.
     pub fn restore(&self, session: &mut Session) -> Result<Vec<u64>> {
         let meta = &session.arts.meta;
         ensure!(self.model == meta.name, "checkpoint for model {}", self.model);
         ensure!(
             self.b == meta.b && self.s == meta.s && self.n_layers == meta.n_layers,
             "checkpoint geometry mismatch"
+        );
+        ensure!(
+            self.step >= 0,
+            "checkpoint step {} is negative",
+            self.step
+        );
+        ensure!(
+            self.indices.len() == meta.b && self.last_kl.len() == meta.b,
+            "checkpoint vector geometry mismatch"
         );
         let st = &mut session.state;
         st.step = self.step;
@@ -108,12 +296,17 @@ impl Checkpoint {
         session.betas.beta = self.beta.clone();
         session.frozen_mask = self.frozen_mask.clone();
         session.frozen_w = self.frozen_w.clone();
+        session.last_kl = self.last_kl.clone();
+        session.history = self.history.clone();
+        session.fast_forward_streams(self.step as usize);
         Ok(self.indices.clone())
     }
 
+    /// Serialize the snapshot body (no framing — see
+    /// [`Checkpoint::to_container_bytes`] for the durable on-disk form).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut w = BitWriter::new();
-        for &b in MAGIC {
+        for &b in BODY_MAGIC {
             w.write_bits(b as u64, 8);
         }
         w.write_varint(self.model.len() as u64);
@@ -135,16 +328,28 @@ impl Checkpoint {
         for &i in &self.indices {
             w.write_varint(i);
         }
+        write_f32s(&mut w, &self.last_kl);
+        w.write_bits(self.kl_bits_sum.to_bits(), 64);
+        w.write_varint(self.history.len() as u64);
+        for m in &self.history {
+            for v in [m.loss, m.ce, m.acc, m.mean_kl_nats] {
+                w.write_bits(v.to_bits() as u64, 32);
+            }
+        }
         w.finish()
     }
 
+    /// Parse a snapshot body. Malformed input fails fast with a plain
+    /// error; the CRC framing in [`Checkpoint::from_container_bytes`] is
+    /// what guarantees accidental corruption never reaches this parser
+    /// undetected.
     pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         let mut r = BitReader::new(bytes);
         let mut magic = [0u8; 4];
         for m in magic.iter_mut() {
             *m = r.read_bits(8)? as u8;
         }
-        if &magic != MAGIC {
+        if &magic != BODY_MAGIC {
             return err!("not a checkpoint file");
         }
         let name_len = r.read_varint()? as usize;
@@ -176,6 +381,22 @@ impl Checkpoint {
         for _ in 0..n_idx {
             indices.push(r.read_varint()?);
         }
+        let last_kl = read_f32s(&mut r)?;
+        let kl_bits_sum = f64::from_bits(r.read_bits(64)?);
+        let n_hist = r.read_varint()? as usize;
+        ensure!(
+            n_hist <= r.remaining_bits() / 128,
+            "declared history length {n_hist} exceeds the {} entries left",
+            r.remaining_bits() / 128
+        );
+        let mut history = Vec::with_capacity(n_hist);
+        for _ in 0..n_hist {
+            let loss = f32::from_bits(r.read_bits(32)? as u32);
+            let ce = f32::from_bits(r.read_bits(32)? as u32);
+            let acc = f32::from_bits(r.read_bits(32)? as u32);
+            let mean_kl_nats = f32::from_bits(r.read_bits(32)? as u32);
+            history.push(StepMetrics { loss, ce, acc, mean_kl_nats });
+        }
         let mut it = vecs.into_iter();
         Ok(Checkpoint {
             model,
@@ -196,18 +417,130 @@ impl Checkpoint {
             frozen_mask: it.next().unwrap(),
             frozen_w: it.next().unwrap(),
             indices,
+            last_kl,
+            kl_bits_sum,
+            history,
         })
     }
 
-    pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_bytes())?;
+    /// The full `MCK2` container: CRC-protected header + snapshot body.
+    pub fn to_container_bytes(&self, fingerprint: u64) -> Vec<u8> {
+        let payload = self.to_bytes();
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&fingerprint.to_be_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_be_bytes());
+        out.extend_from_slice(&crc32(&payload).to_be_bytes());
+        let header_crc = crc32(&out);
+        out.extend_from_slice(&header_crc.to_be_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse an `MCK2` container, verifying both CRCs before the body is
+    /// trusted. Returns the snapshot and the stored config fingerprint
+    /// (checked against the running config by [`Checkpoint::load_verified`];
+    /// progress inspection à la `miracle info` reads it unchecked).
+    pub fn from_container_bytes(bytes: &[u8]) -> CkptResult<(Checkpoint, u64)> {
+        if bytes.len() < 4 {
+            return Err(CkptError::Truncated);
+        }
+        let mut magic = [0u8; 4];
+        magic.copy_from_slice(&bytes[..4]);
+        if &magic != MAGIC {
+            return Err(CkptError::NotCheckpoint { found: magic });
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(CkptError::Truncated);
+        }
+        let stored_hc = u32::from_be_bytes(bytes[24..28].try_into().unwrap());
+        let computed_hc = crc32(&bytes[..24]);
+        if stored_hc != computed_hc {
+            return Err(CkptError::HeaderCrc {
+                stored: stored_hc,
+                computed: computed_hc,
+            });
+        }
+        let fingerprint = u64::from_be_bytes(bytes[4..12].try_into().unwrap());
+        let payload_len = u64::from_be_bytes(bytes[12..20].try_into().unwrap());
+        let stored_pc = u32::from_be_bytes(bytes[20..24].try_into().unwrap());
+        let actual = (bytes.len() - HEADER_LEN) as u64;
+        if payload_len > actual {
+            return Err(CkptError::Truncated);
+        }
+        if payload_len < actual {
+            return Err(CkptError::TrailingGarbage {
+                extra_bytes: actual - payload_len,
+            });
+        }
+        let payload = &bytes[HEADER_LEN..];
+        let computed_pc = crc32(payload);
+        if stored_pc != computed_pc {
+            return Err(CkptError::PayloadCrc {
+                stored: stored_pc,
+                computed: computed_pc,
+            });
+        }
+        // both CRCs hold, so a body parse failure means a crafted file, not
+        // accidental corruption — still a structured one-line error
+        let ck = Checkpoint::from_bytes(payload).map_err(|e| {
+            let m = e.to_string();
+            if m.contains("exhausted") {
+                CkptError::Truncated
+            } else {
+                CkptError::Malformed(m)
+            }
+        })?;
+        Ok((ck, fingerprint))
+    }
+
+    /// Torn-write-proof durable save: write `PATH.tmp`, fsync, atomically
+    /// rename onto `PATH`, then fsync the parent directory (best effort) so
+    /// the rename itself survives a power cut. A concurrent or later reader
+    /// observes either the previous complete checkpoint or this one — never
+    /// a prefix of a half-written file.
+    pub fn save(&self, path: &str, fingerprint: u64) -> CkptResult<()> {
+        use std::io::Write;
+        fn io_err(path: &str, e: std::io::Error) -> CkptError {
+            CkptError::Io { path: path.to_string(), detail: e.to_string() }
+        }
+        let bytes = self.to_container_bytes(fingerprint);
+        let tmp = format!("{path}.tmp");
+        let mut f = std::fs::File::create(&tmp).map_err(|e| io_err(&tmp, e))?;
+        f.write_all(&bytes).map_err(|e| io_err(&tmp, e))?;
+        f.sync_all().map_err(|e| io_err(&tmp, e))?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(|e| io_err(path, e))?;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let dir = if dir.as_os_str().is_empty() {
+                std::path::Path::new(".")
+            } else {
+                dir
+            };
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
         Ok(())
     }
 
-    pub fn load(path: &str) -> Result<Checkpoint> {
-        let bytes = std::fs::read(path)
-            .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
-        Checkpoint::from_bytes(&bytes)
+    /// Load a container, returning the snapshot and its stored fingerprint.
+    pub fn load(path: &str) -> CkptResult<(Checkpoint, u64)> {
+        let bytes = std::fs::read(path).map_err(|e| CkptError::Io {
+            path: path.to_string(),
+            detail: e.to_string(),
+        })?;
+        Checkpoint::from_container_bytes(&bytes)
+    }
+
+    /// Load and reject config-fingerprint mismatches — the resume path's
+    /// entry point: a checkpoint may only continue the run that wrote it.
+    pub fn load_verified(path: &str, expected: u64) -> CkptResult<Checkpoint> {
+        let (ck, stored) = Checkpoint::load(path)?;
+        if stored != expected {
+            return Err(CkptError::Fingerprint { stored, expected });
+        }
+        Ok(ck)
     }
 }
 
@@ -215,7 +548,7 @@ impl Checkpoint {
 mod tests {
     use super::*;
 
-    fn sample() -> Checkpoint {
+    pub(crate) fn sample() -> Checkpoint {
         Checkpoint {
             model: "tiny_mlp".into(),
             b: 22,
@@ -235,6 +568,12 @@ mod tests {
             frozen_mask: vec![0.0; 22],
             frozen_w: vec![0.0; 176],
             indices: (0..22).map(|i| if i < 5 { i * 3 } else { u64::MAX }).collect(),
+            last_kl: (0..22).map(|i| 0.5 + i as f32 * 0.01).collect(),
+            kl_bits_sum: 42.125,
+            history: vec![
+                StepMetrics { loss: 1.0, ce: 0.8, acc: 0.5, mean_kl_nats: 2.0 },
+                StepMetrics { loss: 0.9, ce: 0.7, acc: 0.6, mean_kl_nats: 1.9 },
+            ],
         }
     }
 
@@ -246,17 +585,86 @@ mod tests {
     }
 
     #[test]
+    fn container_round_trip_preserves_fingerprint() {
+        let c = sample();
+        let bytes = c.to_container_bytes(0xDEAD_BEEF_F00D_CAFE);
+        let (c2, fp) = Checkpoint::from_container_bytes(&bytes).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(fp, 0xDEAD_BEEF_F00D_CAFE);
+    }
+
+    #[test]
+    fn encoded_blocks_counts_transmitted_indices() {
+        assert_eq!(sample().encoded_blocks(), 5);
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Checkpoint::from_bytes(b"nope").is_err());
         let mut bytes = sample().to_bytes();
         bytes[1] ^= 0xff;
         assert!(Checkpoint::from_bytes(&bytes).is_err());
+        assert_eq!(
+            Checkpoint::from_container_bytes(b"nope + more bytes here"),
+            Err(CkptError::NotCheckpoint { found: *b"nope" })
+        );
     }
 
     #[test]
     fn truncation_detected() {
         let bytes = sample().to_bytes();
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        let container = sample().to_container_bytes(1);
+        assert_eq!(
+            Checkpoint::from_container_bytes(&container[..container.len() - 1]),
+            Err(CkptError::Truncated)
+        );
+    }
+
+    #[test]
+    fn container_crcs_catch_corruption() {
+        let base = sample().to_container_bytes(7);
+        // header byte (fingerprint field)
+        let mut h = base.clone();
+        h[5] ^= 0x01;
+        assert!(matches!(
+            Checkpoint::from_container_bytes(&h),
+            Err(CkptError::HeaderCrc { .. })
+        ));
+        // payload byte
+        let mut p = base.clone();
+        let last = p.len() - 1;
+        p[last] ^= 0x80;
+        assert!(matches!(
+            Checkpoint::from_container_bytes(&p),
+            Err(CkptError::PayloadCrc { .. })
+        ));
+        // appended garbage
+        let mut t = base.clone();
+        t.extend_from_slice(&[0u8; 3]);
+        assert_eq!(
+            Checkpoint::from_container_bytes(&t),
+            Err(CkptError::TrailingGarbage { extra_bytes: 3 })
+        );
+    }
+
+    #[test]
+    fn errors_are_one_line() {
+        let faults: Vec<CkptError> = vec![
+            CkptError::Io { path: "x".into(), detail: "denied".into() },
+            CkptError::NotCheckpoint { found: *b"MRC2" },
+            CkptError::Truncated,
+            CkptError::HeaderCrc { stored: 1, computed: 2 },
+            CkptError::PayloadCrc { stored: 3, computed: 4 },
+            CkptError::Fingerprint { stored: 5, expected: 6 },
+            CkptError::TrailingGarbage { extra_bytes: 9 },
+            CkptError::Malformed("bad".into()),
+        ];
+        for e in faults {
+            let msg = e.to_string();
+            assert!(!msg.contains('\n'), "multi-line: {msg}");
+            assert!(!msg.is_empty());
+        }
     }
 
     #[test]
@@ -273,5 +681,22 @@ mod tests {
         let t = std::time::Instant::now();
         assert!(Checkpoint::from_bytes(&hostile).is_err());
         assert!(t.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn durable_save_leaves_no_tmp_file() {
+        let dir = std::env::temp_dir().join("miracle_ckpt_save_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.mck").to_str().unwrap().to_string();
+        let c = sample();
+        c.save(&path, 99).unwrap();
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let loaded = Checkpoint::load_verified(&path, 99).unwrap();
+        assert_eq!(c, loaded);
+        assert_eq!(
+            Checkpoint::load_verified(&path, 100),
+            Err(CkptError::Fingerprint { stored: 99, expected: 100 })
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -14,15 +14,16 @@ pub mod encoder;
 pub mod session;
 
 pub use beta::BetaController;
+pub use checkpoint::{fingerprint, Checkpoint, CkptError, CkptResult};
 pub use encoder::{decode_model, encode_block, encode_blocks, EncodeOutcome};
-pub use session::{Session, StepMetrics};
+pub use session::{NonFinite, Session, StepMetrics};
 
 use crate::codec::MrcFile;
 use crate::data::Dataset;
 use crate::prng::Pcg64;
 use crate::runtime::ModelArtifacts;
-use crate::util::{Result, Timer};
-use crate::{ensure, info};
+use crate::util::{Error, Result, Timer};
+use crate::{ensure, err, info};
 
 /// Hyper-parameters of a MIRACLE run (paper §3.3 / §4 defaults).
 #[derive(Debug, Clone)]
@@ -74,6 +75,72 @@ impl Default for MiracleCfg {
     }
 }
 
+/// What `compress` does when `train_step` reports a non-finite loss/KL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NonFinitePolicy {
+    /// Fail the run with the structured [`NonFinite`] error (default).
+    #[default]
+    Abort,
+    /// Reload the last durable checkpoint (or restart from scratch if none
+    /// was written yet) and retry ONCE with the same protocol seeds; a
+    /// second non-finite aborts. The retried run encodes the exact same
+    /// schedule, so its `.mrc` is as valid and decodable as an
+    /// uninterrupted run's.
+    Rewind,
+}
+
+/// Typed payload of the structured error returned when a test kill-switch
+/// ([`RunOptions::stop_after_blocks`]/[`RunOptions::stop_after_steps`])
+/// stops a run after writing its checkpoint — the crash-injection hook the
+/// kill-resume equivalence suite is built on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interrupted {
+    /// global step count at the simulated kill
+    pub step: i32,
+    /// blocks encoded at the simulated kill
+    pub encoded_blocks: usize,
+}
+
+/// Durability / crash-safety options of a [`compress_with`] run. The plain
+/// [`compress`] entry point uses `RunOptions::default()` (no checkpointing).
+#[derive(Debug)]
+pub struct RunOptions {
+    /// checkpoint file path (`None` = no durability; the run behaves
+    /// exactly as before this option existed)
+    pub checkpoint: Option<String>,
+    /// encoded blocks between Phase-2 checkpoints (CLI `--checkpoint-every`)
+    pub every_blocks: usize,
+    /// I_0 steps between Phase-1 checkpoints
+    pub every_steps: usize,
+    /// resume from `checkpoint` instead of starting fresh (the file must
+    /// exist and carry this run's config fingerprint)
+    pub resume: bool,
+    pub on_nonfinite: NonFinitePolicy,
+    /// tests: simulate a kill — checkpoint, then fail with [`Interrupted`]
+    /// once this many blocks are encoded (ignored if the run has fewer)
+    pub stop_after_blocks: Option<usize>,
+    /// tests: simulate a kill after this many I_0 steps
+    pub stop_after_steps: Option<usize>,
+    /// tests: report a synthetic non-finite loss at this 1-based step; fires
+    /// once per run (not re-armed on a rewind retry)
+    pub nonfinite_fault: Option<i32>,
+}
+
+impl Default for RunOptions {
+    fn default() -> RunOptions {
+        RunOptions {
+            checkpoint: None,
+            every_blocks: 64,
+            every_steps: 500,
+            resume: false,
+            on_nonfinite: NonFinitePolicy::Abort,
+            stop_after_blocks: None,
+            stop_after_steps: None,
+            nonfinite_fault: None,
+        }
+    }
+}
+
 /// Outcome of a full compression run.
 pub struct CompressResult {
     pub mrc: MrcFile,
@@ -96,78 +163,56 @@ pub fn compress(
     test: &Dataset,
     cfg: &MiracleCfg,
 ) -> Result<CompressResult> {
+    compress_with(arts, train, test, cfg, &RunOptions::default())
+}
+
+/// [`compress`] with durability: periodic MCK2 checkpoints every
+/// [`RunOptions::every_steps`] I_0 steps and every [`RunOptions::every_blocks`]
+/// encoded blocks, `--resume` support and the `--on-nonfinite` policy.
+/// Resuming from any checkpoint taken at a block boundary produces a
+/// **byte-identical** `.mrc` to an uninterrupted run — see
+/// `docs/checkpoint-format.md` for the resume-exactness contract.
+pub fn compress_with(
+    arts: &ModelArtifacts,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &MiracleCfg,
+    opts: &RunOptions,
+) -> Result<CompressResult> {
     ensure!(
         (1 << cfg.c_loc_bits as usize) >= 1,
         "c_loc_bits out of range"
     );
+    ensure!(
+        opts.checkpoint.is_some() || !opts.resume,
+        "--resume requires --checkpoint PATH"
+    );
     // honor cfg.threads for the WHOLE run (encode fan-out, eval row
     // fan-out), not just the encoder's own invocations
     let _threads = crate::util::pool::override_threads(cfg.threads);
-    let mut session = Session::new(arts, train, cfg)?;
-
-    // Phase 1: variational convergence with p learned jointly (I_0 steps).
-    let t_train = Timer::start();
-    for _ in 0..cfg.i0 {
-        session.train_step(true)?;
-    }
-    // p is frozen from here on: its stddevs travel in the .mrc header and
-    // every block must be coded against the same encoding distribution.
-    info!(
-        "I0 done: loss {:.4} acc {:.3} mean KL {:.2} bits (target {} bits)",
-        session.last_loss(),
-        session.last_acc(),
-        session.mean_kl_bits(),
-        cfg.c_loc_bits
-    );
-
-    // Phase 2: random block order; encode, then I intermediate updates.
-    let mut order_rng = Pcg64::seed(cfg.train_seed ^ 0x0B10_C0DE);
-    let order = order_rng.permutation(session.b());
-    let mut encode_secs = 0.0;
-    let mut kl_bits_sum = 0.0;
-    let mut indices = vec![0u64; session.b()];
-    if cfg.i_intermediate == 0 {
-        // No updates between encodes (paper ablation I = 0): every block is
-        // coded against the same variational state, so the whole sweep can
-        // be scored in one batched backend invocation. Bit-identical to the
-        // sequential loop below.
-        let blocks: Vec<usize> = order.iter().map(|&b| b as usize).collect();
-        let t = Timer::start();
-        let outcomes = encode_blocks(&mut session, &blocks)?;
-        encode_secs += t.secs();
-        for (&b, outcome) in blocks.iter().zip(&outcomes) {
-            kl_bits_sum += outcome.kl_bits;
-            indices[b] = outcome.index;
-        }
-        info!(
-            "encoded {} blocks in one batched sweep ({:.2}s)",
-            blocks.len(),
-            encode_secs
-        );
-    } else {
-        for (done, &b) in order.iter().enumerate() {
-            let b = b as usize;
-            let t = Timer::start();
-            let outcome = encode_block(&mut session, b)?;
-            encode_secs += t.secs();
-            kl_bits_sum += outcome.kl_bits;
-            indices[b] = outcome.index;
-            for _ in 0..cfg.i_intermediate {
-                session.train_step(false)?;
-            }
-            if (done + 1) % 200 == 0 {
+    // pins everything protocol-relevant; `threads` is deliberately absent —
+    // selected indices are thread-count invariant (docs/perf.md), so a
+    // checkpoint may resume on a machine with a different core count
+    let fp = fingerprint(&arts.meta, arts.backend_family(), cfg, train);
+    let mut fault = opts.nonfinite_fault;
+    let mut rewound = false;
+    let (session, indices, encode_secs, kl_bits_sum, train_secs) = loop {
+        match run_schedule(arts, train, cfg, opts, fp, fault, rewound) {
+            Ok(done) => break done,
+            Err(e)
+                if e.payload::<NonFinite>().is_some()
+                    && opts.on_nonfinite == NonFinitePolicy::Rewind
+                    && !rewound =>
+            {
                 info!(
-                    "encoded {}/{} blocks (last: k*={} kl={:.2}b is-gap={:.2}b)",
-                    done + 1,
-                    session.b(),
-                    outcome.index,
-                    outcome.kl_bits,
-                    outcome.is_gap_bits
+                    "{e} — rewinding to the last checkpoint and retrying once"
                 );
+                rewound = true;
+                fault = None; // an injected fault fires once per run
             }
+            Err(e) => return Err(e),
         }
-    }
-    let train_secs = t_train.secs() - encode_secs;
+    };
 
     let mrc = MrcFile {
         model: arts.meta.name.clone(),
@@ -195,6 +240,198 @@ pub fn compress(
         mean_block_kl_bits: kl_bits_sum / session.b() as f64,
         history: session.history.clone(),
     })
+}
+
+/// One attempt at the full Algorithm-2 schedule (Phase 1 variational
+/// convergence + Phase 2 block encoding), resuming from the durable
+/// checkpoint when asked to. Returns the finished session, the transmitted
+/// indices, the encode/train timings and the realized-KL sum.
+fn run_schedule<'a>(
+    arts: &'a ModelArtifacts,
+    train: &'a Dataset,
+    cfg: &MiracleCfg,
+    opts: &RunOptions,
+    fp: u64,
+    fault: Option<i32>,
+    rewound: bool,
+) -> Result<(Session<'a>, Vec<u64>, f64, f64, f64)> {
+    let mut session = Session::new(arts, train, cfg)?;
+    session.fault_nonfinite_at = fault;
+    let mut indices = vec![u64::MAX; session.b()];
+    let mut kl_bits_sum = 0.0f64;
+
+    // Resume: reload the snapshot. Both --resume and a rewind retry land
+    // here; a rewind with no checkpoint on disk (crash before the first
+    // save) restarts from scratch instead.
+    let path = opts.checkpoint.as_deref();
+    if opts.resume || rewound {
+        if let Some(path) = path {
+            let exists = std::path::Path::new(path).exists();
+            if !exists && opts.resume && !rewound {
+                return err!("--resume: checkpoint {path} does not exist");
+            }
+            if exists {
+                let ck = Checkpoint::load_verified(path, fp)?;
+                indices = ck.restore(&mut session)?;
+                kl_bits_sum = ck.kl_bits_sum;
+                info!(
+                    "resumed from {path}: step {}, {}/{} blocks encoded",
+                    ck.step,
+                    ck.encoded_blocks(),
+                    session.b()
+                );
+            }
+        }
+    }
+
+    // Phase 2's block order is config-derived, so resume re-derives it and
+    // validates that the checkpoint's encode set is exactly a prefix — a
+    // checkpoint that disagrees cannot silently alter the protocol.
+    let order: Vec<usize> = Pcg64::seed(cfg.train_seed ^ 0x0B10_C0DE)
+        .permutation(session.b())
+        .into_iter()
+        .map(|b| b as usize)
+        .collect();
+    let done0 = indices.iter().filter(|&&i| i != u64::MAX).count();
+    for (i, &b) in order.iter().enumerate() {
+        ensure!(
+            (indices[b] != u64::MAX) == (i < done0),
+            "checkpoint encode set is not a prefix of the derived block \
+             order (block {b}) — checkpoint from a different run?"
+        );
+    }
+
+    let save = |session: &Session, indices: &[u64], kl_sum: f64| -> Result<()> {
+        if let Some(p) = path {
+            Checkpoint::capture(session, indices, kl_sum).save(p, fp)?;
+        }
+        Ok(())
+    };
+    let every_steps = opts.every_steps.max(1);
+    let every_blocks = opts.every_blocks.max(1);
+
+    let t_train = Timer::start();
+    if done0 == 0 {
+        // Phase 1: variational convergence with p learned jointly (I_0
+        // steps; a resumed run continues from the checkpointed step).
+        while (session.state.step as usize) < cfg.i0 {
+            session.train_step(true)?;
+            let s = session.state.step as usize;
+            if s % every_steps == 0 && s < cfg.i0 {
+                save(&session, &indices, kl_bits_sum)?;
+            }
+            if opts.stop_after_steps == Some(s) && s < cfg.i0 {
+                save(&session, &indices, kl_bits_sum)?;
+                return Err(Error::with_payload(
+                    format!("interrupted after {s} I0 steps (test kill switch)"),
+                    Interrupted { step: session.state.step, encoded_blocks: 0 },
+                ));
+            }
+        }
+        // p is frozen from here on: its stddevs travel in the .mrc header
+        // and every block must be coded against the same encoding
+        // distribution.
+        info!(
+            "I0 done: loss {:.4} acc {:.3} mean KL {:.2} bits (target {} bits)",
+            session.last_loss(),
+            session.last_acc(),
+            session.mean_kl_bits(),
+            cfg.c_loc_bits
+        );
+    }
+
+    // Phase 2: random block order; encode, then I intermediate updates.
+    let mut encode_secs = 0.0;
+    if cfg.i_intermediate == 0 {
+        // No updates between encodes (paper ablation I = 0): every block is
+        // coded against the same variational state, so the sweep is scored
+        // in batched backend invocations — grouped in `every_blocks`-sized
+        // slices with a checkpoint after each. encode_blocks's grouping is
+        // documented bit-identical, so durability costs no protocol change.
+        let mut done = done0;
+        while done < order.len() {
+            let take = every_blocks.min(order.len() - done);
+            let group = order[done..done + take].to_vec();
+            let t = Timer::start();
+            let outcomes = encode_blocks(&mut session, &group)?;
+            encode_secs += t.secs();
+            for (&b, outcome) in group.iter().zip(&outcomes) {
+                kl_bits_sum += outcome.kl_bits;
+                indices[b] = outcome.index;
+            }
+            done += take;
+            if done < order.len() {
+                save(&session, &indices, kl_bits_sum)?;
+            }
+            if let Some(stop) = opts.stop_after_blocks {
+                if done >= stop && done < order.len() {
+                    save(&session, &indices, kl_bits_sum)?;
+                    return Err(Error::with_payload(
+                        format!(
+                            "interrupted after {done} encoded blocks \
+                             (test kill switch)"
+                        ),
+                        Interrupted {
+                            step: session.state.step,
+                            encoded_blocks: done,
+                        },
+                    ));
+                }
+            }
+        }
+        info!(
+            "encoded {} blocks in batched sweeps ({:.2}s)",
+            order.len() - done0,
+            encode_secs
+        );
+    } else {
+        for i in done0..order.len() {
+            let b = order[i];
+            let t = Timer::start();
+            let outcome = encode_block(&mut session, b)?;
+            encode_secs += t.secs();
+            kl_bits_sum += outcome.kl_bits;
+            indices[b] = outcome.index;
+            for _ in 0..cfg.i_intermediate {
+                session.train_step(false)?;
+            }
+            let done = i + 1;
+            if done % every_blocks == 0 && done < order.len() {
+                save(&session, &indices, kl_bits_sum)?;
+            }
+            if done % 200 == 0 {
+                info!(
+                    "encoded {}/{} blocks (last: k*={} kl={:.2}b is-gap={:.2}b)",
+                    done,
+                    session.b(),
+                    outcome.index,
+                    outcome.kl_bits,
+                    outcome.is_gap_bits
+                );
+            }
+            if let Some(stop) = opts.stop_after_blocks {
+                if done >= stop && done < order.len() {
+                    save(&session, &indices, kl_bits_sum)?;
+                    return Err(Error::with_payload(
+                        format!(
+                            "interrupted after {done} encoded blocks \
+                             (test kill switch)"
+                        ),
+                        Interrupted {
+                            step: session.state.step,
+                            encoded_blocks: done,
+                        },
+                    ));
+                }
+            }
+        }
+    }
+    // Final durable checkpoint: marks the run complete (encoded B/B, which
+    // `miracle info` reports), and a kill after this point resumes into an
+    // immediate no-op re-emission of the same `.mrc`.
+    save(&session, &indices, kl_bits_sum)?;
+    let train_secs = t_train.secs() - encode_secs;
+    Ok((session, indices, encode_secs, kl_bits_sum, train_secs))
 }
 
 /// Test error of explicit block-layout weights.

@@ -18,12 +18,25 @@ use super::beta::BetaController;
 use super::MiracleCfg;
 
 /// Metrics of one variational update.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepMetrics {
     pub loss: f32,
     pub ce: f32,
     pub acc: f32,
     pub mean_kl_nats: f32,
+}
+
+/// Typed payload of the error [`Session::train_step`] returns when the loss
+/// or a per-block KL stops being finite — divergence, not a code bug, so the
+/// coordinator can apply a policy (`--on-nonfinite {abort|rewind}`) instead
+/// of propagating NaNs into the `.mrc`. Retrieve it with
+/// [`crate::util::Error::payload`]`::<NonFinite>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NonFinite {
+    /// 1-based global step at which the divergence was detected
+    pub step: i32,
+    /// offending block for a KL blow-up; `None` when the loss itself is bad
+    pub block: Option<usize>,
 }
 
 pub struct Session<'a> {
@@ -37,6 +50,10 @@ pub struct Session<'a> {
     pub history: Vec<StepMetrics>,
     /// last per-block KL (nats) returned by the graph
     pub last_kl: Vec<f32>,
+    /// fault injection (tests / fuzzing): report a synthetic non-finite
+    /// loss at this 1-based step. Consumed when it fires, so a rewound
+    /// retry of the same schedule runs clean.
+    pub fault_nonfinite_at: Option<i32>,
     train: &'a Dataset,
     iter: BatchIter,
     seed_rng: Pcg64,
@@ -78,6 +95,7 @@ impl<'a> Session<'a> {
             cfg: cfg.clone(),
             history: Vec::new(),
             last_kl: vec![0.0; meta.b],
+            fault_nonfinite_at: None,
             train,
             iter: BatchIter::new(train.len(), meta.batch, cfg.train_seed),
             seed_rng: Pcg64::seed(cfg.train_seed ^ 0x57EB),
@@ -97,8 +115,17 @@ impl<'a> Session<'a> {
     /// it must be false once any block has been encoded.
     pub fn train_step(&mut self, learn_p: bool) -> Result<StepMetrics> {
         let meta = &self.arts.meta;
-        let (bx, by) = self.train.gather(&self.iter.next_indices());
         let step = self.state.step + 1;
+        if self.fault_nonfinite_at == Some(step) {
+            // fire before any stream is consumed: the session stays at the
+            // pre-step state, exactly as if the backend had reported NaN
+            self.fault_nonfinite_at = None;
+            return Err(crate::util::Error::with_payload(
+                format!("non-finite loss at step {step} (injected fault)"),
+                NonFinite { step, block: None },
+            ));
+        }
+        let (bx, by) = self.train.gather(&self.iter.next_indices());
         let seed = (self.seed_rng.next_u32() & 0x7fff_ffff) as i32;
         let bs = vec![meta.b, meta.s];
         let l = vec![meta.n_layers];
@@ -176,12 +203,44 @@ impl<'a> Session<'a> {
         self.last_kl = take()?;
         self.state.step = step;
 
+        // Divergence tripwire: a NaN/Inf loss or per-block KL means the
+        // variational state can no longer be trusted — every later step and
+        // every encode would launder the poison into the `.mrc`. Surface it
+        // as a structured error the coordinator's --on-nonfinite policy can
+        // downcast, instead of a number that fails much later.
+        if !loss.is_finite() {
+            return Err(crate::util::Error::with_payload(
+                format!("non-finite loss ({loss}) at step {step}"),
+                NonFinite { step, block: None },
+            ));
+        }
+        if let Some(b) = self.last_kl.iter().position(|k| !k.is_finite()) {
+            return Err(crate::util::Error::with_payload(
+                format!("non-finite KL for block {b} at step {step}"),
+                NonFinite { step, block: Some(b) },
+            ));
+        }
+
         self.betas.update(&self.last_kl, &self.frozen_mask);
 
         let mean_kl = unfrozen_mean(&self.last_kl, &self.frozen_mask);
         let m = StepMetrics { loss, ce, acc, mean_kl_nats: mean_kl };
         self.history.push(m);
         Ok(m)
+    }
+
+    /// Advance the batch-order and per-step seed streams past `steps`
+    /// already-performed updates without touching any other state. Resume
+    /// support: each `train_step` consumes exactly one `BatchIter` draw and
+    /// one seed-rng `next_u32`, so a *fresh* session fast-forwarded by the
+    /// checkpointed step count is stream-for-stream identical to the
+    /// session that performed those steps live — the key to byte-identical
+    /// `.mrc` output after a crash (see `docs/checkpoint-format.md`).
+    pub fn fast_forward_streams(&mut self, steps: usize) {
+        for _ in 0..steps {
+            let _ = self.iter.next_indices();
+            let _ = self.seed_rng.next_u32();
+        }
     }
 
     /// Initialize means from a pretrained dense weight vector (paper §4:

@@ -19,7 +19,7 @@
 //! ```
 
 use miracle::codec::{MrcError, MrcFile};
-use miracle::coordinator::{self, MiracleCfg};
+use miracle::coordinator::{self, Checkpoint, MiracleCfg, NonFinitePolicy, RunOptions};
 use miracle::data;
 use miracle::metrics::fmt_size;
 use miracle::runtime::{self, Runtime};
@@ -41,7 +41,7 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv.remove(0);
-    let args = Args::parse_from(argv, &["lazy", "half"])?;
+    let args = Args::parse_from(argv, &["lazy", "half", "resume"])?;
     match cmd.as_str() {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
@@ -167,13 +167,28 @@ fn cmd_compress(args: &Args) -> Result<()> {
         train_seed: args.u64("train-seed", 42)?,
         threads: args.usize("threads", 0)?,
     };
+    let opts = RunOptions {
+        checkpoint: args.opt_str("checkpoint").map(str::to_string),
+        every_blocks: args.usize("checkpoint-every", 64)?,
+        resume: args.flag("resume"),
+        on_nonfinite: match args.str("on-nonfinite", "abort").as_str() {
+            "abort" => NonFinitePolicy::Abort,
+            "rewind" => NonFinitePolicy::Rewind,
+            other => {
+                return Err(Error::msg(format!(
+                    "--on-nonfinite must be abort|rewind, got '{other}'"
+                )))
+            }
+        },
+        ..Default::default()
+    };
     args.finish()?;
 
     let rt = Runtime::cpu()?;
     let arts = runtime::load(&rt, &model)?;
     let (train, test) = datasets_for(&model, n_train, n_test, 1234);
     let t = miracle::util::Timer::start();
-    let result = coordinator::compress(&arts, &train, &test, &cfg)?;
+    let result = coordinator::compress_with(&arts, &train, &test, &cfg, &opts)?;
     result.mrc.save(&out)?;
     let n_weights = arts.meta.n_total;
     println!("model:           {model}");
@@ -288,6 +303,26 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("layout seed:  {:#x}", mrc.layout_seed);
     println!("protocol:     {}", mrc.protocol_seed);
     println!("backend:      {:?}", mrc.backend);
+    // Sibling checkpoint (the `--checkpoint {mrc}.ckpt` convention): report
+    // run progress, or the structured MCK2 error if the file is damaged.
+    let ckpt_path = format!("{path}.ckpt");
+    if std::path::Path::new(&ckpt_path).exists() {
+        match Checkpoint::load(&ckpt_path) {
+            Ok((ck, fp)) => {
+                let b = ck.indices.len();
+                let k = ck.encoded_blocks();
+                println!(
+                    "checkpoint:   {ckpt_path}: step {}, encoded {k}/{b} \
+                     blocks{}, fingerprint {fp:#018x}",
+                    ck.step,
+                    if k == b { " (run complete)" } else { "" }
+                );
+            }
+            Err(e) => println!("checkpoint:   {ckpt_path}: UNUSABLE — {e}"),
+        }
+    } else {
+        println!("checkpoint:   none ({ckpt_path} not present)");
+    }
     Ok(())
 }
 
@@ -348,9 +383,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_fuzz_decode(args: &Args) -> Result<()> {
     let seed = args.u64("seed", 0xF00D)?;
     let iters = args.usize("iters", 500)?;
-    let base_path = args.opt_str("mrc").map(str::to_string);
-    args.finish()?;
+    let kind = args.str("kind", "mrc");
+    match kind.as_str() {
+        "mrc" => {
+            let base_path = args.opt_str("mrc").map(str::to_string);
+            args.finish()?;
+            fuzz_mrc(seed, iters, base_path)
+        }
+        "ckpt" => {
+            let base_path = args.opt_str("ckpt").map(str::to_string);
+            args.finish()?;
+            fuzz_ckpt(seed, iters, base_path)
+        }
+        other => Err(Error::msg(format!(
+            "--kind must be mrc|ckpt, got '{other}'"
+        ))),
+    }
+}
 
+fn fuzz_mrc(seed: u64, iters: usize, base_path: Option<String>) -> Result<()> {
     let corpora: Vec<(String, Vec<u8>)> = match base_path {
         Some(p) => {
             let bytes = std::fs::read(&p)
@@ -397,6 +448,93 @@ fn cmd_fuzz_decode(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// MCK2 checkpoint fuzzing (`--kind ckpt`): every mutated container must
+/// either fail with a structured [`miracle::coordinator::CkptError`] or
+/// parse identically to the reference — a parse that succeeds but differs
+/// would silently alter a resumed run, and exits 1. On top of the random
+/// plan, the exhaustive mid-write crash plan (every truncation point, torn
+/// tails) runs for containers up to 64 KiB.
+fn fuzz_ckpt(seed: u64, iters: usize, base_path: Option<String>) -> Result<()> {
+    const FP: u64 = 0x0F1A_6C0D_E5EE_D001;
+    let (label, base) = match base_path {
+        Some(p) => {
+            let bytes = std::fs::read(&p)
+                .map_err(|e| Error::msg(format!("read {p}: {e}")))?;
+            (p, bytes)
+        }
+        None => (
+            "synthetic MCK2".to_string(),
+            synth_fuzz_ckpt().to_container_bytes(FP),
+        ),
+    };
+    let (reference, ref_fp) = Checkpoint::from_container_bytes(&base)
+        .map_err(|e| Error::msg(format!("{label}: base does not parse: {e}")))?;
+    let mut faults = faultline::plan(seed, iters, base.len());
+    let crash = if base.len() <= 64 * 1024 {
+        let c = faultline::crash_plan(seed, base.len());
+        faults.extend(c.iter().cloned());
+        c.len()
+    } else {
+        eprintln!("note: {label} exceeds 64 KiB, crash plan skipped");
+        0
+    };
+    let (mut rejected, mut identical) = (0usize, 0usize);
+    for (i, fault) in faults.into_iter().enumerate() {
+        let mutated = fault.apply(&base);
+        match Checkpoint::from_container_bytes(&mutated) {
+            Err(_) => rejected += 1,
+            Ok((parsed, fp)) if parsed == reference && fp == ref_fp => {
+                identical += 1
+            }
+            Ok(_) => {
+                eprintln!(
+                    "SILENT CORRUPTION in {label}: seed {seed} iter {i}: {}",
+                    fault.describe()
+                );
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "fuzz-decode {label} (MCK2): {} mutations ({iters} random + {crash} \
+         crash-plan) -> {rejected} rejected, {identical} parsed identically \
+         (0 silent diffs tolerated)",
+        iters + crash
+    );
+    Ok(())
+}
+
+/// A fixed tiny_mlp-geometry MCK2 checkpoint for fuzzing without a runtime:
+/// mid-run state, 7 of 22 blocks encoded.
+fn synth_fuzz_ckpt() -> Checkpoint {
+    let n = 22 * 8;
+    Checkpoint {
+        model: "tiny_mlp".into(),
+        b: 22,
+        s: 8,
+        n_layers: 2,
+        step: 120,
+        mu: (0..n).map(|i| i as f32 * 0.01 - 0.5).collect(),
+        rho: vec![-3.0; n],
+        lsp: vec![-1.5, -2.25],
+        m_mu: vec![0.01; n],
+        v_mu: vec![0.02; n],
+        m_rho: vec![0.03; n],
+        v_rho: vec![0.04; n],
+        m_lsp: vec![0.05; 2],
+        v_lsp: vec![0.06; 2],
+        beta: vec![1e-6; 22],
+        frozen_mask: (0..n).map(|i| if i < 7 * 8 { 1.0 } else { 0.0 }).collect(),
+        frozen_w: vec![0.125; n],
+        indices: (0..22u64)
+            .map(|i| if i < 7 { (i * 37 + 11) % 1024 } else { u64::MAX })
+            .collect(),
+        last_kl: vec![4.25; 22],
+        kl_bits_sum: 70.5,
+        history: vec![],
+    }
 }
 
 /// A fixed tiny_mlp-geometry container for fuzzing without a runtime.

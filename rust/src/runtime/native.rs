@@ -491,7 +491,7 @@ impl NativeBackend {
                 );
                 score_chunk_into(&mut rng, &consts, &mut scratch, chunk_out);
             }
-        });
+        })?;
         Ok(vec![f32_arg(vec![n_chunks * k_chunk], out)?])
     }
 
@@ -540,7 +540,7 @@ impl NativeBackend {
                     prng::candidate_stream(seed, blocks[bi], ch as i32);
                 score_chunk_into(&mut rng, &consts[bi], &mut scratch, chunk_out);
             }
-        });
+        })?;
         Ok(vec![f32_arg(vec![nb * n_chunks * k_chunk], out)?])
     }
 
@@ -653,7 +653,7 @@ impl NativeBackend {
             span.copy_from_slice(last);
         };
         if n * macs >= PARALLEL_EVAL_MIN_MACS && pool::current_threads() > 1 {
-            pool::parallel_runs_mut(&mut logits, classes, tile);
+            pool::parallel_runs_mut(&mut logits, classes, tile)?;
         } else {
             tile(0, &mut logits);
         }

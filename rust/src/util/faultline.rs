@@ -24,6 +24,11 @@ pub enum Fault {
     FlipBit { bit: usize },
     /// XOR the byte at `offset` with `xor` (`xor != 0`).
     MutateByte { offset: usize, xor: u8 },
+    /// Keep the first `len` bytes and overwrite the tail with `fill`,
+    /// preserving total length — a crash mid-`write_all` onto a
+    /// pre-allocated file, where only the prefix reached the disk.
+    /// Produced by [`crash_plan`], not [`sample`].
+    TornWrite { len: usize, fill: u8 },
 }
 
 impl Fault {
@@ -45,6 +50,13 @@ impl Fault {
                 }
                 out
             }
+            Fault::TornWrite { len, fill } => {
+                let mut out = bytes.to_vec();
+                for b in out.iter_mut().skip(len) {
+                    *b = fill;
+                }
+                out
+            }
         }
     }
 
@@ -57,6 +69,9 @@ impl Fault {
             }
             Fault::MutateByte { offset, xor } => {
                 format!("xor byte {offset} with {xor:#04x}")
+            }
+            Fault::TornWrite { len, fill } => {
+                format!("torn write: keep {len} bytes, fill tail with {fill:#04x}")
             }
         }
     }
@@ -82,6 +97,28 @@ pub fn sample(seed: u64, iter: u64, len: usize) -> Fault {
 /// The full `iters`-long plan for a buffer of `len` bytes.
 pub fn plan(seed: u64, iters: usize, len: usize) -> Vec<Fault> {
     (0..iters as u64).map(|i| sample(seed, i, len)).collect()
+}
+
+/// Exhaustive mid-write crash plan: for every cut point a writer could die
+/// at, both on-disk outcomes the kernel can leave behind — a short file
+/// ([`Fault::Truncate`]) and a full-length file whose tail never made it
+/// out ([`Fault::TornWrite`] with a seed-chosen fill; 0x00 is the common
+/// case but not the only one). `2 * len` faults total. Drives the MCK2
+/// checkpoint corruption suite. [`sample`]'s byte-stable stream is
+/// deliberately untouched, so existing CI seeds keep reproducing.
+pub fn crash_plan(seed: u64, len: usize) -> Vec<Fault> {
+    let mut rng = Pcg64::seed(seed).fold_in(0xC4A5);
+    let mut out = Vec::with_capacity(len * 2);
+    for cut in 0..len {
+        out.push(Fault::Truncate { len: cut });
+        let fill = if rng.below(2) == 0 {
+            0x00
+        } else {
+            rng.below(256) as u8
+        };
+        out.push(Fault::TornWrite { len: cut, fill });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -116,6 +153,30 @@ mod tests {
         assert_eq!(f[0], 0x2A, "bit 0 is the MSB of byte 0");
         let m = Fault::MutateByte { offset: 3, xor: 0xFF }.apply(&bytes);
         assert_eq!(m[3], 0x55);
+    }
+
+    #[test]
+    fn torn_write_preserves_length_and_fills_the_tail() {
+        let bytes: Vec<u8> = (1..=8u8).collect();
+        let t = Fault::TornWrite { len: 3, fill: 0xEE }.apply(&bytes);
+        assert_eq!(t, vec![1, 2, 3, 0xEE, 0xEE, 0xEE, 0xEE, 0xEE]);
+        // out-of-range cut is a no-op, not a panic
+        let n = Fault::TornWrite { len: 99, fill: 0 }.apply(&bytes);
+        assert_eq!(n, bytes);
+    }
+
+    #[test]
+    fn crash_plan_covers_every_cut_point_both_ways() {
+        let p = crash_plan(20260807, 16);
+        assert_eq!(p.len(), 32);
+        assert_eq!(p, crash_plan(20260807, 16), "plan must be deterministic");
+        for cut in 0..16usize {
+            assert_eq!(p[2 * cut], Fault::Truncate { len: cut });
+            match p[2 * cut + 1] {
+                Fault::TornWrite { len, .. } => assert_eq!(len, cut),
+                ref f => panic!("expected TornWrite, got {}", f.describe()),
+            }
+        }
     }
 
     #[test]

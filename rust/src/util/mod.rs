@@ -13,19 +13,48 @@ pub mod stats;
 
 use std::fmt;
 
-/// Library-wide error type (anyhow-style but owned; carries a message chain).
-#[derive(Debug)]
+/// Library-wide error type (anyhow-style but owned; carries a message chain
+/// and, optionally, one typed payload for callers that need to react to a
+/// *specific* failure — e.g. the coordinator's `--on-nonfinite` policy
+/// downcasting a `NonFinite { step, block }` out of a `train_step` error).
 pub struct Error {
     msg: String,
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     pub fn msg<S: Into<String>>(s: S) -> Error {
-        Error { msg: s.into() }
+        Error { msg: s.into(), payload: None }
+    }
+
+    /// An error carrying a typed payload retrievable via [`Error::payload`].
+    pub fn with_payload<S, P>(s: S, payload: P) -> Error
+    where
+        S: Into<String>,
+        P: std::any::Any + Send + Sync,
+    {
+        Error { msg: s.into(), payload: Some(Box::new(payload)) }
+    }
+
+    /// Downcast the attached payload, if any. Context wrapping preserves it.
+    pub fn payload<P: std::any::Any>(&self) -> Option<&P> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref())
     }
 
     pub fn context<S: Into<String>>(self, s: S) -> Error {
-        Error { msg: format!("{}: {}", s.into(), self.msg) }
+        Error {
+            msg: format!("{}: {}", s.into(), self.msg),
+            payload: self.payload,
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Error")
+            .field("msg", &self.msg)
+            .field("has_payload", &self.payload.is_some())
+            .finish()
     }
 }
 
@@ -130,6 +159,17 @@ mod tests {
     fn error_context_chains() {
         let e = Error::msg("inner").context("outer");
         assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn payload_survives_context_wrapping() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        let e = Error::with_payload("boom", Marker(7)).context("outer");
+        assert_eq!(e.to_string(), "outer: boom");
+        assert_eq!(e.payload::<Marker>(), Some(&Marker(7)));
+        assert!(e.payload::<String>().is_none());
+        assert!(Error::msg("plain").payload::<Marker>().is_none());
     }
 
     #[test]

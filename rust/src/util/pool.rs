@@ -9,6 +9,11 @@
 //! happens afterwards on the caller's thread in run order. See
 //! `docs/perf.md` for why this preserves the `.mrc` protocol exactly.
 //!
+//! Workers are *supervised*: a panicking worker is isolated with
+//! `catch_unwind`, its span re-executed once on the calling thread, and only
+//! a repeat failure surfaces as an error (carrying the panic payload) — see
+//! [`parallel_runs_mut`] for the contract and `DESIGN.md` §Crash safety.
+//!
 //! Thread-count resolution, most specific wins:
 //! 1. a scoped [`override_threads`]/[`with_threads`] guard on the calling
 //!    thread (how `MiracleCfg::threads` and the invariance tests plumb in),
@@ -97,6 +102,17 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Render a `catch_unwind` payload as the panic message it carried.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Process `data` as `data.len() / run_len` fixed-size runs, fanned across
 /// the pool. Each worker receives `f(first_run_index, span)` exactly once
 /// with a contiguous span of whole runs and must handle
@@ -104,13 +120,28 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
 /// buffers across its runs). Spans are disjoint, so output bytes are
 /// identical at every thread count.
 ///
-/// Panics if `run_len` is zero or does not divide `data.len()`. Worker
-/// panics propagate to the caller after all workers joined.
-pub fn parallel_runs_mut<T, F>(data: &mut [T], run_len: usize, f: F)
+/// Worker panics are supervised rather than propagated: each worker runs
+/// under `catch_unwind`, and a poisoned span is re-executed once *on the
+/// calling thread* — `f` writes its span deterministically from
+/// `(first_run, span)` alone, so the retry overwrites any partial output
+/// and the result is bit-identical to a panic-free run. If the retry panics
+/// too, the call fails with the worker's panic payload in the error (a
+/// deterministic panic cannot be retried away; an environmental one — e.g.
+/// a starved thread hitting a resource limit — can). Hours-long compression
+/// runs therefore survive transient worker deaths instead of losing the
+/// whole run at block N-1.
+///
+/// Panics if `run_len` is zero or does not divide `data.len()`.
+pub fn parallel_runs_mut<T, F>(
+    data: &mut [T],
+    run_len: usize,
+    f: F,
+) -> crate::util::Result<()>
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
     assert!(run_len > 0, "parallel_runs_mut: run_len must be positive");
     assert!(
         data.len() % run_len == 0,
@@ -119,27 +150,61 @@ where
     );
     let n_runs = data.len() / run_len;
     if n_runs == 0 {
-        return;
+        return Ok(());
     }
     let nt = current_threads().min(n_runs);
-    if nt <= 1 {
-        f(0, data);
-        return;
-    }
     let per = (n_runs + nt - 1) / nt;
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut rest = data;
-        let mut start = 0usize;
-        while start < n_runs {
-            let take = per.min(n_runs - start);
-            let slice = std::mem::take(&mut rest);
-            let (head, tail) = slice.split_at_mut(take * run_len);
-            rest = tail;
-            scope.spawn(move || f(start, head));
-            start += take;
+    // span boundaries as (first_run, run_count), so poisoned spans can be
+    // re-sliced for the supervisor-thread retry after the scope ends
+    let spans: Vec<(usize, usize)> = (0..nt)
+        .map(|w| (w * per, per.min(n_runs.saturating_sub(w * per))))
+        .filter(|&(_, take)| take > 0)
+        .collect();
+    // (span index, panic message) of every worker that died
+    let poisoned: std::sync::Mutex<Vec<(usize, String)>> =
+        std::sync::Mutex::new(Vec::new());
+    if nt <= 1 {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(0, &mut *data))) {
+            poisoned.lock().unwrap().push((0, panic_message(p)));
         }
-    });
+    } else {
+        std::thread::scope(|scope| {
+            let f = &f;
+            let poisoned = &poisoned;
+            let mut rest: &mut [T] = data;
+            for (si, &(start, take)) in spans.iter().enumerate() {
+                let (head, tail) = rest.split_at_mut(take * run_len);
+                rest = tail;
+                scope.spawn(move || {
+                    if let Err(p) =
+                        catch_unwind(AssertUnwindSafe(|| f(start, head)))
+                    {
+                        poisoned.lock().unwrap().push((si, panic_message(p)));
+                    }
+                });
+            }
+        });
+    }
+    let mut failures = poisoned.into_inner().unwrap();
+    failures.sort_by(|a, b| a.0.cmp(&b.0));
+    for (si, msg) in failures {
+        let (start, take) = spans[si];
+        crate::info!(
+            "pool: worker for runs {start}..{} panicked ({msg}); \
+             retrying once on the supervisor thread",
+            start + take
+        );
+        let span = &mut data[start * run_len..(start + take) * run_len];
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(start, span))) {
+            return Err(crate::util::Error::msg(format!(
+                "worker for runs {start}..{} panicked twice \
+                 (supervisor retry included): {}",
+                start + take,
+                panic_message(p)
+            )));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -157,7 +222,8 @@ mod tests {
                             *v += (first_run + i) as u32 + 1;
                         }
                     }
-                });
+                })
+                .unwrap();
             });
             let expect: Vec<u32> =
                 (0..10u32).flat_map(|r| [r + 1; 4]).collect();
@@ -176,10 +242,12 @@ mod tests {
             }
         };
         let mut base = vec![0f64; 3 * 17];
-        with_threads(1, || parallel_runs_mut(&mut base, 3, work));
+        with_threads(1, || parallel_runs_mut(&mut base, 3, work).unwrap());
         for threads in [2, 5, 16] {
             let mut out = vec![0f64; 3 * 17];
-            with_threads(threads, || parallel_runs_mut(&mut out, 3, work));
+            with_threads(threads, || {
+                parallel_runs_mut(&mut out, 3, work).unwrap()
+            });
             assert_eq!(out, base, "threads={threads}");
         }
     }
@@ -190,9 +258,90 @@ mod tests {
         with_threads(64, || {
             parallel_runs_mut(&mut data, 1, |first, span| {
                 span[0] = first + 7;
-            });
+            })
+            .unwrap();
         });
         assert_eq!(data, vec![7, 8]);
+    }
+
+    #[test]
+    fn transient_worker_panic_is_retried_to_a_correct_result() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        for threads in [1, 2, 8] {
+            // the first worker invocation that sees run 5 dies mid-span,
+            // leaving partial writes; the supervisor retry must overwrite
+            // them and produce the exact panic-free result
+            let tripped = AtomicBool::new(false);
+            let mut data = vec![0u32; 12];
+            with_threads(threads, || {
+                parallel_runs_mut(&mut data, 1, |first, span| {
+                    for (i, run) in span.chunks_mut(1).enumerate() {
+                        let r = first + i;
+                        run[0] = r as u32 + 100;
+                        if r == 5
+                            && !tripped.swap(true, Ordering::SeqCst)
+                        {
+                            panic!("transient fault at run {r}");
+                        }
+                    }
+                })
+                .unwrap();
+            });
+            let expect: Vec<u32> = (100..112).collect();
+            assert_eq!(data, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn persistent_worker_panic_fails_with_the_payload() {
+        for threads in [1, 4] {
+            let mut data = vec![0u8; 8];
+            let err = with_threads(threads, || {
+                parallel_runs_mut(&mut data, 1, |first, _span| {
+                    if first == 0 {
+                        panic!("deterministic bug in run 0");
+                    }
+                })
+            })
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("deterministic bug in run 0"),
+                "error must carry the worker's panic payload, got: {msg}"
+            );
+            assert!(msg.contains("panicked twice"), "got: {msg}");
+        }
+    }
+
+    #[test]
+    fn multiple_poisoned_spans_all_recover() {
+        let mut data = vec![0u32; 16];
+        with_threads(8, || {
+            // every worker thread dies after writing; the closure only
+            // succeeds on the supervisor thread, so all 8 spans go through
+            // the retry path and must still produce the panic-free result
+            let mut expect_ok = vec![0u32; 16];
+            parallel_runs_mut(&mut expect_ok, 2, |first, span| {
+                for (i, run) in span.chunks_mut(2).enumerate() {
+                    run[0] = (first + i) as u32;
+                    run[1] = (first + i) as u32 * 2;
+                }
+            })
+            .unwrap();
+            let main_thread = std::thread::current().id();
+            parallel_runs_mut(&mut data, 2, |first, span| {
+                for (i, run) in span.chunks_mut(2).enumerate() {
+                    run[0] = (first + i) as u32;
+                    run[1] = (first + i) as u32 * 2;
+                }
+                // die on every worker thread, succeed on the supervisor
+                if std::thread::current().id() != main_thread {
+                    panic!("worker death in span at {first}");
+                }
+            })
+            .unwrap();
+            assert_eq!(data, expect_ok);
+        });
     }
 
     #[test]
@@ -212,6 +361,7 @@ mod tests {
     #[test]
     fn empty_data_is_a_no_op() {
         let mut data: Vec<u8> = Vec::new();
-        parallel_runs_mut(&mut data, 4, |_, _| panic!("no runs to process"));
+        parallel_runs_mut(&mut data, 4, |_, _| panic!("no runs to process"))
+            .unwrap();
     }
 }

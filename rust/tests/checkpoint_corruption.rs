@@ -1,0 +1,202 @@
+//! Adversarial robustness of the MCK2 checkpoint loader.
+//!
+//! A checkpoint that loads wrong is worse than one that refuses to load: a
+//! silently-altered snapshot resumes into a *different* encode stream and
+//! emits a valid-looking `.mrc` for the wrong model. This suite drives the
+//! loader with every truncation, every single-bit flip, a seeded mutation
+//! sweep and the exhaustive mid-write crash plan (torn tails), asserting
+//! the contract: **every mutated container either fails with a structured
+//! one-line [`CkptError`] or parses byte-identically** — never a panic,
+//! never an unbounded allocation, never a silently different resume.
+//!
+//! The seed matches CI's fuzz-decode runs (20260807) so a failure here
+//! reproduces from the fault description alone.
+
+use miracle::coordinator::{Checkpoint, CkptError};
+use miracle::util::faultline::{self, Fault};
+
+const SEED: u64 = 20260807;
+const FP: u64 = 0xD15C_B10C_5EED_0001;
+
+/// A mid-run snapshot with tiny_mlp geometry (22 blocks of 8 slots, 7
+/// encoded) — no runtime or training needed to exercise the container.
+fn sample_ckpt() -> Checkpoint {
+    let n = 22 * 8;
+    Checkpoint {
+        model: "tiny_mlp".into(),
+        b: 22,
+        s: 8,
+        n_layers: 2,
+        step: 120,
+        mu: (0..n).map(|i| i as f32 * 0.01 - 0.5).collect(),
+        rho: vec![-3.0; n],
+        lsp: vec![-1.5, -2.25],
+        m_mu: vec![0.01; n],
+        v_mu: vec![0.02; n],
+        m_rho: vec![0.03; n],
+        v_rho: vec![0.04; n],
+        m_lsp: vec![0.05; 2],
+        v_lsp: vec![0.06; 2],
+        beta: vec![1e-6; 22],
+        frozen_mask: (0..n).map(|i| if i < 7 * 8 { 1.0 } else { 0.0 }).collect(),
+        frozen_w: vec![0.125; n],
+        indices: (0..22u64)
+            .map(|i| if i < 7 { (i * 37 + 11) % 1024 } else { u64::MAX })
+            .collect(),
+        last_kl: vec![4.25; 22],
+        kl_bits_sum: 70.5,
+        history: vec![],
+    }
+}
+
+fn container() -> Vec<u8> {
+    sample_ckpt().to_container_bytes(FP)
+}
+
+/// The corruption contract for one mutated buffer: a structured one-line
+/// error, or a parse identical to the reference. Returns whether it parsed.
+fn assert_contract(mutated: &[u8], reference: &Checkpoint, what: &str) -> bool {
+    match Checkpoint::from_container_bytes(mutated) {
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(
+                !msg.is_empty() && !msg.contains('\n'),
+                "{what}: error must be one line, got {msg:?}"
+            );
+            false
+        }
+        Ok((parsed, fp)) => {
+            assert!(
+                parsed == *reference && fp == FP,
+                "{what}: SILENT CORRUPTION — parse succeeded but differs"
+            );
+            true
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let bytes = container();
+    let reference = sample_ckpt();
+    for len in 0..bytes.len() {
+        let parsed = assert_contract(&bytes[..len], &reference, &format!("truncate to {len}"));
+        assert!(!parsed, "a strict prefix ({len} bytes) must never parse");
+    }
+}
+
+#[test]
+fn every_single_bit_flip_is_caught_by_a_crc() {
+    let bytes = container();
+    let reference = sample_ckpt();
+    for bit in 0..bytes.len() * 8 {
+        let f = Fault::FlipBit { bit };
+        let parsed = assert_contract(&f.apply(&bytes), &reference, &f.describe());
+        assert!(!parsed, "flipped bit {bit} must not parse (CRC-protected)");
+    }
+}
+
+#[test]
+fn seeded_mutation_sweep_never_panics_or_silently_alters() {
+    let bytes = container();
+    let reference = sample_ckpt();
+    let mut rejected = 0usize;
+    for (i, f) in faultline::plan(SEED, 2000, bytes.len()).into_iter().enumerate() {
+        let what = format!("seed {SEED} iter {i}: {}", f.describe());
+        if !assert_contract(&f.apply(&bytes), &reference, &what) {
+            rejected += 1;
+        }
+    }
+    // single-byte/bit mutations and truncations of a CRC-protected
+    // container are essentially always caught
+    assert!(rejected >= 1990, "only {rejected}/2000 mutations rejected");
+}
+
+#[test]
+fn exhaustive_crash_plan_has_no_usable_partial_state() {
+    // every cut point a dying writer could leave behind, as both a short
+    // file and a torn full-length file
+    let bytes = container();
+    let reference = sample_ckpt();
+    for f in faultline::crash_plan(SEED, bytes.len()) {
+        let mutated = f.apply(&bytes);
+        let parsed = assert_contract(&mutated, &reference, &f.describe());
+        // a torn tail can coincidentally reproduce the original bytes
+        // (fill == original); identity is the only parse allowed
+        if parsed {
+            assert_eq!(mutated, bytes, "{}: non-identity parse", f.describe());
+        }
+    }
+}
+
+#[test]
+fn garbage_and_foreign_magic_are_structured_errors() {
+    assert!(matches!(
+        Checkpoint::from_container_bytes(b"MRC2 definitely not a checkpoint"),
+        Err(CkptError::NotCheckpoint { .. })
+    ));
+    assert!(matches!(
+        Checkpoint::from_container_bytes(&[]),
+        Err(CkptError::Truncated)
+    ));
+    let zeros = vec![0u8; 64];
+    assert!(Checkpoint::from_container_bytes(&zeros).is_err());
+}
+
+#[test]
+fn trailing_garbage_is_refused() {
+    let mut bytes = container();
+    bytes.extend_from_slice(b"xyz");
+    assert_eq!(
+        Checkpoint::from_container_bytes(&bytes),
+        Err(CkptError::TrailingGarbage { extra_bytes: 3 })
+    );
+}
+
+#[test]
+fn fingerprint_mismatch_is_refused_with_both_values() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("miracle_ckpt_fp_test.ckpt");
+    let path = path.to_str().unwrap();
+    let ck = sample_ckpt();
+    ck.save(path, FP).unwrap();
+    match Checkpoint::load_verified(path, FP ^ 1) {
+        Err(CkptError::Fingerprint { stored, expected }) => {
+            assert_eq!(stored, FP);
+            assert_eq!(expected, FP ^ 1);
+        }
+        other => panic!("expected Fingerprint error, got {other:?}"),
+    }
+    // the right fingerprint still loads
+    let loaded = Checkpoint::load_verified(path, FP).unwrap();
+    assert_eq!(loaded, ck);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn durable_save_overwrites_atomically_and_cleans_its_tmp() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("miracle_ckpt_atomic_test.ckpt");
+    let path = path.to_str().unwrap();
+    let ck = sample_ckpt();
+    ck.save(path, FP).unwrap();
+    // a second save over an existing checkpoint must succeed (rename
+    // replaces) and leave no .tmp staging file behind
+    let mut newer = sample_ckpt();
+    newer.step = 121;
+    newer.save(path, FP).unwrap();
+    assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+    let (loaded, _) = Checkpoint::load(path).unwrap();
+    assert_eq!(loaded.step, 121);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn missing_file_is_an_io_error_naming_the_path() {
+    match Checkpoint::load("/nonexistent/dir/nope.ckpt") {
+        Err(CkptError::Io { path, .. }) => {
+            assert_eq!(path, "/nonexistent/dir/nope.ckpt")
+        }
+        other => panic!("expected Io error, got {other:?}"),
+    }
+}

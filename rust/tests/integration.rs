@@ -326,11 +326,16 @@ fn checkpoint_round_trips_through_disk_and_restores() {
     encoder::encode_block(&mut session, 4).unwrap();
     let mut indices = vec![u64::MAX; arts.meta.b];
     indices[4] = 77;
-    let ck = Checkpoint::capture(&session, &indices);
+    let ck = Checkpoint::capture(&session, &indices, 12.5);
     let path = std::env::temp_dir().join("miracle_ck_it.bin");
-    ck.save(path.to_str().unwrap()).unwrap();
-    let loaded = Checkpoint::load(path.to_str().unwrap()).unwrap();
+    ck.save(path.to_str().unwrap(), 0xFEED_FACE).unwrap();
+    let (loaded, fp) = Checkpoint::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(fp, 0xFEED_FACE);
     assert_eq!(loaded, ck);
+    // the verified loader rejects a fingerprint from another config
+    assert!(
+        Checkpoint::load_verified(path.to_str().unwrap(), 0xBAD).is_err()
+    );
 
     // restore into a fresh session: state + freeze set identical
     let mut fresh = Session::new(&arts, &train, &cfg).unwrap();
@@ -358,7 +363,7 @@ fn checkpoint_rejects_wrong_model_geometry() {
     let (train, _) = datasets();
     let cfg = tiny_cfg();
     let session = Session::new(&arts, &train, &cfg).unwrap();
-    let mut ck = Checkpoint::capture(&session, &vec![u64::MAX; arts.meta.b]);
+    let mut ck = Checkpoint::capture(&session, &vec![u64::MAX; arts.meta.b], 0.0);
     ck.model = "lenet_synth".into();
     let mut fresh = Session::new(&arts, &train, &cfg).unwrap();
     assert!(ck.restore(&mut fresh).is_err());

@@ -1,0 +1,347 @@
+//! Kill-resume equivalence: the crash-safety contract of `compress_with`.
+//!
+//! The whole point of a checkpoint is that dying is free: a run killed at
+//! *any* durable point and resumed with `--resume` must emit a `.mrc` that
+//! is **byte-for-byte identical** to an uninterrupted run — same selected
+//! indices, same header, same decoded weights, same reported history. This
+//! suite simulates kills with the test-only `stop_after_blocks` /
+//! `stop_after_steps` kill switches (which checkpoint and then fail with a
+//! structured [`Interrupted`] payload), resumes, and compares bytes:
+//! at every Phase-2 block boundary, during Phase 1, for the batched I = 0
+//! sweep and the sequential I > 0 schedule, and across worker thread counts
+//! (the config fingerprint deliberately excludes `threads`).
+//!
+//! The `--on-nonfinite` policy rides the same machinery: an injected
+//! non-finite loss either aborts with a structured [`NonFinite`] payload or
+//! rewinds to the last checkpoint and still converges to the clean bytes.
+
+use miracle::coordinator::{
+    self, compress_with, Interrupted, MiracleCfg, NonFinite, NonFinitePolicy,
+    RunOptions,
+};
+use miracle::data;
+use miracle::runtime::{self, Runtime};
+
+const B: usize = 22; // tiny_mlp block count
+
+fn cfg(i_intermediate: usize, threads: usize) -> MiracleCfg {
+    MiracleCfg {
+        c_loc_bits: 9,
+        i0: 30,
+        i_intermediate,
+        lr: 5e-3,
+        beta0: 1e-3,
+        eps_beta: 0.02,
+        data_scale: 256.0,
+        layout_seed: 0xABCD,
+        protocol_seed: 7,
+        train_seed: 42,
+        threads,
+    }
+}
+
+fn datasets() -> (data::Dataset, data::Dataset) {
+    (
+        data::synth_protos(256, 16, 4, 1234),
+        data::synth_protos(128, 16, 4, 1234 ^ 0x7E57),
+    )
+}
+
+fn ckpt_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("miracle_resume_{tag}.ckpt"))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Kill an identically-configured run after each of `stops` encoded blocks,
+/// resume it, and require byte equality with the clean run. `kill_threads`
+/// and `resume_threads` may differ: a checkpoint is portable across worker
+/// counts.
+fn kill_resume_sweep(
+    i_intermediate: usize,
+    kill_threads: usize,
+    resume_threads: usize,
+    stops: &[usize],
+    tag: &str,
+) {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let clean =
+        coordinator::compress(&arts, &train, &test, &cfg(i_intermediate, 1))
+            .unwrap();
+    let clean_bytes = clean.mrc.to_bytes();
+    let w_clean = coordinator::decode_model(&arts, &clean.mrc).unwrap();
+
+    for &stop in stops {
+        let path = ckpt_path(&format!("{tag}_{stop}"));
+        let _ = std::fs::remove_file(&path);
+        let kill = RunOptions {
+            checkpoint: Some(path.clone()),
+            every_blocks: 1,
+            every_steps: 1,
+            stop_after_blocks: Some(stop),
+            ..Default::default()
+        };
+        let err = compress_with(
+            &arts,
+            &train,
+            &test,
+            &cfg(i_intermediate, kill_threads),
+            &kill,
+        )
+        .expect_err("the kill switch must interrupt the run");
+        let intr = err
+            .payload::<Interrupted>()
+            .expect("interruption must carry the Interrupted payload");
+        assert_eq!(intr.encoded_blocks, stop);
+
+        let resume = RunOptions {
+            checkpoint: Some(path.clone()),
+            every_blocks: 1,
+            every_steps: 1,
+            resume: true,
+            ..Default::default()
+        };
+        let resumed = compress_with(
+            &arts,
+            &train,
+            &test,
+            &cfg(i_intermediate, resume_threads),
+            &resume,
+        )
+        .unwrap_or_else(|e| panic!("resume from block {stop} failed: {e}"));
+        assert_eq!(
+            resumed.mrc.to_bytes(),
+            clean_bytes,
+            "resume from block {stop} ({tag}) did not reproduce the clean .mrc"
+        );
+        assert_eq!(
+            coordinator::decode_model(&arts, &resumed.mrc).unwrap(),
+            w_clean,
+            "decoded weights diverged after resume from block {stop}"
+        );
+        // reporting is resume-invariant too: the checkpoint carries the
+        // metric history and the realized-KL sum
+        assert_eq!(resumed.history, clean.history, "history diverged at {stop}");
+        assert!(
+            (resumed.mean_block_kl_bits - clean.mean_block_kl_bits).abs() < 1e-9
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn kill_resume_every_block_boundary_sequential() {
+    // I > 0: encode + intermediate updates, killed at every boundary
+    let stops: Vec<usize> = (1..B).collect();
+    kill_resume_sweep(2, 1, 1, &stops, "seq1");
+}
+
+#[test]
+fn kill_resume_every_block_boundary_batched() {
+    // I = 0: the batched sweep, killed at every group boundary
+    let stops: Vec<usize> = (1..B).collect();
+    kill_resume_sweep(0, 1, 1, &stops, "bat1");
+}
+
+#[test]
+fn kill_resume_with_eight_worker_threads() {
+    kill_resume_sweep(2, 8, 8, &[1, 11, B - 1], "seq8");
+    kill_resume_sweep(0, 8, 8, &[1, 11, B - 1], "bat8");
+}
+
+#[test]
+fn checkpoint_is_portable_across_thread_counts() {
+    // killed under 1 worker, resumed under 8 (and the clean reference ran
+    // under 1): `threads` is excluded from the config fingerprint because
+    // selected indices are thread-count invariant
+    kill_resume_sweep(2, 1, 8, &[7], "mix18");
+    kill_resume_sweep(2, 8, 1, &[15], "mix81");
+}
+
+#[test]
+fn kill_resume_during_phase1_is_byte_identical() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let cfg1 = cfg(2, 1);
+    let clean = coordinator::compress(&arts, &train, &test, &cfg1).unwrap();
+    for stop in [1usize, 13, 29] {
+        let path = ckpt_path(&format!("p1_{stop}"));
+        let _ = std::fs::remove_file(&path);
+        let kill = RunOptions {
+            checkpoint: Some(path.clone()),
+            // cadence coarser than the stop point: exercises the forced
+            // save at the kill itself
+            every_steps: 5,
+            stop_after_steps: Some(stop),
+            ..Default::default()
+        };
+        let err = compress_with(&arts, &train, &test, &cfg1, &kill)
+            .expect_err("phase-1 kill switch must interrupt");
+        let intr = err.payload::<Interrupted>().unwrap();
+        assert_eq!((intr.step, intr.encoded_blocks), (stop as i32, 0));
+
+        let resume = RunOptions {
+            checkpoint: Some(path.clone()),
+            resume: true,
+            ..Default::default()
+        };
+        let resumed =
+            compress_with(&arts, &train, &test, &cfg1, &resume).unwrap();
+        assert_eq!(
+            resumed.mrc.to_bytes(),
+            clean.mrc.to_bytes(),
+            "resume from I0 step {stop} diverged"
+        );
+        assert_eq!(resumed.history, clean.history);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn resume_after_completion_reemits_identical_bytes() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let cfg1 = cfg(0, 1);
+    let path = ckpt_path("complete");
+    let _ = std::fs::remove_file(&path);
+    let opts = RunOptions {
+        checkpoint: Some(path.clone()),
+        ..Default::default()
+    };
+    let first = compress_with(&arts, &train, &test, &cfg1, &opts).unwrap();
+    // the final checkpoint marks the run complete; resuming it is a no-op
+    // that re-emits the same container
+    let again = RunOptions {
+        checkpoint: Some(path.clone()),
+        resume: true,
+        ..Default::default()
+    };
+    let second = compress_with(&arts, &train, &test, &cfg1, &again).unwrap();
+    assert_eq!(second.mrc.to_bytes(), first.mrc.to_bytes());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn nonfinite_abort_is_a_structured_error() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let opts = RunOptions {
+        nonfinite_fault: Some(15),
+        ..Default::default() // on_nonfinite: Abort
+    };
+    let err = compress_with(&arts, &train, &test, &cfg(2, 1), &opts)
+        .expect_err("injected non-finite loss must abort the run");
+    let nf = err
+        .payload::<NonFinite>()
+        .expect("abort must carry the NonFinite payload");
+    assert_eq!(nf.step, 15);
+    assert!(
+        err.to_string().contains("step 15"),
+        "diagnosis must name the step: {err}"
+    );
+}
+
+#[test]
+fn nonfinite_rewind_recovers_to_the_clean_bytes() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let cfg1 = cfg(2, 1);
+    let clean = coordinator::compress(&arts, &train, &test, &cfg1).unwrap();
+    // fault at step 15 = mid Phase 1; fault at step 40 = mid Phase 2
+    // intermediate updates (i0=30 + 2 per encoded block)
+    for fault_step in [15i32, 40] {
+        let path = ckpt_path(&format!("rewind_{fault_step}"));
+        let _ = std::fs::remove_file(&path);
+        let opts = RunOptions {
+            checkpoint: Some(path.clone()),
+            every_blocks: 1,
+            every_steps: 1,
+            on_nonfinite: NonFinitePolicy::Rewind,
+            nonfinite_fault: Some(fault_step),
+            ..Default::default()
+        };
+        let r = compress_with(&arts, &train, &test, &cfg1, &opts)
+            .unwrap_or_else(|e| panic!("rewind at step {fault_step} failed: {e}"));
+        assert_eq!(
+            r.mrc.to_bytes(),
+            clean.mrc.to_bytes(),
+            "rewind retry at step {fault_step} diverged from the clean run"
+        );
+        assert_eq!(r.history, clean.history);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn nonfinite_rewind_without_checkpoint_restarts_from_scratch() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let cfg1 = cfg(2, 1);
+    let clean = coordinator::compress(&arts, &train, &test, &cfg1).unwrap();
+    let opts = RunOptions {
+        on_nonfinite: NonFinitePolicy::Rewind,
+        nonfinite_fault: Some(5),
+        ..Default::default() // checkpoint: None — nothing durable to rewind to
+    };
+    let r = compress_with(&arts, &train, &test, &cfg1, &opts).unwrap();
+    assert_eq!(r.mrc.to_bytes(), clean.mrc.to_bytes());
+}
+
+#[test]
+fn resume_misuse_is_refused_up_front() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let cfg1 = cfg(2, 1);
+    // --resume without --checkpoint
+    let opts = RunOptions { resume: true, ..Default::default() };
+    let err = compress_with(&arts, &train, &test, &cfg1, &opts).unwrap_err();
+    assert!(err.to_string().contains("--resume requires"), "{err}");
+    // --resume with a checkpoint that does not exist
+    let opts = RunOptions {
+        checkpoint: Some(ckpt_path("definitely_missing")),
+        resume: true,
+        ..Default::default()
+    };
+    let err = compress_with(&arts, &train, &test, &cfg1, &opts).unwrap_err();
+    assert!(err.to_string().contains("does not exist"), "{err}");
+}
+
+#[test]
+fn resume_rejects_a_checkpoint_from_a_different_config() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let (train, test) = datasets();
+    let path = ckpt_path("foreign_cfg");
+    let _ = std::fs::remove_file(&path);
+    let kill = RunOptions {
+        checkpoint: Some(path.clone()),
+        every_blocks: 1,
+        stop_after_blocks: Some(3),
+        ..Default::default()
+    };
+    compress_with(&arts, &train, &test, &cfg(2, 1), &kill).unwrap_err();
+    // same model, different protocol-relevant config (c_loc_bits)
+    let mut other = cfg(2, 1);
+    other.c_loc_bits = 8;
+    let resume = RunOptions {
+        checkpoint: Some(path.clone()),
+        resume: true,
+        ..Default::default()
+    };
+    let err = compress_with(&arts, &train, &test, &other, &resume).unwrap_err();
+    assert!(
+        err.to_string().contains("fingerprint"),
+        "expected a fingerprint refusal, got: {err}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
