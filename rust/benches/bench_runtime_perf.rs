@@ -8,6 +8,11 @@
 //! * bitstream + Huffman coder throughput
 //! * server throughput / latency under closed-loop clients
 //!
+//! * per-kernel rows: the dispatched SIMD variants (bulk Pcg64, fused
+//!   score, dot) timed against the scalar reference on identical buffers —
+//!   the speedup is measured, not asserted (dispatch path + thread count
+//!   are recorded in the JSON)
+//!
 //! Flags (after `--` under `cargo bench`):
 //! * `--json`  — additionally write `BENCH_runtime_perf.json` at the repo
 //!   root (machine-readable trajectory point; see `docs/perf.md`)
@@ -25,6 +30,7 @@ use miracle::runtime::{self, Runtime};
 use miracle::server::{spawn_clients, Server, ServerCfg};
 use miracle::util::json::Json;
 use miracle::util::pool;
+use miracle::util::simd::{self, SimdPath};
 use miracle::util::stats::{bench_fn, report_bench, summarize};
 use miracle::util::Result;
 
@@ -219,6 +225,125 @@ fn bench_bitstream(opts: &Opts) -> Json {
     ])
 }
 
+/// Per-kernel rows: dispatched variant vs the scalar reference on the same
+/// buffers, single-threaded — isolates the SIMD win from pool scaling.
+fn bench_kernels(opts: &Opts) -> Json {
+    use miracle::prng::bulk;
+    use miracle::runtime::kernels;
+    use miracle::tensor::linalg;
+
+    let path = simd::active();
+    println!("\n-- dispatched kernels vs scalar reference (simd={path}) --");
+    let mut rows = Vec::new();
+    let mut row = |name: &str,
+                   items: f64,
+                   unit: &str,
+                   scalar_s: &[f64],
+                   disp_s: &[f64]| {
+        let sm = mean(scalar_s);
+        let dm = mean(disp_s);
+        println!(
+            "   {name:<26} scalar {:>9.3} ms   {path:<6} {:>9.3} ms   speedup {:>5.2}x",
+            sm * 1e3,
+            dm * 1e3,
+            sm / dm
+        );
+        rows.push(Json::obj(vec![
+            ("kernel", Json::str(name)),
+            ("scalar_ms", Json::num(sm * 1e3)),
+            ("dispatched_ms", Json::num(dm * 1e3)),
+            ("speedup", Json::num(sm / dm)),
+            (
+                &format!("{unit}_per_s"),
+                Json::num(items / dm),
+            ),
+        ]));
+    };
+
+    // bit-exact bulk Pcg64 (integer LCG jump) — 64Ki u64 draws
+    let n_u64 = 65_536usize;
+    let mut buf = vec![0u64; n_u64];
+    let (w, n) = opts.iters(3, 40);
+    let scal = bench_fn(w, n, || {
+        std::hint::black_box(bulk::fill_u64s_with(
+            SimdPath::Scalar,
+            0x0DDB_1A5E_5BAD_5EED,
+            0x9E37_79B9 | 1,
+            &mut buf,
+        ));
+    });
+    let disp = bench_fn(w, n, || {
+        std::hint::black_box(bulk::fill_u64s_with(
+            path,
+            0x0DDB_1A5E_5BAD_5EED,
+            0x9E37_79B9 | 1,
+            &mut buf,
+        ));
+    });
+    row("pcg_fill_u64s (64Ki)", n_u64 as f64, "u64", &scal, &disp);
+
+    // fused candidate scoring — 256 rows of S=512 (a lenet-scale block)
+    let (s_dim, k) = (512usize, 256usize);
+    let mut rng = Pcg64::seed(0xBE7C);
+    let mk = |rng: &mut Pcg64, lo: f32, hi: f32, n: usize| -> Vec<f32> {
+        (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect()
+    };
+    let mu = mk(&mut rng, -0.5, 0.5, s_dim);
+    let rho = mk(&mut rng, -2.0, -0.5, s_dim);
+    let lsp = mk(&mut rng, -1.5, -0.5, s_dim);
+    let mask = vec![1f32; s_dim];
+    let consts = kernels::score_consts(&mu, &rho, &lsp, &mask);
+    let zs = miracle::prng::normals_f32(&mut rng, k * s_dim);
+    let mut logits = vec![0f32; k];
+    let (w, n) = opts.iters(3, 40);
+    let scal = bench_fn(w, n, || {
+        kernels::score_rows_with(SimdPath::Scalar, &consts, &zs, &mut logits);
+        std::hint::black_box(&mut logits);
+    });
+    let disp = bench_fn(w, n, || {
+        kernels::score_rows_with(path, &consts, &zs, &mut logits);
+        std::hint::black_box(&mut logits);
+    });
+    row(
+        &format!("score_rows (K={k},S={s_dim})"),
+        k as f64,
+        "rows",
+        &scal,
+        &disp,
+    );
+
+    // dense dot micro-kernel — 64 pairs of length 4096 per sample
+    let (pairs, len) = (64usize, 4096usize);
+    let a = mk(&mut rng, -0.5, 0.5, pairs * len);
+    let b = mk(&mut rng, -0.5, 0.5, pairs * len);
+    let (w, n) = opts.iters(3, 40);
+    let scal = bench_fn(w, n, || {
+        let mut acc = 0f32;
+        for p in 0..pairs {
+            let r = p * len..(p + 1) * len;
+            acc += linalg::dot_with(SimdPath::Scalar, &a[r.clone()], &b[r]);
+        }
+        std::hint::black_box(acc);
+    });
+    let disp = bench_fn(w, n, || {
+        let mut acc = 0f32;
+        for p in 0..pairs {
+            let r = p * len..(p + 1) * len;
+            acc += linalg::dot_with(path, &a[r.clone()], &b[r]);
+        }
+        std::hint::black_box(acc);
+    });
+    row(
+        &format!("dot ({pairs}x{len})"),
+        (pairs * len) as f64,
+        "mac",
+        &scal,
+        &disp,
+    );
+
+    Json::Arr(rows)
+}
+
 fn bench_server(rt: &Runtime, opts: &Opts) -> Result<Json> {
     println!("\n-- inference server (tiny_mlp, closed-loop clients) --");
     let arts = runtime::load(rt, "tiny_mlp")?;
@@ -290,19 +415,29 @@ fn main() -> Result<()> {
     }
     common::banner("Runtime perf microbenches");
     let rt = Runtime::cpu()?;
+    println!(
+        "simd dispatch: {} (MIRACLE_SIMD to override), threads: {}",
+        simd::active(),
+        pool::current_threads()
+    );
     let (tiny, backend) = bench_artifacts(&rt, &opts)?;
     let lenet = bench_lenet_hotpath(&rt, &opts)?;
+    let kernels = bench_kernels(&opts);
     let bitstream = bench_bitstream(&opts);
     let server = bench_server(&rt, &opts)?;
     if opts.json {
         let doc = Json::obj(vec![
-            ("schema", Json::num(1.0)),
+            // schema 2: adds "simd" (dispatch path) + "kernels" (per-kernel
+            // scalar-vs-dispatched rows)
+            ("schema", Json::num(2.0)),
             ("bench", Json::str("runtime_perf")),
             ("quick", Json::Bool(opts.quick)),
             ("backend", Json::str(backend)),
+            ("simd", Json::str(simd::active().name())),
             ("threads", Json::num(pool::current_threads() as f64)),
             ("tiny_mlp", tiny),
             ("lenet_synth", lenet),
+            ("kernels", kernels),
             ("bitstream", bitstream),
             ("server_tiny_mlp", server),
         ]);

@@ -25,7 +25,7 @@ use miracle::metrics::fmt_size;
 use miracle::runtime::{self, Runtime};
 use miracle::server::{spawn_clients, Server, ServerCfg};
 use miracle::util::args::Args;
-use miracle::util::{faultline, Error, Result};
+use miracle::util::{faultline, simd, Error, Result};
 
 fn main() {
     if let Err(e) = run() {
@@ -42,6 +42,12 @@ fn run() -> Result<()> {
     }
     let cmd = argv.remove(0);
     let args = Args::parse_from(argv, &["lazy", "half", "resume"])?;
+    // --simd {auto|scalar|avx2|neon}: pin the kernel dispatch path before
+    // any runtime or kernel runs (CLI wins over the MIRACLE_SIMD env var;
+    // both are strict — a typo or an unavailable path is a hard error)
+    if let Some(v) = args.opt_str("simd") {
+        simd::force(simd::parse(v)?)?;
+    }
     match cmd.as_str() {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
@@ -214,6 +220,11 @@ fn cmd_compress(args: &Args) -> Result<()> {
         result.encode_secs,
         t.secs()
     );
+    println!(
+        "simd/threads:    {} / {}",
+        simd::active(),
+        miracle::util::pool::current_threads()
+    );
     println!("wrote {out}");
     if let Some(path) = history_csv {
         let mut t = miracle::metrics::Table::new(
@@ -303,6 +314,9 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("layout seed:  {:#x}", mrc.layout_seed);
     println!("protocol:     {}", mrc.protocol_seed);
     println!("backend:      {:?}", mrc.backend);
+    // host property, not a container field: decode bytes are SIMD-path
+    // invariant, so this only affects fresh-encode speed on this machine
+    println!("simd:         {}", simd::selected()?);
     // Sibling checkpoint (the `--checkpoint {mrc}.ckpt` convention): report
     // run progress, or the structured MCK2 error if the file is damaged.
     let ckpt_path = format!("{path}.ckpt");

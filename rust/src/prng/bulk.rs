@@ -1,0 +1,231 @@
+//! Bulk PCG-XSH-RR 64/32 generation — the vectorizable integer core of the
+//! candidate hot path.
+//!
+//! [`fill_u64s`] produces exactly the sequence `n` repeated
+//! [`super::Pcg64::next_u64`] calls would (each output is two 32-bit PCG
+//! draws, high word first) and returns the advanced LCG state, so the
+//! generator object stays bit-aligned with sequential use. The LCG advance
+//! `s' = a·s + c (mod 2^64)` is closed under composition
+//! (`k` steps = `a^k·s + (a^{k-1}+…+1)·c`), which is what makes the AVX2
+//! variant possible: four u64 lanes each hold a state offset by one draw
+//! and jump eight draws per iteration. Integer arithmetic only — the
+//! vector path is **bit-identical** to the scalar one, not merely close,
+//! so `.mrc` decode bytes can never depend on the dispatch path
+//! (`rust/tests/simd_parity.rs` proves it draw-for-draw).
+//!
+//! aarch64 note: NEON has no 64-bit vector multiply, so the `neon` path
+//! uses the scalar loop (the compiler schedules it well); the dispatch
+//! exists so the selection stays uniform across kernels.
+//!
+//! Safety policy: intrinsic blocks live behind
+//! `#[deny(unsafe_op_in_unsafe_fn)]` with a SAFETY comment per `unsafe`
+//! block; the only unsafe operations are the 32-byte stores into a local
+//! scratch array and the feature-gated call itself (CPU support is
+//! verified by [`crate::util::simd::detect`] before this path is ever
+//! selected).
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use crate::util::simd::{self, SimdPath};
+
+/// The PCG64 LCG multiplier (Knuth's MMIX constant) — shared with
+/// [`super::Pcg64::next_u32`] so the scalar generator and the bulk kernels
+/// cannot drift apart.
+pub(crate) const PCG_MUL: u64 = 6364136223846793005;
+
+/// One 32-bit PCG-XSH-RR output from a pre-advance state.
+#[inline]
+fn pcg_out32(old: u64) -> u32 {
+    let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+    xorshifted.rotate_right((old >> 59) as u32)
+}
+
+/// Scalar reference: fill `out` with u64 draws from `(state, inc)` exactly
+/// as sequential `next_u64` calls would; returns the advanced state.
+pub fn fill_u64s_scalar(mut state: u64, inc: u64, out: &mut [u64]) -> u64 {
+    for o in out.iter_mut() {
+        let hi = pcg_out32(state) as u64;
+        state = state.wrapping_mul(PCG_MUL).wrapping_add(inc);
+        let lo = pcg_out32(state) as u64;
+        state = state.wrapping_mul(PCG_MUL).wrapping_add(inc);
+        *o = (hi << 32) | lo;
+    }
+    state
+}
+
+/// Dispatched bulk generation (see module docs for the bit-exactness
+/// contract). `path` is normally [`simd::active`]; parity tests pass
+/// explicit paths.
+pub fn fill_u64s_with(
+    path: SimdPath,
+    state: u64,
+    inc: u64,
+    out: &mut [u64],
+) -> u64 {
+    match path {
+        SimdPath::Scalar | SimdPath::Neon => {
+            fill_u64s_scalar(state, inc, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `SimdPath::Avx2` is only ever selected after
+        // `is_x86_feature_detected!("avx2")` succeeded (util/simd.rs), so
+        // the target-feature call contract holds.
+        SimdPath::Avx2 => unsafe { x86::fill_u64s_avx2(state, inc, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdPath::Avx2 => fill_u64s_scalar(state, inc, out),
+    }
+}
+
+/// [`fill_u64s_with`] on the process-wide dispatch path.
+pub fn fill_u64s(state: u64, inc: u64, out: &mut [u64]) -> u64 {
+    fill_u64s_with(simd::active(), state, inc, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 lane plan: two vectors of four u64 states, offset 0..=7 draws
+    //! from the entry state; each iteration emits their eight 32-bit
+    //! outputs (packed as four u64 results, high word first) and jumps
+    //! every lane eight draws via the composed LCG `(a^8, Σa^i·c)`.
+
+    use super::PCG_MUL;
+    use core::arch::x86_64::*;
+
+    /// `(a^j, Σ_{t<j} a^t)` for `j = 0..=8`: state after `j` draws is
+    /// `a^j·s + Σ·inc` (all mod 2^64).
+    fn lcg_powers() -> ([u64; 9], [u64; 9]) {
+        let mut a = [0u64; 9];
+        let mut csum = [0u64; 9];
+        a[0] = 1;
+        for j in 1..=8 {
+            a[j] = a[j - 1].wrapping_mul(PCG_MUL);
+            csum[j] = csum[j - 1].wrapping_mul(PCG_MUL).wrapping_add(1);
+        }
+        (a, csum)
+    }
+
+    /// Lane-wise low-64 product (AVX2 has no 64-bit multiply; compose it
+    /// from the 32×32→64 `mul_epu32` partial products).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    fn mullo_epi64(a: __m256i, b: __m256i) -> __m256i {
+        let lo = _mm256_mul_epu32(a, b);
+        let t1 = _mm256_mul_epu32(_mm256_srli_epi64::<32>(a), b);
+        let t2 = _mm256_mul_epu32(a, _mm256_srli_epi64::<32>(b));
+        let hi = _mm256_slli_epi64::<32>(_mm256_add_epi64(t1, t2));
+        _mm256_add_epi64(lo, hi)
+    }
+
+    /// The XSH-RR output of four pre-advance states, one u32 per u64 lane
+    /// (low 32 bits). The variable rotate is `(x >> r) | (x << (32 - r))`
+    /// masked back to 32 bits; at `r = 0` the left term shifts into the
+    /// cleared upper half, so no special case is needed.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    fn pcg_out32x4(s: __m256i) -> __m256i {
+        let mask32 = _mm256_set1_epi64x(0xffff_ffff);
+        let t = _mm256_xor_si256(_mm256_srli_epi64::<18>(s), s);
+        let xs = _mm256_and_si256(_mm256_srli_epi64::<27>(t), mask32);
+        let rot = _mm256_srli_epi64::<59>(s);
+        let right = _mm256_srlv_epi64(xs, rot);
+        let left =
+            _mm256_sllv_epi64(xs, _mm256_sub_epi64(_mm256_set1_epi64x(32), rot));
+        _mm256_and_si256(_mm256_or_si256(right, left), mask32)
+    }
+
+    /// AVX2 bulk generation — bit-identical to
+    /// [`super::fill_u64s_scalar`]; the tail (< 4 u64s) runs scalar.
+    #[target_feature(enable = "avx2")]
+    pub fn fill_u64s_avx2(state: u64, inc: u64, out: &mut [u64]) -> u64 {
+        let n = out.len();
+        if n < 4 {
+            return super::fill_u64s_scalar(state, inc, out);
+        }
+        let (a, csum) = lcg_powers();
+        let lane = |j: usize| {
+            a[j].wrapping_mul(state)
+                .wrapping_add(csum[j].wrapping_mul(inc)) as i64
+        };
+        let mut v0 = _mm256_setr_epi64x(lane(0), lane(1), lane(2), lane(3));
+        let mut v1 = _mm256_setr_epi64x(lane(4), lane(5), lane(6), lane(7));
+        let a8 = _mm256_set1_epi64x(a[8] as i64);
+        let c8 = _mm256_set1_epi64x(csum[8].wrapping_mul(inc) as i64);
+        let mut s = state;
+        let mut tmp = [0u64; 8];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let o0 = pcg_out32x4(v0);
+            let o1 = pcg_out32x4(v1);
+            // SAFETY: `tmp` is 8 u64s (64 bytes); the two unaligned
+            // 32-byte stores cover exactly its first and second halves.
+            unsafe {
+                _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, o0);
+                _mm256_storeu_si256(
+                    tmp.as_mut_ptr().add(4) as *mut __m256i,
+                    o1,
+                );
+            }
+            // pack pairs of 32-bit draws, high word first (next_u64 order)
+            out[i] = (tmp[0] << 32) | tmp[1];
+            out[i + 1] = (tmp[2] << 32) | tmp[3];
+            out[i + 2] = (tmp[4] << 32) | tmp[5];
+            out[i + 3] = (tmp[6] << 32) | tmp[7];
+            v0 = _mm256_add_epi64(mullo_epi64(v0, a8), c8);
+            v1 = _mm256_add_epi64(mullo_epi64(v1, a8), c8);
+            s = a[8].wrapping_mul(s).wrapping_add(csum[8].wrapping_mul(inc));
+            i += 4;
+        }
+        super::fill_u64s_scalar(s, inc, &mut out[i..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drawn via `Pcg64` so the reference covers the real consumption.
+    fn reference(seed: u64, n: usize) -> (Vec<u64>, crate::prng::Pcg64) {
+        let mut rng = crate::prng::Pcg64::seed(seed);
+        let v = (0..n).map(|_| rng.next_u64()).collect();
+        (v, rng)
+    }
+
+    #[test]
+    fn scalar_kernel_matches_sequential_next_u64() {
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+            for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 64, 129] {
+                let (want, mut rng_after) = reference(seed, n);
+                let mut rng = crate::prng::Pcg64::seed(seed);
+                let mut got = vec![0u64; n];
+                rng.fill_u64s(&mut got);
+                assert_eq!(got, want, "seed={seed} n={n}");
+                // the state advanced exactly as far as sequential draws
+                assert_eq!(
+                    rng.next_u64(),
+                    rng_after.next_u64(),
+                    "state desync: seed={seed} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_path_is_bit_identical_to_scalar() {
+        let paths = [SimdPath::Scalar, simd::detect()];
+        for seed in [7u64, 0x5EED, u64::MAX] {
+            for n in [1usize, 3, 4, 6, 8, 11, 16, 33, 256, 1000] {
+                let mut rng = crate::prng::Pcg64::seed(seed);
+                let (state, inc) = rng.raw_state();
+                let mut want = vec![0u64; n];
+                let end =
+                    fill_u64s_scalar(state, inc, &mut want);
+                for p in paths {
+                    let mut got = vec![0u64; n];
+                    let e = fill_u64s_with(p, state, inc, &mut got);
+                    assert_eq!(got, want, "path={p} seed={seed} n={n}");
+                    assert_eq!(e, end, "end state: path={p} seed={seed} n={n}");
+                }
+            }
+        }
+    }
+}

@@ -19,6 +19,7 @@
 //! decode a `.mrc` on the platform family that encoded it (see
 //! `docs/adr/001-backend-abstraction.md`).
 
+pub mod bulk;
 pub mod sampling;
 
 pub use sampling::{
@@ -82,9 +83,7 @@ impl Pcg64 {
 
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
-        self.state = old
-            .wrapping_mul(6364136223846793005)
-            .wrapping_add(self.inc);
+        self.state = old.wrapping_mul(bulk::PCG_MUL).wrapping_add(self.inc);
         let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
         let rot = (old >> 59) as u32;
         xorshifted.rotate_right(rot)
@@ -92,6 +91,18 @@ impl Pcg64 {
 
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Fill `out` with the exact sequence repeated [`Pcg64::next_u64`]
+    /// calls would produce, through the dispatched bulk kernel
+    /// ([`bulk::fill_u64s`] — bit-identical on every SIMD path).
+    pub fn fill_u64s(&mut self, out: &mut [u64]) {
+        self.state = bulk::fill_u64s(self.state, self.inc, out);
+    }
+
+    /// The raw `(state, inc)` pair, for the bulk-kernel parity tests.
+    pub(crate) fn raw_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
     }
 
     /// Uniform in [0, 1).
@@ -144,24 +155,73 @@ impl Pcg64 {
     /// Fill `out` with standard normals as f32 — the exact sequence repeated
     /// [`Pcg64::next_normal`] calls would produce, minus the per-draw spare
     /// bookkeeping (the candidate hot path's bulk generator).
+    ///
+    /// The uniforms come from [`Pcg64::fill_u64s`] in buffered batches, so
+    /// the integer half of the work runs on the dispatched SIMD kernel
+    /// while the Box–Muller transform (libm `ln`/`sin_cos`) stays scalar —
+    /// the outputs are therefore bit-identical across SIMD paths. The
+    /// batch size is capped at the *minimum* draws the remaining outputs
+    /// can consume (a rejected `u1` just triggers another batch), so the
+    /// generator never advances past what sequential draws would use.
     pub fn fill_normals_f32(&mut self, out: &mut [f32]) {
+        #[inline]
+        fn to_unit(u: u64) -> f64 {
+            // same mapping as next_f64
+            (u >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        }
+        let n = out.len();
         let mut i = 0usize;
-        if i < out.len() {
+        if i < n {
             if let Some(z) = self.spare_normal.take() {
                 out[i] = z as f32;
                 i += 1;
             }
         }
-        while i + 2 <= out.len() {
-            let (a, b) = self.box_muller_pair();
-            out[i] = a as f32;
-            out[i + 1] = b as f32;
-            i += 2;
-        }
-        if i < out.len() {
-            let (a, b) = self.box_muller_pair();
-            out[i] = a as f32;
-            self.spare_normal = Some(b);
+        const BUF: usize = 256;
+        let mut buf = [0u64; BUF];
+        // a u1 that passed rejection but whose u2 missed the last batch
+        let mut pending_u1: Option<f64> = None;
+        while i < n {
+            // ceil((n - i) / 2) full Box–Muller pairs still to compute
+            // (the final odd output also burns a full pair, like
+            // box_muller_pair does)
+            let pairs_left = (n - i + 1) / 2;
+            let want = 2 * pairs_left - usize::from(pending_u1.is_some());
+            let take = want.min(BUF);
+            let batch = &mut buf[..take];
+            self.fill_u64s(batch);
+            let mut k = 0usize;
+            while k < take {
+                let u1 = match pending_u1.take() {
+                    Some(u) => u,
+                    None => {
+                        let u = to_unit(batch[k]);
+                        k += 1;
+                        u
+                    }
+                };
+                if u1 <= f64::MIN_POSITIVE {
+                    // rejected — redraw u1 (identical to box_muller_pair)
+                    continue;
+                }
+                if k == take {
+                    pending_u1 = Some(u1);
+                    break;
+                }
+                let u2 = to_unit(batch[k]);
+                k += 1;
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+                out[i] = (r * c) as f32;
+                i += 1;
+                if i < n {
+                    out[i] = (r * s) as f32;
+                    i += 1;
+                } else {
+                    self.spare_normal = Some(r * s);
+                    return;
+                }
+            }
         }
     }
 

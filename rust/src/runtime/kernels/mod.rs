@@ -1,0 +1,194 @@
+//! Dispatched candidate-scoring kernels — the fused sample+score inner
+//! loop of the encode hot path, factored out of `runtime/native.rs` so the
+//! scalar reference and the vector variants live side by side.
+//!
+//! The math (docs on [`score_consts`]): per candidate row of normals `z`,
+//! the importance logit is
+//! `Σ_j half_mask[j]·(z_j² − zq_j²) + base` with
+//! `zq_j = (exp_lsp[j]·z_j − mu[j])·neg_exp_rho[j]`.
+//!
+//! [`score_rows_scalar`] is THE reference implementation: one f32 term per
+//! coordinate accumulated sequentially into an f64. The AVX2/FMA and NEON
+//! variants compute the same terms 8/4 lanes at a time, widen each lane
+//! group to f64 and accumulate in two vector accumulators — fused
+//! multiplies plus reassociated addition, so logits may drift a few ulps
+//! from the reference. That drift only affects *fresh* encodes (candidate
+//! selection); decode replays a transmitted index and never calls these
+//! kernels, so `.mrc` bytes stay path-independent (contract + tolerance in
+//! `docs/perf.md`, enforced by `rust/tests/simd_parity.rs`).
+//!
+//! Safety policy: `#[deny(unsafe_op_in_unsafe_fn)]`; vector arithmetic uses
+//! safe `#[target_feature]` functions, so `unsafe` appears only at the
+//! feature-gated dispatch call (CPU support proven by
+//! [`crate::util::simd::detect`]) and around pointer loads, each with a
+//! SAFETY comment.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use crate::util::simd::{self, SimdPath};
+
+/// Per-block constants of the importance logit, hoisted out of the
+/// K-candidate loop: `log q - log p` per coordinate is
+/// `0.5 * mask * (z^2 - zq^2) + mask * (lsp - rho)` with
+/// `zq = (exp(lsp) * z - mu) * exp(-rho)` (the `0.5 * log(2 pi)` terms
+/// cancel; the masked `lsp - rho` part is candidate-independent and
+/// pre-summed into `base`).
+pub struct ScoreConsts {
+    pub exp_lsp: Vec<f32>,
+    pub neg_exp_rho: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub half_mask: Vec<f32>,
+    pub base: f64,
+}
+
+impl ScoreConsts {
+    /// Block width S (coordinates per candidate row).
+    pub fn s(&self) -> usize {
+        self.mu.len()
+    }
+}
+
+/// Hoist one block's scoring constants (see [`ScoreConsts`]).
+pub fn score_consts(
+    mu: &[f32],
+    rho: &[f32],
+    lsp: &[f32],
+    mask: &[f32],
+) -> ScoreConsts {
+    let s = mu.len();
+    let mut exp_lsp = Vec::with_capacity(s);
+    let mut neg_exp_rho = Vec::with_capacity(s);
+    let mut half_mask = Vec::with_capacity(s);
+    let mut base = 0f64;
+    for j in 0..s {
+        exp_lsp.push(lsp[j].exp());
+        neg_exp_rho.push((-rho[j]).exp());
+        half_mask.push(0.5 * mask[j]);
+        base += (mask[j] * (lsp[j] - rho[j])) as f64;
+    }
+    ScoreConsts {
+        exp_lsp,
+        neg_exp_rho,
+        mu: mu.to_vec(),
+        half_mask,
+        base,
+    }
+}
+
+/// Reference scoring: `zs` holds `out.len()` rows of S normals; one logit
+/// per row. Every other variant is measured against this one.
+pub fn score_rows_scalar(c: &ScoreConsts, zs: &[f32], out: &mut [f32]) {
+    let s = c.s();
+    debug_assert_eq!(zs.len(), out.len() * s);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &zs[r * s..(r + 1) * s];
+        let mut acc = 0f64;
+        for j in 0..s {
+            let z = row[j];
+            let zq = (c.exp_lsp[j] * z - c.mu[j]) * c.neg_exp_rho[j];
+            acc += (c.half_mask[j] * (z * z - zq * zq)) as f64;
+        }
+        *o = (acc + c.base) as f32;
+    }
+}
+
+/// Dispatched scoring on an explicit path (parity tests); production code
+/// uses [`score_rows`].
+pub fn score_rows_with(
+    path: SimdPath,
+    c: &ScoreConsts,
+    zs: &[f32],
+    out: &mut [f32],
+) {
+    match path {
+        SimdPath::Scalar => score_rows_scalar(c, zs, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `SimdPath::Avx2` is only ever produced after
+        // `is_x86_feature_detected!` confirmed AVX2+FMA (util/simd.rs), so
+        // the target-feature call contract holds.
+        SimdPath::Avx2 => unsafe { x86::score_rows_avx2(c, zs, out) },
+        #[cfg(target_arch = "aarch64")]
+        // NEON is baseline on aarch64 — statically enabled, safe call.
+        SimdPath::Neon => neon::score_rows_neon(c, zs, out),
+        // cross-arch variants that cannot occur here (parse/detect never
+        // yield them on this target) fall back to the reference
+        _ => score_rows_scalar(c, zs, out),
+    }
+}
+
+/// [`score_rows_with`] on the process-wide dispatch path.
+pub fn score_rows(c: &ScoreConsts, zs: &[f32], out: &mut [f32]) {
+    score_rows_with(simd::active(), c, zs, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded_case(s: usize, k: usize) -> (ScoreConsts, Vec<f32>) {
+        let mut rng = crate::prng::Pcg64::seed(0x5C0E);
+        let draw = |rng: &mut crate::prng::Pcg64, lo: f32, hi: f32| {
+            lo + (hi - lo) * rng.next_f32()
+        };
+        let mu: Vec<f32> = (0..s).map(|_| draw(&mut rng, -0.5, 0.5)).collect();
+        let rho: Vec<f32> = (0..s).map(|_| draw(&mut rng, -2.0, -0.5)).collect();
+        let lsp: Vec<f32> = (0..s).map(|_| draw(&mut rng, -1.5, -0.5)).collect();
+        // realistic masks: mostly live, some padding zeros
+        let mask: Vec<f32> =
+            (0..s).map(|j| if j % 7 == 3 { 0.0 } else { 1.0 }).collect();
+        let zs = crate::prng::normals_f32(&mut rng, k * s);
+        (score_consts(&mu, &rho, &lsp, &mask), zs)
+    }
+
+    fn argmax(v: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, &x) in v.iter().enumerate() {
+            if x > v[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_within_tolerance() {
+        // odd S exercises every vector tail; tolerance per docs/perf.md
+        for s in [1usize, 4, 7, 8, 9, 16, 31, 64] {
+            let k = 33;
+            let (c, zs) = seeded_case(s, k);
+            let mut want = vec![0f32; k];
+            score_rows_scalar(&c, &zs, &mut want);
+            let mut got = vec![0f32; k];
+            score_rows_with(simd::detect(), &c, &zs, &mut got);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                let tol = 1e-5 * (1.0 + a.abs());
+                assert!((a - b).abs() <= tol, "s={s} row {i}: {a} vs {b}");
+            }
+            assert_eq!(argmax(&want), argmax(&got), "argmax flipped at s={s}");
+        }
+    }
+
+    #[test]
+    fn scalar_path_is_exact_on_q_equals_p() {
+        // q == p (mu=0, rho=lsp, full mask): every logit must be exactly 0
+        let s = 8;
+        let mu = vec![0f32; s];
+        let rho = vec![-0.5f32; s];
+        let lsp = vec![-0.5f32; s];
+        let mask = vec![1f32; s];
+        let c = score_consts(&mu, &rho, &lsp, &mask);
+        let mut rng = crate::prng::Pcg64::seed(1);
+        let zs = crate::prng::normals_f32(&mut rng, 4 * s);
+        let mut out = vec![1f32; 4];
+        score_rows_scalar(&c, &zs, &mut out);
+        for &l in &out {
+            assert!(l.abs() < 1e-5, "logit {l}");
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! NEON variant of the candidate-scoring kernel: 4 f32 terms per
+//! iteration, widened to two 2-lane f64 accumulators. NEON is part of the
+//! aarch64 baseline ISA, so these functions are statically feature-enabled
+//! and safe to call; `unsafe` remains only on the pointer loads.
+
+use core::arch::aarch64::*;
+
+use super::ScoreConsts;
+
+/// See [`super::score_rows_scalar`] for the definition being vectorized.
+pub fn score_rows_neon(c: &ScoreConsts, zs: &[f32], out: &mut [f32]) {
+    let s = c.s();
+    debug_assert_eq!(zs.len(), out.len() * s);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &zs[r * s..(r + 1) * s];
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut j = 0usize;
+        while j + 4 <= s {
+            // SAFETY: `j + 4 <= s` bounds every 4-lane load within `row`
+            // and the four length-S constant vectors.
+            let (z, el, mu, ner, hm) = unsafe {
+                (
+                    vld1q_f32(row.as_ptr().add(j)),
+                    vld1q_f32(c.exp_lsp.as_ptr().add(j)),
+                    vld1q_f32(c.mu.as_ptr().add(j)),
+                    vld1q_f32(c.neg_exp_rho.as_ptr().add(j)),
+                    vld1q_f32(c.half_mask.as_ptr().add(j)),
+                )
+            };
+            // zq = (exp_lsp·z − mu)·neg_exp_rho, via -mu + exp_lsp·z
+            let zq = vmulq_f32(vfmaq_f32(vnegq_f32(mu), el, z), ner);
+            // term = half_mask·(z² − zq²)
+            let diff = vfmsq_f32(vmulq_f32(z, z), zq, zq);
+            let term = vmulq_f32(hm, diff);
+            acc0 = vaddq_f64(acc0, vcvt_f64_f32(vget_low_f32(term)));
+            acc1 = vaddq_f64(acc1, vcvt_high_f64_f32(term));
+            j += 4;
+        }
+        let mut acc = vaddvq_f64(acc0) + vaddvq_f64(acc1);
+        while j < s {
+            let z = row[j];
+            let zq = (c.exp_lsp[j] * z - c.mu[j]) * c.neg_exp_rho[j];
+            acc += (c.half_mask[j] * (z * z - zq * zq)) as f64;
+            j += 1;
+        }
+        *o = (acc + c.base) as f32;
+    }
+}

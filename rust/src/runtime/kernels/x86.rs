@@ -1,0 +1,67 @@
+//! AVX2/FMA variant of the candidate-scoring kernel: 8 f32 terms per
+//! iteration, widened to two 4-lane f64 accumulators (the f64 accumulation
+//! of the scalar reference is preserved; only the per-term f32 arithmetic
+//! is fused/reassociated — the documented ulp-drift source).
+
+use core::arch::x86_64::*;
+
+use super::ScoreConsts;
+
+/// Horizontal sum of a 4-lane f64 accumulator.
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+fn hsum_pd(v: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(v);
+    let hi = _mm256_extractf128_pd::<1>(v);
+    let sum2 = _mm_add_pd(lo, hi);
+    let swapped = _mm_unpackhi_pd(sum2, sum2);
+    _mm_cvtsd_f64(_mm_add_sd(sum2, swapped))
+}
+
+/// See [`super::score_rows_scalar`] for the definition being vectorized.
+#[target_feature(enable = "avx2,fma")]
+pub fn score_rows_avx2(c: &ScoreConsts, zs: &[f32], out: &mut [f32]) {
+    let s = c.s();
+    debug_assert_eq!(zs.len(), out.len() * s);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &zs[r * s..(r + 1) * s];
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0usize;
+        while j + 8 <= s {
+            // SAFETY: `j + 8 <= s` bounds every 8-lane load within `row`
+            // and the four length-S constant vectors.
+            let (z, el, mu, ner, hm) = unsafe {
+                (
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                    _mm256_loadu_ps(c.exp_lsp.as_ptr().add(j)),
+                    _mm256_loadu_ps(c.mu.as_ptr().add(j)),
+                    _mm256_loadu_ps(c.neg_exp_rho.as_ptr().add(j)),
+                    _mm256_loadu_ps(c.half_mask.as_ptr().add(j)),
+                )
+            };
+            // zq = (exp_lsp·z − mu)·neg_exp_rho
+            let zq = _mm256_mul_ps(_mm256_fmsub_ps(el, z, mu), ner);
+            // term = half_mask·(z² − zq²)
+            let diff = _mm256_fmsub_ps(z, z, _mm256_mul_ps(zq, zq));
+            let term = _mm256_mul_ps(hm, diff);
+            acc_lo = _mm256_add_pd(
+                acc_lo,
+                _mm256_cvtps_pd(_mm256_castps256_ps128(term)),
+            );
+            acc_hi = _mm256_add_pd(
+                acc_hi,
+                _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(term)),
+            );
+            j += 8;
+        }
+        let mut acc = hsum_pd(_mm256_add_pd(acc_lo, acc_hi));
+        while j < s {
+            let z = row[j];
+            let zq = (c.exp_lsp[j] * z - c.mu[j]) * c.neg_exp_rho[j];
+            acc += (c.half_mask[j] * (z * z - zq * zq)) as f64;
+            j += 1;
+        }
+        *o = (acc + c.base) as f32;
+    }
+}

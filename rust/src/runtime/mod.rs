@@ -20,6 +20,7 @@
 //! sources of randomness: a `.mrc` file decodes correctly only on the backend
 //! family that encoded it. See `docs/adr/001-backend-abstraction.md`.
 
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
@@ -317,6 +318,10 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
+        // Resolve the kernel dispatch path up front so an invalid
+        // MIRACLE_SIMD fails here, loudly, instead of silently running the
+        // scalar fallback (same strictness as MIRACLE_BACKEND below).
+        let _ = crate::util::simd::selected()?;
         match std::env::var("MIRACLE_BACKEND").as_deref() {
             Err(_) | Ok("") | Ok("native") => {
                 Ok(Runtime { kind: BackendKind::Native })

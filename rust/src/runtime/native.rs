@@ -17,10 +17,14 @@
 //!   blocks per invocation, fanning chunks across the scoped-thread pool
 //!   ([`crate::util::pool`]). Per-coordinate constants (`exp_lsp`,
 //!   `neg_exp_rho`, the masked `lsp - rho` base term) are hoisted once per
-//!   block, normals are bulk-generated into per-worker scratch buffers, and
-//!   chunk outputs land in disjoint slices — bit-identical at any thread
-//!   count because each chunk's randomness is independently addressable in
-//!   the seed tree.
+//!   block, normals are bulk-generated into per-worker scratch buffers
+//!   (u64 draws through the SIMD-dispatched [`crate::prng::bulk`] kernel),
+//!   scoring runs on the dispatched [`super::kernels`] variants, and chunk
+//!   outputs land in disjoint slices — bit-identical at any thread count
+//!   because each chunk's randomness is independently addressable in the
+//!   seed tree. SIMD path selection is `MIRACLE_SIMD`/`--simd`
+//!   ([`crate::util::simd`]); decode bytes are path-invariant by
+//!   construction.
 //! * `decode_block` decodes exactly the transmitted candidate row by
 //!   skipping earlier draws transcendental-free
 //!   ([`crate::prng::Pcg64::skip_normals`]) instead of materializing a
@@ -41,6 +45,7 @@ use crate::tensor::{Arg, TensorF32};
 use crate::util::{pool, Result};
 use crate::{ensure, err};
 
+use super::kernels::{self, score_consts};
 use super::{Backend, DeviceBuf, Entry, Input, ModelArtifacts, ModelMeta, Spec};
 
 const ADAM_B1: f32 = 0.9;
@@ -236,52 +241,20 @@ fn f32_arg(shape: Vec<usize>, data: Vec<f32>) -> Result<Arg> {
     Ok(Arg::F32(TensorF32::new(shape, data)?))
 }
 
-/// Per-block constants of the importance logit, hoisted out of the
-/// K-candidate loop: `log q - log p` per coordinate is
-/// `0.5 * mask * (z^2 - zq^2) + mask * (lsp - rho)` with
-/// `zq = (exp(lsp) * z - mu) * exp(-rho)` (the `0.5 * log(2 pi)` terms
-/// cancel; the masked `lsp - rho` part is candidate-independent and
-/// pre-summed into `base`).
-struct BlockConsts {
-    exp_lsp: Vec<f32>,
-    neg_exp_rho: Vec<f32>,
-    mu: Vec<f32>,
-    half_mask: Vec<f32>,
-    base: f64,
-}
-
-fn block_consts(mu: &[f32], rho: &[f32], lsp: &[f32], mask: &[f32]) -> BlockConsts {
-    let s = mu.len();
-    let mut exp_lsp = Vec::with_capacity(s);
-    let mut neg_exp_rho = Vec::with_capacity(s);
-    let mut half_mask = Vec::with_capacity(s);
-    let mut base = 0f64;
-    for j in 0..s {
-        exp_lsp.push(lsp[j].exp());
-        neg_exp_rho.push((-rho[j]).exp());
-        half_mask.push(0.5 * mask[j]);
-        base += (mask[j] * (lsp[j] - rho[j])) as f64;
-    }
-    BlockConsts {
-        exp_lsp,
-        neg_exp_rho,
-        mu: mu.to_vec(),
-        half_mask,
-        base,
-    }
-}
-
 /// Fused sample + score of one chunk's candidates into `out` (one logit per
 /// candidate). `scratch` holds the chunk's bulk-generated normals and is
-/// reused across every chunk the same worker processes.
+/// reused across every chunk the same worker processes. The normals come
+/// from the dispatched bulk generator (bit-identical on every SIMD path);
+/// the logits from the dispatched score kernel
+/// ([`kernels::score_rows`] — scalar-reference semantics, ulp-documented
+/// vector variants).
 fn score_chunk_into(
     rng: &mut prng::Pcg64,
-    c: &BlockConsts,
+    c: &kernels::ScoreConsts,
     scratch: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    let s = c.mu.len();
-    let need = out.len() * s;
+    let need = out.len() * c.s();
     if scratch.len() < need {
         // grow once per worker; no per-chunk zeroing — fill_normals_f32
         // overwrites every slot
@@ -289,16 +262,7 @@ fn score_chunk_into(
     }
     let scratch = &mut scratch[..need];
     rng.fill_normals_f32(scratch);
-    for (r, o) in out.iter_mut().enumerate() {
-        let zs = &scratch[r * s..(r + 1) * s];
-        let mut acc = 0f64;
-        for j in 0..s {
-            let z = zs[j];
-            let zq = (c.exp_lsp[j] * z - c.mu[j]) * c.neg_exp_rho[j];
-            acc += (c.half_mask[j] * (z * z - zq * zq)) as f64;
-        }
-        *o = (acc + c.base) as f32;
-    }
+    kernels::score_rows(c, scratch, out);
 }
 
 impl NativeBackend {
@@ -457,12 +421,20 @@ impl NativeBackend {
         let block = a[1].i32s()?[0];
         let chunk = a[2].i32s()?[0];
         let consts =
-            block_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
+            score_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
         let k_chunk = self.cfg.k_chunk;
         let mut out = vec![0f32; k_chunk];
-        let mut scratch = Vec::new();
         let mut rng = prng::candidate_stream(seed, block, chunk);
-        score_chunk_into(&mut rng, &consts, &mut scratch, &mut out);
+        // per-thread scratch, sized once — repeated score_chunk calls (the
+        // chunked PJRT-parity path) must not reallocate the normals buffer
+        // on every invocation
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<Vec<f32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        SCRATCH.with(|scr| {
+            score_chunk_into(&mut rng, &consts, &mut scr.borrow_mut(), &mut out)
+        });
         Ok(vec![f32_arg(vec![k_chunk], out)?])
     }
 
@@ -478,11 +450,12 @@ impl NativeBackend {
         );
         let n_chunks = n_chunks as usize;
         let consts =
-            block_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
+            score_consts(a[3].f32s()?, a[4].f32s()?, a[5].f32s()?, a[6].f32s()?);
         let k_chunk = self.cfg.k_chunk;
         let mut out = vec![0f32; n_chunks * k_chunk];
         pool::parallel_runs_mut(&mut out, k_chunk, |first_chunk, span| {
-            let mut scratch = Vec::new();
+            // sized once per worker, reused across all its chunks
+            let mut scratch = vec![0f32; k_chunk * consts.s()];
             for (i, chunk_out) in span.chunks_mut(k_chunk).enumerate() {
                 let mut rng = prng::candidate_stream(
                     seed,
@@ -523,16 +496,17 @@ impl NativeBackend {
                 v.len()
             );
         }
-        let consts: Vec<BlockConsts> = (0..nb)
+        let consts: Vec<kernels::ScoreConsts> = (0..nb)
             .map(|i| {
                 let r = i * s..(i + 1) * s;
-                block_consts(&mu[r.clone()], &rho[r.clone()], &lsp[r.clone()], &mask[r])
+                score_consts(&mu[r.clone()], &rho[r.clone()], &lsp[r.clone()], &mask[r])
             })
             .collect();
         let k_chunk = self.cfg.k_chunk;
         let mut out = vec![0f32; nb * n_chunks * k_chunk];
         pool::parallel_runs_mut(&mut out, k_chunk, |first, span| {
-            let mut scratch = Vec::new();
+            // sized once per worker, reused across all its chunks
+            let mut scratch = vec![0f32; k_chunk * s];
             for (i, chunk_out) in span.chunks_mut(k_chunk).enumerate() {
                 let g = first + i;
                 let (bi, ch) = (g / n_chunks, g % n_chunks);

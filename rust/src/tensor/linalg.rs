@@ -4,17 +4,24 @@
 //! The flat parameter layout stores each dense layer's weights row-major as
 //! `W [fan_in, fan_out]`. For the batched `x · W` product the better layout
 //! is the transpose `Wᵀ [fan_out, fan_in]`: every output coordinate becomes
-//! one dot product of two contiguous vectors, which the 4-lane accumulators
-//! in [`dot`] let the compiler vectorize without reassociating a single
-//! chain (fp semantics stay deterministic — the summation order is fixed,
-//! just not strictly left-to-right). [`matmul_bias_wt`] additionally tiles
-//! over output columns so a tile of `Wᵀ` rows stays cache-hot across the
-//! whole batch instead of being re-streamed per example.
+//! one dot product of two contiguous vectors. [`dot_scalar`] — the
+//! reference implementation — uses four independent accumulators in a fixed
+//! summation order, so its fp semantics are deterministic per call; the
+//! AVX2/FMA and NEON variants behind [`dot`] use wider fused accumulators
+//! and may differ by a few ulps (train/eval drift only — the `.mrc` decode
+//! path never touches these kernels; policy in `docs/perf.md`, dispatch via
+//! [`crate::util::simd`]). [`matmul_bias_wt`] additionally tiles over
+//! output columns so a tile of `Wᵀ` rows stays cache-hot across the whole
+//! batch instead of being re-streamed per example.
 
-/// Dot product with four independent accumulators (fixed summation order —
-/// bit-identical on every call with the same inputs).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use crate::util::simd::{self, SimdPath};
+
+/// Reference dot product: four independent accumulators, fixed summation
+/// order — bit-identical on every call with the same inputs.
 #[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len().min(b.len());
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
     let mut i = 0usize;
@@ -31,6 +38,30 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         i += 1;
     }
     s
+}
+
+/// Dot product on an explicit dispatch path (hoist [`simd::active`] out of
+/// inner loops — see [`matmul_bias_wt`]).
+#[inline]
+pub fn dot_with(path: SimdPath, a: &[f32], b: &[f32]) -> f32 {
+    match path {
+        SimdPath::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `SimdPath::Avx2` is only ever produced after
+        // `is_x86_feature_detected!` confirmed AVX2+FMA (util/simd.rs).
+        SimdPath::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // NEON is baseline on aarch64 — statically enabled, safe call.
+        SimdPath::Neon => neon::dot_neon(a, b),
+        // cross-arch variants that cannot occur on this target
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Dot product on the process-wide dispatch path.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(simd::active(), a, b)
 }
 
 /// Transpose a row-major `[rows, cols]` matrix into `dst` as `[cols, rows]`
@@ -67,6 +98,8 @@ pub fn matmul_bias_wt(
     debug_assert_eq!(wt.len(), fi * fo);
     debug_assert_eq!(bias.len(), fo);
     debug_assert_eq!(out.len(), n * fo);
+    // one dispatch-path lookup for the whole product
+    let path = simd::active();
     let mut j0 = 0usize;
     while j0 < fo {
         let j1 = (j0 + COL_TILE).min(fo);
@@ -74,10 +107,116 @@ pub fn matmul_bias_wt(
             let xrow = &x[r * fi..(r + 1) * fi];
             let orow = &mut out[r * fo..(r + 1) * fo];
             for j in j0..j1 {
-                orow[j] = bias[j] + dot(xrow, &wt[j * fi..(j + 1) * fi]);
+                orow[j] =
+                    bias[j] + dot_with(path, xrow, &wt[j * fi..(j + 1) * fi]);
             }
         }
         j0 = j1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2/FMA dot: two 8-lane fused accumulators (f32, like the scalar
+    //! reference's four-lane split — reassociation/fusion is the documented
+    //! ulp-drift source).
+
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2,fma")]
+    pub fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // SAFETY: `i + 16 <= n <= a.len(), b.len()` bounds all four
+            // 8-lane loads.
+            unsafe {
+                acc0 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(i)),
+                    _mm256_loadu_ps(b.as_ptr().add(i)),
+                    acc0,
+                );
+                acc1 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+                    _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+                    acc1,
+                );
+            }
+            i += 16;
+        }
+        if i + 8 <= n {
+            // SAFETY: `i + 8 <= n` bounds both 8-lane loads.
+            unsafe {
+                acc0 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(a.as_ptr().add(i)),
+                    _mm256_loadu_ps(b.as_ptr().add(i)),
+                    acc0,
+                );
+            }
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2));
+        let mut s = _mm_cvtss_f32(s1);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON dot: two 4-lane fused accumulators.
+
+    use core::arch::aarch64::*;
+
+    pub fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: `i + 8 <= n <= a.len(), b.len()` bounds all four
+            // 4-lane loads.
+            unsafe {
+                acc0 = vfmaq_f32(
+                    acc0,
+                    vld1q_f32(a.as_ptr().add(i)),
+                    vld1q_f32(b.as_ptr().add(i)),
+                );
+                acc1 = vfmaq_f32(
+                    acc1,
+                    vld1q_f32(a.as_ptr().add(i + 4)),
+                    vld1q_f32(b.as_ptr().add(i + 4)),
+                );
+            }
+            i += 8;
+        }
+        if i + 4 <= n {
+            // SAFETY: `i + 4 <= n` bounds both loads.
+            unsafe {
+                acc0 = vfmaq_f32(
+                    acc0,
+                    vld1q_f32(a.as_ptr().add(i)),
+                    vld1q_f32(b.as_ptr().add(i)),
+                );
+            }
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
     }
 }
 
@@ -100,6 +239,22 @@ mod tests {
             assert!(
                 (dot(&a, &b) as f64 - naive).abs() < 1e-4,
                 "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_within_tolerance() {
+        // every vector-width boundary: 16-lane unroll, 8-lane step, tails
+        let mut rng = Pcg64::seed(77);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 129, 1000] {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_f32() - 0.5).collect();
+            let want = dot_scalar(&a, &b);
+            let got = dot_with(simd::detect(), &a, &b);
+            assert!(
+                (want - got).abs() <= 1e-4 * (1.0 + want.abs()),
+                "len={len}: scalar {want} vs dispatched {got}"
             );
         }
     }

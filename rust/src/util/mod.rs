@@ -1,7 +1,7 @@
 //! Shared utilities: error type, CLI args, JSON, stats, logging,
-//! prop-testing, the scoped-thread worker pool ([`pool`]), CRC-32
-//! ([`crc32`]) and the deterministic fault-injection harness
-//! ([`faultline`]).
+//! prop-testing, the scoped-thread worker pool ([`pool`]), the SIMD
+//! dispatch policy ([`simd`]), CRC-32 ([`crc32`]) and the deterministic
+//! fault-injection harness ([`faultline`]).
 
 pub mod args;
 pub mod crc32;
@@ -9,6 +9,7 @@ pub mod faultline;
 pub mod json;
 pub mod pool;
 pub mod quickprop;
+pub mod simd;
 pub mod stats;
 
 use std::fmt;

@@ -1,0 +1,216 @@
+//! Runtime SIMD dispatch policy for the data-parallel kernels.
+//!
+//! The hot kernels — fused candidate scoring
+//! ([`crate::runtime::kernels`]), bulk Pcg64 generation
+//! ([`crate::prng::bulk`]) and the dense micro-kernels
+//! ([`crate::tensor::linalg`]) — each ship a scalar implementation plus
+//! hand-vectorized variants. This module owns the *one* process-wide
+//! decision of which variant runs:
+//!
+//! 1. a CLI override plumbed through [`force`] (`--simd` on the `miracle`
+//!    subcommands), highest precedence;
+//! 2. the `MIRACLE_SIMD` env var — strict, like `MIRACLE_BACKEND`: the
+//!    accepted values are `auto` / `scalar` / `avx2` / `neon`, anything
+//!    else (or a path the CPU cannot run) is a hard error surfaced at
+//!    [`crate::runtime::Runtime::cpu`] construction, never a silent
+//!    fallback;
+//! 3. runtime feature detection (`auto`): AVX2+FMA on x86_64 via
+//!    `is_x86_feature_detected!`, NEON on aarch64 (baseline — always
+//!    present), scalar everywhere else.
+//!
+//! The selection is resolved once and cached: kernels read it through
+//! [`active`] (infallible — by the time a kernel runs, [`selected`] has
+//! validated the env at runtime construction; a library caller that skips
+//! that validation gets a one-time warning and the scalar reference path).
+//!
+//! Correctness contract (details in `docs/perf.md`): the scalar variant is
+//! THE reference. Vector variants must be bit-identical for integer
+//! kernels (bulk Pcg64 — so `.mrc` decode bytes never depend on the
+//! path) and within a documented ulp tolerance for float kernels
+//! (scoring logits, dot products — fresh-encode-only drift, same contract
+//! the PR-2 constant hoisting established). `rust/tests/simd_parity.rs`
+//! enforces both.
+
+use std::sync::OnceLock;
+
+use crate::util::Result;
+use crate::{err, info};
+
+/// One executable kernel family. `Avx2`/`Neon` exist on every
+/// architecture so match arms stay portable; [`parse`]/[`detect`] only
+/// ever yield a variant the current CPU can actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPath {
+    /// Portable reference implementation — always available.
+    Scalar,
+    /// x86_64 AVX2 + FMA (256-bit lanes), runtime-detected.
+    Avx2,
+    /// aarch64 NEON (128-bit lanes), baseline on every aarch64 CPU.
+    Neon,
+}
+
+impl SimdPath {
+    /// The name `MIRACLE_SIMD` accepts and logs/benches report.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best path the running CPU supports (the `auto` resolution).
+pub fn detect() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        {
+            return SimdPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline ISA; no detection needed.
+        return SimdPath::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdPath::Scalar
+}
+
+/// Strict parse of a `MIRACLE_SIMD`-style value. `auto`/empty resolve via
+/// [`detect`]; explicit paths error if this build/CPU cannot run them —
+/// a typo or an impossible request must never silently benchmark the
+/// wrong kernels (same contract as `MIRACLE_BACKEND`).
+pub fn parse(v: &str) -> Result<SimdPath> {
+    match v {
+        "" | "auto" => Ok(detect()),
+        "scalar" => Ok(SimdPath::Scalar),
+        "avx2" => {
+            if detect() == SimdPath::Avx2 {
+                Ok(SimdPath::Avx2)
+            } else {
+                err!(
+                    "MIRACLE_SIMD=avx2 requested, but this CPU/build has no \
+                     AVX2+FMA (use 'auto' or 'scalar')"
+                )
+            }
+        }
+        "neon" => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                Ok(SimdPath::Neon)
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            {
+                err!(
+                    "MIRACLE_SIMD=neon requested, but this build does not \
+                     target aarch64 (use 'auto' or 'scalar')"
+                )
+            }
+        }
+        other => err!(
+            "unknown MIRACLE_SIMD '{other}' \
+             (expected auto|scalar|avx2|neon)"
+        ),
+    }
+}
+
+static ACTIVE: OnceLock<SimdPath> = OnceLock::new();
+
+/// Resolve (and cache) the dispatch path: a prior [`force`] wins, else the
+/// `MIRACLE_SIMD` env var, strictly parsed. Called by
+/// [`crate::runtime::Runtime::cpu`] and the bench drivers so an invalid
+/// value fails loudly before any kernel runs.
+pub fn selected() -> Result<SimdPath> {
+    if let Some(p) = ACTIVE.get() {
+        return Ok(*p);
+    }
+    let p = parse(
+        std::env::var("MIRACLE_SIMD").unwrap_or_default().as_str(),
+    )?;
+    Ok(*ACTIVE.get_or_init(|| p))
+}
+
+/// Pin the dispatch path from the CLI (`--simd`), before any kernel ran.
+/// Errors if a different path was already resolved — a half-scalar,
+/// half-vector run would make every perf or parity comparison meaningless.
+pub fn force(p: SimdPath) -> Result<()> {
+    match ACTIVE.get() {
+        None => {
+            let got = *ACTIVE.get_or_init(|| p);
+            if got == p {
+                Ok(())
+            } else {
+                err!(
+                    "simd path already resolved to '{got}' before the \
+                     '{p}' override could apply"
+                )
+            }
+        }
+        Some(&got) if got == p => Ok(()),
+        Some(&got) => err!(
+            "simd path already resolved to '{got}' before the '{p}' \
+             override could apply"
+        ),
+    }
+}
+
+/// The path kernels dispatch on — infallible for hot-path use. If the env
+/// var is invalid *and* nothing validated it earlier (library embedding
+/// that never builds a [`crate::runtime::Runtime`]), warns once and pins
+/// the scalar reference path.
+pub fn active() -> SimdPath {
+    if let Some(p) = ACTIVE.get() {
+        return *p;
+    }
+    match selected() {
+        Ok(p) => p,
+        Err(e) => {
+            info!("{e}; falling back to the scalar kernels");
+            *ACTIVE.get_or_init(|| SimdPath::Scalar)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_strict() {
+        assert!(parse("AVX2").is_err());
+        assert!(parse("sse").is_err());
+        assert!(parse("Scalar").is_err());
+        let msg = parse("turbo").unwrap_err().to_string();
+        assert!(msg.contains("MIRACLE_SIMD"), "{msg}");
+        assert!(msg.contains("turbo"), "{msg}");
+    }
+
+    #[test]
+    fn auto_and_scalar_always_parse() {
+        assert_eq!(parse("").unwrap(), detect());
+        assert_eq!(parse("auto").unwrap(), detect());
+        assert_eq!(parse("scalar").unwrap(), SimdPath::Scalar);
+    }
+
+    #[test]
+    fn detect_is_runnable_here() {
+        // whatever detect() picks must be a path parse() accepts explicitly
+        let p = detect();
+        assert_eq!(parse(p.name()).unwrap(), p);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Neon] {
+            assert_eq!(format!("{p}"), p.name());
+        }
+    }
+}

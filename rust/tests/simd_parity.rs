@@ -1,0 +1,305 @@
+//! SIMD dispatch parity suite (contract in `docs/perf.md`):
+//!
+//! * the bulk Pcg64 kernel is **bit-identical** to sequential `next_u64`
+//!   on every available dispatch path — the property that makes `.mrc`
+//!   decode bytes path-invariant;
+//! * dispatched candidate scoring agrees with the scalar reference within
+//!   the documented ulp tolerance and picks identical argmax candidates on
+//!   seeded blocks;
+//! * a full compress→`.mrc` run (subprocess, so the `MIRACLE_SIMD` env var
+//!   is honored end to end) produces byte-identical containers under
+//!   `scalar` and `auto`, and the committed golden fixture decodes
+//!   identically under both;
+//! * an invalid `MIRACLE_SIMD` is a hard error, not a silent fallback;
+//! * `log_sum_exp` / `softmax_in_place` edge cases (empty, single-element,
+//!   all `-inf`, NaN propagation) are pinned.
+
+use std::process::Command;
+
+use miracle::prng::{bulk, log_sum_exp, softmax_in_place, Pcg64};
+use miracle::runtime::kernels;
+use miracle::util::simd::{self, SimdPath};
+
+/// Paths exercised on this machine: the reference plus whatever `auto`
+/// resolves to (deduplicated when detection lands on scalar).
+fn available_paths() -> Vec<SimdPath> {
+    let mut v = vec![SimdPath::Scalar];
+    if simd::detect() != SimdPath::Scalar {
+        v.push(simd::detect());
+    }
+    v
+}
+
+// ---- (b) bulk Pcg64 bit-identity --------------------------------------
+
+#[test]
+fn bulk_u64s_bit_identical_to_sequential_next_u64() {
+    for seed in [0u64, 7, 0xDEAD_BEEF, u64::MAX] {
+        for n in [1usize, 3, 4, 5, 8, 13, 64, 257, 1024] {
+            let mut seq_rng = Pcg64::seed(seed);
+            let want: Vec<u64> = (0..n).map(|_| seq_rng.next_u64()).collect();
+            // Pcg64::fill_u64s runs on the process-wide (auto) path
+            let mut bulk_rng = Pcg64::seed(seed);
+            let mut got = vec![0u64; n];
+            bulk_rng.fill_u64s(&mut got);
+            assert_eq!(got, want, "seed={seed} n={n}");
+            // and the generators stay aligned afterwards
+            assert_eq!(bulk_rng.next_u64(), seq_rng.next_u64());
+        }
+    }
+}
+
+#[test]
+fn bulk_kernel_paths_agree_bit_for_bit() {
+    for (state, inc) in [
+        (0u64, 1u64),
+        (0x853C_49E6_748F_EA9B, 0xDA3E_39CB_94B9_5BDB),
+        (u64::MAX, u64::MAX),
+    ] {
+        for n in [1usize, 4, 7, 16, 33, 256, 4096] {
+            let mut want = vec![0u64; n];
+            let end =
+                bulk::fill_u64s_with(SimdPath::Scalar, state, inc, &mut want);
+            for p in available_paths() {
+                let mut got = vec![0u64; n];
+                let e = bulk::fill_u64s_with(p, state, inc, &mut got);
+                assert_eq!(got, want, "path={p} state={state:#x} n={n}");
+                assert_eq!(e, end, "end state diverged on path={p} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn normals_are_bit_identical_across_paths_via_auto_process() {
+    // fill_normals_f32 consumes the bulk u64 stream; since that stream is
+    // bit-identical on every path and Box–Muller itself stays scalar, the
+    // normals this process (auto path) produces must equal sequential
+    // next_normal draws exactly
+    let mut a = Pcg64::seed(0xBEEF);
+    let mut b = Pcg64::seed(0xBEEF);
+    let mut bulk = vec![0f32; 1023];
+    a.fill_normals_f32(&mut bulk);
+    for (i, &x) in bulk.iter().enumerate() {
+        let y = b.next_normal() as f32;
+        assert_eq!(x.to_bits(), y.to_bits(), "normal {i}");
+    }
+}
+
+// ---- (a) scoring parity + argmax --------------------------------------
+
+fn seeded_block(s: usize, k: usize, seed: u64) -> (kernels::ScoreConsts, Vec<f32>) {
+    let mut rng = Pcg64::seed(seed);
+    let mk = |rng: &mut Pcg64, lo: f32, hi: f32, n: usize| -> Vec<f32> {
+        (0..n).map(|_| lo + (hi - lo) * rng.next_f32()).collect()
+    };
+    let mu = mk(&mut rng, -0.5, 0.5, s);
+    let rho = mk(&mut rng, -2.5, -0.5, s);
+    let lsp = mk(&mut rng, -1.5, -0.5, s);
+    let mask: Vec<f32> =
+        (0..s).map(|j| if j % 11 == 5 { 0.0 } else { 1.0 }).collect();
+    let zs = miracle::prng::normals_f32(&mut rng, k * s);
+    (kernels::score_consts(&mu, &rho, &lsp, &mask), zs)
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[test]
+fn dispatched_scoring_within_tolerance_and_same_argmax() {
+    // S sweeps across vector-width boundaries (8-lane AVX2, 4-lane NEON)
+    for (case, s) in [1usize, 3, 7, 8, 9, 16, 63, 128, 257].iter().enumerate()
+    {
+        let k = 128;
+        let (c, zs) = seeded_block(*s, k, 0x51D0 + case as u64);
+        let mut want = vec![0f32; k];
+        kernels::score_rows_scalar(&c, &zs, &mut want);
+        for p in available_paths() {
+            let mut got = vec![0f32; k];
+            kernels::score_rows_with(p, &c, &zs, &mut got);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                // documented tolerance (docs/perf.md): relative 1e-5
+                let tol = 1e-5 * (1.0 + a.abs());
+                assert!(
+                    (a - b).abs() <= tol,
+                    "path={p} S={s} row {i}: scalar {a} vs {b}"
+                );
+            }
+            assert_eq!(
+                argmax(&want),
+                argmax(&got),
+                "argmax flipped on path={p} S={s}"
+            );
+        }
+    }
+}
+
+// ---- (c)+(d) end-to-end under MIRACLE_SIMD ----------------------------
+
+fn miracle_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_miracle"))
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("miracle_simd_parity_{}_{tag}.mrc", std::process::id()))
+}
+
+/// Training-free compress (i0=0, i=0): pure candidate scoring + encode, the
+/// paths whose SIMD parity this file is about.
+fn compress_with_simd(simd_val: &str, out: &std::path::Path) -> String {
+    let output = miracle_bin()
+        .env("MIRACLE_SIMD", simd_val)
+        .args([
+            "compress",
+            "--model",
+            "tiny_mlp",
+            "--i0",
+            "0",
+            "--i",
+            "0",
+            "--c-loc-bits",
+            "8",
+            "--train-size",
+            "64",
+            "--test-size",
+            "64",
+            "--protocol-seed",
+            "7",
+            "--out",
+        ])
+        .arg(out)
+        .output()
+        .expect("spawn miracle compress");
+    assert!(
+        output.status.success(),
+        "compress failed under MIRACLE_SIMD={simd_val}: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    String::from_utf8_lossy(&output.stdout).into_owned()
+}
+
+#[test]
+fn compress_is_byte_identical_under_scalar_and_auto() {
+    let out_scalar = tmp_path("scalar");
+    let out_auto = tmp_path("auto");
+    let stdout_scalar = compress_with_simd("scalar", &out_scalar);
+    let stdout_auto = compress_with_simd("auto", &out_auto);
+    assert!(
+        stdout_scalar.contains("simd/threads:    scalar"),
+        "compress did not report the scalar path:\n{stdout_scalar}"
+    );
+    assert!(
+        stdout_auto
+            .contains(&format!("simd/threads:    {}", simd::detect())),
+        "compress did not report the auto-detected path:\n{stdout_auto}"
+    );
+    let bytes_scalar = std::fs::read(&out_scalar).unwrap();
+    let bytes_auto = std::fs::read(&out_auto).unwrap();
+    assert_eq!(
+        bytes_scalar, bytes_auto,
+        "`.mrc` bytes depend on the SIMD path — the shared-randomness or \
+         selection contract is broken"
+    );
+    let _ = std::fs::remove_file(&out_scalar);
+    let _ = std::fs::remove_file(&out_auto);
+}
+
+#[test]
+fn golden_fixture_decodes_identically_under_scalar_and_auto() {
+    let fixture =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/tiny_v2.mrc");
+    let run = |simd_val: &str| {
+        let output = miracle_bin()
+            .env("MIRACLE_SIMD", simd_val)
+            .args(["eval", "--mrc", fixture, "--test-size", "256"])
+            .output()
+            .expect("spawn miracle eval");
+        assert!(
+            output.status.success(),
+            "eval failed under MIRACLE_SIMD={simd_val}: {}",
+            String::from_utf8_lossy(&output.stderr)
+        );
+        String::from_utf8_lossy(&output.stdout).into_owned()
+    };
+    let scalar = run("scalar");
+    let auto = run("auto");
+    assert_eq!(
+        scalar, auto,
+        "decoding the golden fixture differs between SIMD paths"
+    );
+    assert!(scalar.contains("test error"), "unexpected output: {scalar}");
+}
+
+#[test]
+fn invalid_miracle_simd_is_a_hard_error() {
+    let out = tmp_path("invalid");
+    let output = miracle_bin()
+        .env("MIRACLE_SIMD", "turbo")
+        .args([
+            "compress", "--model", "tiny_mlp", "--i0", "0", "--i", "0",
+            "--c-loc-bits", "3", "--train-size", "8", "--test-size", "8",
+            "--out",
+        ])
+        .arg(&out)
+        .output()
+        .expect("spawn miracle compress");
+    assert!(
+        !output.status.success(),
+        "MIRACLE_SIMD=turbo must fail loudly, not fall back"
+    );
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        stderr.contains("MIRACLE_SIMD") && stderr.contains("turbo"),
+        "error does not name the bad value: {stderr}"
+    );
+    assert!(!out.exists(), "no output may be written on a config error");
+}
+
+// ---- sampling edge cases ----------------------------------------------
+
+#[test]
+fn log_sum_exp_edge_cases() {
+    // empty: no elements, the max fold is -inf and that is the answer
+    assert_eq!(log_sum_exp(&[]), f64::NEG_INFINITY);
+    // single element: lse == the element
+    assert!((log_sum_exp(&[1.25]) - 1.25).abs() < 1e-12);
+    // all -inf: still -inf (no NaN from inf - inf)
+    assert_eq!(
+        log_sum_exp(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+        f64::NEG_INFINITY
+    );
+    // NaN alongside finite values must propagate, not be silently dropped
+    assert!(log_sum_exp(&[1.0, f32::NAN]).is_nan());
+    // +inf dominates
+    assert_eq!(log_sum_exp(&[0.0, f32::INFINITY]), f64::INFINITY);
+}
+
+#[test]
+fn softmax_in_place_edge_cases() {
+    // empty: no-op, normalizer -inf
+    let mut xs: Vec<f32> = vec![];
+    assert_eq!(softmax_in_place(&mut xs), f64::NEG_INFINITY);
+    // single element: probability exactly 1
+    let mut xs = vec![-3.5f32];
+    let lse = softmax_in_place(&mut xs);
+    assert_eq!(xs, vec![1.0]);
+    assert!((lse + 3.5).abs() < 1e-6);
+    // NaN input propagates into the normalizer and the outputs
+    let mut xs = vec![0.0f32, f32::NAN];
+    assert!(softmax_in_place(&mut xs).is_nan());
+    assert!(xs.iter().all(|v| v.is_nan()));
+    // uniform logits stay uniform and sum to 1
+    let mut xs = vec![2.0f32; 8];
+    softmax_in_place(&mut xs);
+    for &v in &xs {
+        assert!((v - 0.125).abs() < 1e-6);
+    }
+}
