@@ -27,7 +27,7 @@ use miracle::coordinator::{encoder, MiracleCfg, Session};
 use miracle::data;
 use miracle::prng::Pcg64;
 use miracle::runtime::{self, Runtime};
-use miracle::server::{spawn_clients, Server, ServerCfg};
+use miracle::server::{spawn_clients, Server, ServerCfg, ShedPolicy};
 use miracle::util::json::Json;
 use miracle::util::pool;
 use miracle::util::simd::{self, SimdPath};
@@ -391,6 +391,39 @@ fn bench_server(rt: &Runtime, opts: &Opts) -> Result<Json> {
             ("p99_ms", Json::num(stats.latency.p99 * 1e3)),
         ]));
     }
+
+    // bounded-admission row: same closed-loop load against a shallow queue,
+    // so the shed path (admission check + Overloaded answer) is on the
+    // clock too — resilience must not cost serve-path throughput
+    let clients = *client_counts.last().unwrap();
+    let cfg = ServerCfg {
+        queue_depth: 8,
+        shed: ShedPolicy::Reject,
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg)?;
+    let (rx, join) = spawn_clients(
+        examples,
+        clients,
+        total_requests / clients,
+        std::time::Duration::ZERO,
+    );
+    let stats = server.run(rx)?;
+    let _ = join.join();
+    let answered_per_s =
+        (stats.served + stats.rejected) as f64 / stats.wall_secs;
+    println!(
+        "   {clients:>2} clients (queue 8): {answered_per_s:>7.0} answers/s   {} served / {} shed   high-water {}",
+        stats.served, stats.rejected, stats.queue_high_water,
+    );
+    rows.push(Json::obj(vec![
+        ("clients", Json::num(clients as f64)),
+        ("queue_depth", Json::num(8.0)),
+        ("answers_per_s", Json::num(answered_per_s)),
+        ("served", Json::num(stats.served as f64)),
+        ("shed", Json::num(stats.rejected as f64)),
+        ("queue_high_water", Json::num(stats.queue_high_water as f64)),
+    ]));
     Ok(Json::Arr(rows))
 }
 

@@ -23,8 +23,14 @@ use miracle::coordinator::{self, Checkpoint, MiracleCfg, NonFinitePolicy, RunOpt
 use miracle::data;
 use miracle::metrics::fmt_size;
 use miracle::runtime::{self, Runtime};
-use miracle::server::{spawn_clients, Server, ServerCfg};
+use miracle::server::{
+    spawn_clients, spawn_mtime_watcher, ReloadRequest, Request, Response, Server,
+    ServerCfg, ServerFaults, ServeError, ShedPolicy,
+};
 use miracle::util::args::Args;
+use miracle::util::breaker::BreakerCfg;
+use miracle::util::faultline::ChaosSchedule;
+use miracle::util::retry::RetryPolicy;
 use miracle::util::{faultline, simd, Error, Result};
 
 fn main() {
@@ -56,6 +62,8 @@ fn run() -> Result<()> {
         "pareto" => cmd_pareto(&args),
         // hidden: deterministic corruption fuzzing of the decode path (CI)
         "fuzz-decode" => cmd_fuzz_decode(&args),
+        // hidden: deterministic chaos drive of the serve loop (CI)
+        "chaos-serve" => cmd_chaos_serve(&args),
         other => {
             eprintln!("unknown command '{other}' (compress|eval|info|serve|pareto)");
             std::process::exit(2);
@@ -346,6 +354,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let per_client = args.usize("requests", 32)?;
     let max_batch = args.usize("max-batch", 64)?;
     let deadline_ms = args.u64("deadline-ms", 30_000)?;
+    let queue_depth = args.usize("queue-depth", 1024)?;
+    let shed: ShedPolicy = args.str("shed", "reject").parse()?;
+    let reload_watch = args.opt_str("reload-watch").map(str::to_string);
     let lazy = args.flag("lazy");
     let _threads =
         miracle::util::pool::override_threads(args.usize("threads", 0)?);
@@ -362,17 +373,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch,
         lazy_decode: lazy,
         deadline: std::time::Duration::from_millis(deadline_ms),
+        queue_depth,
+        shed,
         ..Default::default()
     };
     let mut server = Server::new(&arts, &mrc, cfg)?;
+    if let Some(watch) = reload_watch {
+        let (reload_rx, _watcher) = spawn_mtime_watcher(
+            std::path::PathBuf::from(&watch),
+            std::time::Duration::from_millis(200),
+        );
+        server.set_reload(reload_rx);
+        println!("watching {watch} for hot reloads");
+    }
     let (rx, clients) =
         spawn_clients(examples, n_clients, per_client, std::time::Duration::ZERO);
     let stats = server.run(rx)?;
     let _ = clients.join();
     println!(
-        "served:      {} requests in {} batches ({} rejected)",
-        stats.served, stats.batches, stats.rejected
+        "accepted:    {} requests ({} served in {} batches, {} shed, {} errored)",
+        stats.accepted, stats.served, stats.batches, stats.rejected, stats.errored
     );
+    println!(
+        "sheds:       {} overloaded, {} deadline, {} bad-request \
+         (queue high-water {} / depth {})",
+        stats.sheds.overloaded,
+        stats.sheds.deadline,
+        stats.sheds.bad_request,
+        stats.queue_high_water,
+        queue_depth
+    );
+    println!(
+        "errors:      {} decode, {} exec, {} breaker-open \
+         ({} retries absorbed, {} breaker trips)",
+        stats.errors.decode,
+        stats.errors.exec,
+        stats.errors.breaker,
+        stats.retries,
+        stats.breaker_trips
+    );
+    if stats.reloads + stats.reloads_rejected > 0 {
+        println!(
+            "reloads:     {} applied, {} rejected (last-known-good kept)",
+            stats.reloads, stats.reloads_rejected
+        );
+    }
     println!(
         "throughput:  {:.0} req/s",
         stats.served as f64 / stats.wall_secs
@@ -385,7 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("exec/batch:  {:.2}ms mean", stats.exec_time.mean * 1e3);
     println!("decode time: {:.2}s", stats.decode_secs);
-    Ok(())
+    stats.check_invariant()
 }
 
 /// Hidden subcommand (CI): deterministic corruption fuzzing of the `.mrc`
@@ -517,6 +562,297 @@ fn fuzz_ckpt(seed: u64, iters: usize, base_path: Option<String>) -> Result<()> {
          (0 silent diffs tolerated)",
         iters + crash
     );
+    Ok(())
+}
+
+/// Hidden subcommand (CI): deterministic chaos drive of the serve loop.
+/// One process, four phases against a live server: (1) a pre-queued
+/// overload burst that must shed exactly down to the bounded queue;
+/// (2) steady traffic through intermittent, seed-scheduled exec faults and
+/// latency spikes (absorbed by retries); (3) a hard outage window that must
+/// trip the circuit breaker, fast-fail with `BreakerOpen`, then recover via
+/// HalfOpen probes once the outage window passes; (4) reload under fire — a
+/// corrupt container push that must be rejected (last-known-good keeps
+/// serving) followed by a valid push that must swap in. Any violated
+/// expectation exits 1; everything reproduces from `--seed` alone.
+fn cmd_chaos_serve(args: &Args) -> Result<()> {
+    use std::sync::mpsc::channel;
+    use std::time::{Duration, Instant};
+
+    let seed = args.u64("seed", 7)?;
+    let iters = args.usize("iters", 200)?;
+    let mrc_path = args.opt_str("mrc").map(str::to_string);
+    args.finish()?;
+
+    let mrc = match mrc_path {
+        Some(p) => load_mrc(&p)?,
+        None => synth_fuzz_mrc(),
+    };
+    let rt = Runtime::cpu()?;
+    let arts = runtime::load(&rt, &mrc.model)?;
+    let (_, test) = datasets_for(&mrc.model, 1, 64, 99);
+    let feat = test.feature_dim();
+    let example: Vec<f32> = test.x[..feat].to_vec();
+
+    // Chaos geometry. Ticks advance once per executed batch: the burst is
+    // tick 0, the steady phase is ticks 1..=iters, so the outage window
+    // lands exactly where phase 3's driver starts hammering.
+    const DEPTH: usize = 4;
+    const BURST: usize = 20;
+    let outage_start = 1 + iters as u64;
+    let cfg = ServerCfg {
+        max_batch: DEPTH,
+        queue_depth: DEPTH,
+        shed: ShedPolicy::Reject,
+        deadline: Duration::from_secs(5),
+        reload_poll: Duration::from_millis(5),
+        retry: RetryPolicy::default(),
+        breaker: BreakerCfg {
+            window: 8,
+            min_samples: 4,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(40),
+            probes: 2,
+        },
+        faults: ServerFaults {
+            schedule: ChaosSchedule {
+                seed,
+                exec_fail_p: 0.10,
+                outage: Some((outage_start, outage_start + 8)),
+                spike_p: 0.05,
+                spike: Duration::from_millis(2),
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg)?;
+    let (reload_tx, reload_rx) = channel::<ReloadRequest>();
+    server.set_reload(reload_rx);
+
+    // Reload candidates: the first plan fault that breaks the container's
+    // integrity check (rejected push), and a valid container whose indices
+    // genuinely differ (applied push).
+    let good_bytes = mrc.to_bytes();
+    let corrupt_bytes = faultline::plan(seed, 64, good_bytes.len())
+        .into_iter()
+        .map(|f| f.apply(&good_bytes))
+        .find(|m| MrcFile::from_bytes(m).is_err())
+        .ok_or_else(|| Error::msg("no rejecting fault in 64 tries"))?;
+    let swapped_bytes = {
+        let mut next = mrc.clone();
+        let k = 1u64 << next.c_loc_bits;
+        next.indices[0] = (next.indices[0] + 1) % k;
+        next.to_bytes()
+    };
+
+    // phase 1: the burst is fully enqueued BEFORE the loop starts, so
+    // admission is deterministic: DEPTH admitted, BURST - DEPTH shed.
+    let (tx, rx) = channel::<Request>();
+    let mut burst_rx = Vec::new();
+    for _ in 0..BURST {
+        let (rtx, rrx) = channel();
+        tx.send(Request {
+            x: example.clone(),
+            submitted: Instant::now(),
+            reply: rtx,
+        })
+        .map_err(|_| Error::msg("burst send failed"))?;
+        burst_rx.push(rrx);
+    }
+
+    struct DriverReport {
+        sent: usize,
+        ok: usize,
+        lost: usize,
+        burst_answers: usize,
+        breaker_open_seen: bool,
+        recovered: bool,
+        reload_survived: bool,
+    }
+
+    // phases 2-4 run on a driver thread; the backend handle (not Send) and
+    // therefore the serve loop stay on this thread
+    let driver = {
+        let tx = tx.clone();
+        std::thread::spawn(move || -> DriverReport {
+            let send_one = |x: &Vec<f32>| -> Option<Response> {
+                let (rtx, rrx) = channel();
+                tx.send(Request {
+                    x: x.clone(),
+                    submitted: Instant::now(),
+                    reply: rtx,
+                })
+                .ok()?;
+                rrx.recv_timeout(Duration::from_secs(10)).ok()
+            };
+            let mut rep = DriverReport {
+                sent: 0,
+                ok: 0,
+                lost: 0,
+                burst_answers: 0,
+                breaker_open_seen: false,
+                recovered: false,
+                reload_survived: false,
+            };
+            // wait the burst out first: phase 2 must not race requests into
+            // the burst batch's shed window, or the shed count would wobble
+            rep.burst_answers = burst_rx
+                .iter()
+                .filter(|r| r.recv_timeout(Duration::from_secs(10)).is_ok())
+                .count();
+            fn tally(rep: &mut DriverReport, r: Option<Response>) -> bool {
+                rep.sent += 1;
+                match r {
+                    Some(resp) => {
+                        let ok = resp.is_ok();
+                        if ok {
+                            rep.ok += 1;
+                        }
+                        ok
+                    }
+                    None => {
+                        rep.lost += 1;
+                        false
+                    }
+                }
+            }
+            // phase 2: steady traffic through intermittent chaos
+            for _ in 0..iters {
+                tally(&mut rep, send_one(&example));
+            }
+            // phase 3: hammer into the outage until the breaker has both
+            // tripped (BreakerOpen observed) and recovered (5 straight Ok)
+            let mut consecutive_ok = 0usize;
+            for _ in 0..2000 {
+                if rep.breaker_open_seen && consecutive_ok >= 5 {
+                    break;
+                }
+                let resp = send_one(&example);
+                if let Some(Response::Err(ServeError::BreakerOpen {
+                    retry_after,
+                })) = &resp
+                {
+                    rep.breaker_open_seen = true;
+                    // honor the hint instead of spinning on fast-fails
+                    let wait = *retry_after + Duration::from_millis(1);
+                    rep.sent += 1;
+                    consecutive_ok = 0;
+                    std::thread::sleep(wait);
+                    continue;
+                }
+                if tally(&mut rep, resp) {
+                    consecutive_ok += 1;
+                } else {
+                    consecutive_ok = 0;
+                }
+            }
+            rep.recovered = rep.breaker_open_seen && consecutive_ok >= 5;
+            // phase 4: reload under fire — corrupt push must be rejected
+            // (serving continues), valid push must swap in
+            let _ = reload_tx.send(ReloadRequest {
+                bytes: corrupt_bytes,
+                origin: "chaos:corrupt".into(),
+            });
+            std::thread::sleep(Duration::from_millis(50));
+            let mut after_corrupt = 0usize;
+            for _ in 0..3 {
+                if tally(&mut rep, send_one(&example)) {
+                    after_corrupt += 1;
+                }
+            }
+            let _ = reload_tx.send(ReloadRequest {
+                bytes: swapped_bytes,
+                origin: "chaos:swap".into(),
+            });
+            std::thread::sleep(Duration::from_millis(50));
+            let mut after_swap = 0usize;
+            for _ in 0..5 {
+                if tally(&mut rep, send_one(&example)) {
+                    after_swap += 1;
+                }
+            }
+            rep.reload_survived = after_corrupt >= 2 && after_swap >= 4;
+            rep
+        })
+    };
+    drop(tx);
+    let stats = server.run(rx)?;
+    let report = driver
+        .join()
+        .map_err(|_| Error::msg("chaos driver thread panicked"))?;
+
+    let mut violations: Vec<String> = Vec::new();
+    if let Err(e) = stats.check_invariant() {
+        violations.push(format!("stats invariant: {e}"));
+    }
+    let total_sent = BURST + report.sent;
+    if stats.accepted != total_sent {
+        violations.push(format!(
+            "accepted {} != sent {total_sent} (a request vanished)",
+            stats.accepted
+        ));
+    }
+    if report.burst_answers != BURST {
+        violations.push(format!(
+            "burst: {}/{BURST} answered (replies lost)",
+            report.burst_answers
+        ));
+    }
+    if report.lost > 0 {
+        violations.push(format!("{} driver requests got no reply", report.lost));
+    }
+    if stats.sheds.overloaded != BURST - DEPTH {
+        violations.push(format!(
+            "expected exactly {} overload sheds from the burst, saw {}",
+            BURST - DEPTH,
+            stats.sheds.overloaded
+        ));
+    }
+    if stats.breaker_trips == 0 || !report.breaker_open_seen {
+        violations.push(format!(
+            "breaker never tripped (trips {}, open seen {})",
+            stats.breaker_trips, report.breaker_open_seen
+        ));
+    }
+    if !report.recovered {
+        violations.push("breaker never recovered to 5 straight Ok".into());
+    }
+    if stats.reloads != 1 || stats.reloads_rejected != 1 {
+        violations.push(format!(
+            "reloads: {} applied / {} rejected (want 1 / 1)",
+            stats.reloads, stats.reloads_rejected
+        ));
+    }
+    if !report.reload_survived {
+        violations.push("requests around the reloads failed".into());
+    }
+
+    println!(
+        "chaos-serve seed {seed}: {} accepted -> {} served / {} shed \
+         ({} overloaded) / {} errored ({} exec, {} breaker-open); \
+         {} retries, {} breaker trips, reloads {}+{} rejected, \
+         queue high-water {}",
+        stats.accepted,
+        stats.served,
+        stats.rejected,
+        stats.sheds.overloaded,
+        stats.errored,
+        stats.errors.exec,
+        stats.errors.breaker,
+        stats.retries,
+        stats.breaker_trips,
+        stats.reloads,
+        stats.reloads_rejected,
+        stats.queue_high_water
+    );
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("CHAOS VIOLATION: {v}");
+        }
+        std::process::exit(1);
+    }
+    println!("chaos-serve: all resilience expectations held");
     Ok(())
 }
 

@@ -231,7 +231,51 @@ impl Pcg64 {
     /// but full pairs skip the `ln`/`sin_cos` calls entirely, which is what
     /// makes single-candidate decode cheap (see `decode_block` in
     /// `runtime/native.rs`).
+    ///
+    /// The uniforms are consumed in batches through [`Pcg64::fill_u64s`]
+    /// (the dispatched SIMD bulk kernel), so a skip is one LCG sweep rather
+    /// than per-draw `next_u64` calls. The Box–Muller rejection test on the
+    /// 53-bit uniform `to_unit(u) <= f64::MIN_POSITIVE` is equivalent to
+    /// the pure-integer `(u >> 11) == 0` (a non-zero 53-bit mantissa yields
+    /// at least 2⁻⁵³ ≫ `MIN_POSITIVE`), so skipping never touches float
+    /// math at all for full pairs. Each batch is sized at the *minimum*
+    /// draws the remaining pairs must consume — rejections simply trigger
+    /// another batch — so the generator can never advance past what
+    /// sequential draws would use.
     pub fn skip_normals(&mut self, mut n: usize) {
+        if n > 0 && self.spare_normal.take().is_some() {
+            n -= 1;
+        }
+        const BUF: usize = 256;
+        let mut buf = [0u64; BUF];
+        // an accepted u1 whose u2 missed the last batch
+        let mut have_u1 = false;
+        while n >= 2 {
+            // 2 draws per remaining full pair, minus the carried u1
+            let need = 2 * (n / 2) - usize::from(have_u1);
+            let take = need.min(BUF);
+            let batch = &mut buf[..take];
+            self.fill_u64s(batch);
+            for &u in batch.iter() {
+                if !have_u1 {
+                    // rejection iff the 53-bit uniform is exactly zero
+                    have_u1 = (u >> 11) != 0;
+                } else {
+                    have_u1 = false;
+                    n -= 2;
+                }
+            }
+        }
+        if n == 1 {
+            let _ = self.next_normal();
+        }
+    }
+
+    /// Sequential reference for [`Pcg64::skip_normals`] — one uniform at a
+    /// time, exactly as the pre-bulk implementation drew them. Kept only to
+    /// pin the bulk path bit-for-bit.
+    #[cfg(test)]
+    fn skip_normals_seq(&mut self, mut n: usize) {
         if n > 0 && self.spare_normal.take().is_some() {
             n -= 1;
         }
@@ -419,6 +463,41 @@ mod tests {
                     b.next_normal();
                 }
                 // the next draws must agree bit for bit
+                for _ in 0..4 {
+                    assert_eq!(
+                        a.next_normal().to_bits(),
+                        b.next_normal().to_bits(),
+                        "pre={pre} skip={skip}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_skip_is_bit_identical_to_sequential_skip() {
+        // exercise batch boundaries (BUF=256 draws), odd tails, live spares,
+        // and multi-batch skips
+        for pre in 0..3usize {
+            for skip in [0usize, 1, 2, 3, 7, 64, 129, 255, 256, 257, 513, 1000] {
+                let mut a = Pcg64::seed(0xB01D ^ skip as u64);
+                let mut b = a.clone();
+                for _ in 0..pre {
+                    a.next_normal();
+                    b.next_normal();
+                }
+                a.skip_normals(skip);
+                b.skip_normals_seq(skip);
+                assert_eq!(
+                    a.raw_state(),
+                    b.raw_state(),
+                    "generator state diverged: pre={pre} skip={skip}"
+                );
+                assert_eq!(
+                    a.spare_normal.map(f64::to_bits),
+                    b.spare_normal.map(f64::to_bits),
+                    "spare diverged: pre={pre} skip={skip}"
+                );
                 for _ in 0..4 {
                     assert_eq!(
                         a.next_normal().to_bits(),

@@ -11,15 +11,39 @@
 //! their own threads and talk to the server loop over an mpsc channel
 //! (router + dynamic batcher pattern).
 //!
+//! Resilience model (`docs/serving.md` has the full picture):
+//!
+//! - **Admission control** — the unbounded transport channel is drained
+//!   eagerly into a *bounded* pending queue ([`ServerCfg::queue_depth`]).
+//!   Overflow is shed explicitly per [`ShedPolicy`]: `Reject` bounces the
+//!   arriving request, `Oldest` evicts the head (freshest-wins). Every shed
+//!   is answered with [`ServeError::Overloaded`] and counted.
+//! - **Retry** — lazy decode and batched exec are wrapped in
+//!   [`retry_with`] (exponential backoff, seeded jitter, budget-capped), so
+//!   a transient backend hiccup costs milliseconds, not a failed batch.
+//! - **Circuit breaker** — repeated decode/exec failures trip a
+//!   [`Breaker`]; while Open the loop degrades to fast
+//!   [`ServeError::BreakerOpen`] answers instead of burning a retry budget
+//!   per batch, then HalfOpen probes restore service.
+//! - **Hot reload** — a [`ReloadRequest`] channel (fed directly or by
+//!   [`spawn_mtime_watcher`]) delivers candidate `.mrc` bytes; they go
+//!   through the full MRC2 CRC parse + geometry validation + complete
+//!   decode *before* the atomic swap, so a corrupt push can never take down
+//!   serving — the last-known-good model keeps answering.
+//!
 //! Degradation model: the serve loop never dies because of one bad input.
-//! Malformed requests, per-request deadline overruns, lazy-decode failures
-//! and backend execution errors are all reported to the *affected* clients
-//! as structured [`Response::Err`] values while the loop keeps serving
-//! everyone else. The only way `run` returns is the request channel
-//! closing (or a startup-time invariant failing before any request is
-//! taken). [`ServerFaults`] injects decode/execution faults for tests.
+//! Malformed requests, overload sheds, deadline overruns, decode failures,
+//! backend errors and breaker fast-fails are all reported to the *affected*
+//! clients as structured [`Response::Err`] values while the loop keeps
+//! serving everyone else; every admitted request receives exactly one
+//! `Response` ([`ServeStats::check_invariant`] pins the accounting). The
+//! only way `run` returns is the request channel closing (or a startup-time
+//! invariant failing before any request is taken). [`ServerFaults`] injects
+//! decode/exec faults and deterministic chaos schedules for tests.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use crate::codec::MrcFile;
@@ -27,9 +51,12 @@ use crate::coordinator::encoder::decode_single_block;
 use crate::model::Layout;
 use crate::runtime::{DeviceBuf, Input, ModelArtifacts};
 use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::util::breaker::{Breaker, BreakerCfg};
+use crate::util::faultline::ChaosSchedule;
+use crate::util::retry::{retry_with, RetryPolicy};
 use crate::util::stats::{summarize, Summary};
 use crate::util::Result;
-use crate::{err, info};
+use crate::{ensure, err, info};
 
 /// One inference request: a flattened input example.
 pub struct Request {
@@ -76,27 +103,40 @@ pub struct Prediction {
 }
 
 /// Structured per-request failure. The variant tells the client whether the
-/// fault was theirs (`BadRequest`), load-induced (`DeadlineExceeded`) or
-/// server-side (`DecodeFailed`, `ExecFailed` — retryable once the operator
-/// replaces the corrupt container / unwedges the backend).
+/// fault was theirs (`BadRequest`), load-induced (`Overloaded`,
+/// `DeadlineExceeded` — back off and resend) or server-side (`DecodeFailed`,
+/// `ExecFailed`, `BreakerOpen` — retryable once the operator replaces the
+/// corrupt container / unwedges the backend / the breaker cools down).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// The request itself is malformed (wrong feature dimension).
     BadRequest(String),
+    /// The bounded admission queue was full; this request (or, under
+    /// [`ShedPolicy::Oldest`], the queue head it displaced) was shed.
+    Overloaded { depth: usize },
     /// The request waited longer than [`ServerCfg::deadline`] before its
     /// batch was admitted; it was shed rather than served stale.
     DeadlineExceeded { waited: Duration, deadline: Duration },
     /// Lazily decoding the `.mrc` failed (corrupt container, injected
-    /// fault). The loop stays alive and later requests retry the decode.
+    /// fault) even after retries. The loop stays alive and later requests
+    /// retry the decode.
     DecodeFailed(String),
-    /// The backend rejected or failed the batched forward pass.
+    /// The backend rejected or failed the batched forward pass even after
+    /// retries.
     ExecFailed(String),
+    /// The circuit breaker is Open after repeated backend failures; the
+    /// request was failed fast instead of queuing behind a broken backend.
+    /// `retry_after` is the remaining cooldown.
+    BreakerOpen { retry_after: Duration },
 }
 
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::Overloaded { depth } => {
+                write!(f, "overloaded: admission queue full ({depth} deep)")
+            }
             ServeError::DeadlineExceeded { waited, deadline } => write!(
                 f,
                 "deadline exceeded: waited {:.1}ms against a {:.1}ms budget",
@@ -105,22 +145,58 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::DecodeFailed(m) => write!(f, "model decode failed: {m}"),
             ServeError::ExecFailed(m) => write!(f, "execution failed: {m}"),
+            ServeError::BreakerOpen { retry_after } => write!(
+                f,
+                "circuit breaker open: retry after {:.0}ms",
+                retry_after.as_secs_f64() * 1e3
+            ),
+        }
+    }
+}
+
+/// What to shed when the bounded admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Bounce the arriving request (protects queued work; default).
+    #[default]
+    Reject,
+    /// Evict the queue head to admit the arrival (freshest-wins — the
+    /// oldest request is the most likely to miss its deadline anyway).
+    Oldest,
+}
+
+impl std::str::FromStr for ShedPolicy {
+    type Err = crate::util::Error;
+
+    fn from_str(s: &str) -> Result<ShedPolicy> {
+        match s {
+            "reject" => Ok(ShedPolicy::Reject),
+            "oldest" => Ok(ShedPolicy::Oldest),
+            other => err!("unknown shed policy '{other}' (reject|oldest)"),
         }
     }
 }
 
 /// Test-only fault injection, threaded through [`ServerCfg`]. Defaults are
 /// inert; production paths never set them. Compiled unconditionally so the
-/// corruption/robustness suites and `miracle fuzz-decode` exercise the
-/// exact shipping code paths rather than a cfg(test) twin.
+/// corruption/robustness suites, `rust/tests/server_resilience.rs` and
+/// `miracle chaos-serve` exercise the exact shipping code paths rather than
+/// a cfg(test) twin.
 #[derive(Debug, Clone, Default)]
 pub struct ServerFaults {
     /// Fail this many upcoming block decodes with an injected error before
     /// behaving normally again (simulates a transiently corrupt container).
+    /// Consumed per *attempt*, so the retry layer is exercised too.
     pub fail_decodes: usize,
+    /// Fail this many upcoming batched exec attempts (consumed per attempt,
+    /// like `fail_decodes`).
+    pub fail_execs: usize,
     /// Sleep this long before every batched execution (simulates a slow or
     /// overloaded backend so deadline shedding can be observed).
     pub exec_delay: Duration,
+    /// Deterministic time-based chaos (intermittent exec failures, outage
+    /// windows, latency spikes), keyed by batch tick.
+    pub schedule: ChaosSchedule,
 }
 
 /// Server tuning knobs.
@@ -137,6 +213,17 @@ pub struct ServerCfg {
     /// long is answered with [`ServeError::DeadlineExceeded`] instead of
     /// being served stale (load shedding)
     pub deadline: Duration,
+    /// bounded pending-queue depth; overflow is shed per [`ShedPolicy`]
+    pub queue_depth: usize,
+    /// what to shed when the queue is full
+    pub shed: ShedPolicy,
+    /// backoff for transient decode/exec failures
+    pub retry: RetryPolicy,
+    /// circuit-breaker thresholds for repeated decode/exec failures
+    pub breaker: BreakerCfg,
+    /// how often the loop checks the reload channel while idle (only
+    /// matters once a reload channel is attached)
+    pub reload_poll: Duration,
     /// fault injection hooks (inert by default)
     pub faults: ServerFaults,
 }
@@ -148,48 +235,194 @@ impl Default for ServerCfg {
             batch_window: Duration::from_millis(2),
             lazy_decode: false,
             deadline: Duration::from_secs(30),
+            queue_depth: 1024,
+            shed: ShedPolicy::Reject,
+            retry: RetryPolicy::default(),
+            breaker: BreakerCfg::default(),
+            reload_poll: Duration::from_millis(20),
             faults: ServerFaults::default(),
         }
     }
 }
 
+/// Shed counters, by reason. Sheds are *admission-side* refusals: the
+/// request was never handed to the backend.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShedReasons {
+    /// bounced by the bounded queue ([`ServeError::Overloaded`])
+    pub overloaded: usize,
+    /// exceeded [`ServerCfg::deadline`] while queued
+    pub deadline: usize,
+    /// malformed ([`ServeError::BadRequest`])
+    pub bad_request: usize,
+}
+
+impl ShedReasons {
+    pub fn total(&self) -> usize {
+        self.overloaded + self.deadline + self.bad_request
+    }
+}
+
+/// Error counters, by reason. Errors are *execution-side* failures: the
+/// request was admitted but the serving machinery failed it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ErrorReasons {
+    /// lazy decode failed after retries ([`ServeError::DecodeFailed`])
+    pub decode: usize,
+    /// backend exec failed after retries ([`ServeError::ExecFailed`])
+    pub exec: usize,
+    /// failed fast while the breaker was Open ([`ServeError::BreakerOpen`])
+    pub breaker: usize,
+}
+
+impl ErrorReasons {
+    pub fn total(&self) -> usize {
+        self.decode + self.exec + self.breaker
+    }
+}
+
 /// Aggregate serving statistics.
+///
+/// Accounting invariant (see [`ServeStats::check_invariant`]):
+/// `accepted == served + rejected + errored` — every request pulled off the
+/// transport channel gets exactly one terminal outcome.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
+    /// requests pulled off the transport channel
+    pub accepted: usize,
+    /// requests answered with a prediction
     pub served: usize,
     pub batches: usize,
-    /// requests answered with a structured error (deadline, bad request,
-    /// decode/exec failure) instead of a prediction
+    /// admission-side sheds (`== sheds.total()`)
     pub rejected: usize,
+    /// execution-side failures (`== errors.total()`)
+    pub errored: usize,
+    pub sheds: ShedReasons,
+    pub errors: ErrorReasons,
+    /// deepest the bounded pending queue ever got
+    pub queue_high_water: usize,
+    /// transient decode/exec failures absorbed by backoff
+    pub retries: u64,
+    /// times the circuit breaker tripped Open
+    pub breaker_trips: u64,
+    /// hot reloads applied (model swapped)
+    pub reloads: usize,
+    /// hot reloads refused (kept last-known-good)
+    pub reloads_rejected: usize,
     pub latency: Summary,
     pub exec_time: Summary,
     pub decode_secs: f64,
     pub wall_secs: f64,
 }
 
-/// The server: owns decoded weights + the artifact handle.
+impl ServeStats {
+    /// Every admitted request must have exactly one terminal outcome, and
+    /// the coarse counters must agree with their per-reason breakdowns.
+    pub fn check_invariant(&self) -> Result<()> {
+        ensure!(
+            self.rejected == self.sheds.total(),
+            "stats invariant: rejected {} != shed reasons {:?}",
+            self.rejected,
+            self.sheds
+        );
+        ensure!(
+            self.errored == self.errors.total(),
+            "stats invariant: errored {} != error reasons {:?}",
+            self.errored,
+            self.errors
+        );
+        ensure!(
+            self.accepted == self.served + self.rejected + self.errored,
+            "stats invariant: accepted {} != served {} + rejected {} + errored {}",
+            self.accepted,
+            self.served,
+            self.rejected,
+            self.errored
+        );
+        Ok(())
+    }
+}
+
+/// A candidate model push: raw container bytes plus a provenance string for
+/// logs. Bytes (not a parsed struct) on purpose — the serve loop itself runs
+/// the full MRC2 CRC parse, so a corrupt push is caught by the same
+/// integrity layer as a corrupt file on disk.
+pub struct ReloadRequest {
+    pub bytes: Vec<u8>,
+    pub origin: String,
+}
+
+/// Internal per-run tally; folded into [`ServeStats`] at loop exit.
+#[derive(Default)]
+struct Tally {
+    accepted: usize,
+    served: usize,
+    batches: usize,
+    sheds: ShedReasons,
+    errors: ErrorReasons,
+    queue_high_water: usize,
+    retries: u64,
+    reloads: usize,
+    reloads_rejected: usize,
+}
+
+/// Bounded admission: count the arrival, shed per policy if the queue is
+/// full, then enqueue. Every shed gets an [`ServeError::Overloaded`] answer.
+fn admit(
+    r: Request,
+    queue: &mut VecDeque<Request>,
+    depth: usize,
+    shed: ShedPolicy,
+    tally: &mut Tally,
+) {
+    tally.accepted += 1;
+    if queue.len() >= depth {
+        let err = Response::Err(ServeError::Overloaded { depth });
+        match shed {
+            ShedPolicy::Reject => {
+                let _ = r.reply.send(err);
+                tally.sheds.overloaded += 1;
+                return;
+            }
+            ShedPolicy::Oldest => {
+                if let Some(old) = queue.pop_front() {
+                    let _ = old.reply.send(err);
+                    tally.sheds.overloaded += 1;
+                }
+            }
+        }
+    }
+    queue.push_back(r);
+    tally.queue_high_water = tally.queue_high_water.max(queue.len());
+}
+
+/// The server: owns the container, decoded weights + the artifact handle.
 pub struct Server<'a> {
     arts: &'a ModelArtifacts,
-    mrc: &'a MrcFile,
+    /// Owned (cloned at construction) so a hot reload can atomically swap
+    /// it without caller coordination.
+    mrc: MrcFile,
     layout: Layout,
     w_blocks: Vec<f32>,
     decoded: Vec<bool>,
     cfg: ServerCfg,
+    reload_rx: Option<Receiver<ReloadRequest>>,
     pub decode_secs: f64,
 }
 
 impl<'a> Server<'a> {
-    pub fn new(arts: &'a ModelArtifacts, mrc: &'a MrcFile, cfg: ServerCfg) -> Result<Server<'a>> {
+    pub fn new(arts: &'a ModelArtifacts, mrc: &MrcFile, cfg: ServerCfg) -> Result<Server<'a>> {
         mrc.validate_for(&arts.meta, arts.backend_family())?;
         let meta = &arts.meta;
         let layout = Layout::generate(meta, mrc.layout_seed);
         let mut server = Server {
             arts,
-            mrc,
+            mrc: mrc.clone(),
             layout,
             w_blocks: vec![0.0; meta.b * meta.s],
             decoded: vec![false; meta.b],
             cfg,
+            reload_rx: None,
             decode_secs: 0.0,
         };
         if !server.cfg.lazy_decode {
@@ -202,6 +435,13 @@ impl<'a> Server<'a> {
             );
         }
         Ok(server)
+    }
+
+    /// Attach the hot-reload channel. Candidate containers sent here are
+    /// CRC-parsed, validated and fully decoded before the atomic swap; any
+    /// failure keeps the last-known-good model serving.
+    pub fn set_reload(&mut self, rx: Receiver<ReloadRequest>) {
+        self.reload_rx = Some(rx);
     }
 
     fn decode_all(&mut self) -> Result<()> {
@@ -222,7 +462,7 @@ impl<'a> Server<'a> {
             return err!("injected decode fault at block {b}");
         }
         let t = crate::util::Timer::start();
-        let row = decode_single_block(self.arts, self.mrc, &self.layout, b)?;
+        let row = decode_single_block(self.arts, &self.mrc, &self.layout, b)?;
         let s = self.arts.meta.s;
         self.w_blocks[b * s..(b + 1) * s].copy_from_slice(&row);
         self.decoded[b] = true;
@@ -234,31 +474,78 @@ impl<'a> Server<'a> {
         self.decoded.iter().filter(|&&d| d).count()
     }
 
-    /// Upload decoded weights + assemble map once; reused for every batch
-    /// (no per-request clone or re-validation of ~B*S + n_total values).
-    fn upload_model(&self) -> Result<(DeviceBuf, DeviceBuf)> {
+    /// Upload weights + assemble map once; reused for every batch (no
+    /// per-request clone or re-validation of ~B*S + n_total values).
+    fn upload_weights(
+        &self,
+        w_blocks: &[f32],
+        amap: &[i32],
+    ) -> Result<(DeviceBuf, DeviceBuf)> {
         let meta = &self.arts.meta;
         let w_buf = self.arts.upload(&Arg::F32(TensorF32::new(
             vec![meta.b, meta.s],
-            self.w_blocks.clone(),
+            w_blocks.to_vec(),
         )?))?;
         let amap_buf = self.arts.upload(&Arg::I32(TensorI32::new(
             vec![meta.n_total],
-            self.layout.assemble_map.clone(),
+            amap.to_vec(),
         )?))?;
         Ok((w_buf, amap_buf))
     }
 
+    fn upload_model(&self) -> Result<(DeviceBuf, DeviceBuf)> {
+        self.upload_weights(&self.w_blocks, &self.layout.assemble_map)
+    }
+
+    /// Validate + decode + upload a pushed container, then swap it in.
+    /// Everything fallible happens *before* any state is touched, so an
+    /// error leaves the last-known-good model fully intact.
+    fn apply_reload(&mut self, req: &ReloadRequest) -> Result<(DeviceBuf, DeviceBuf)> {
+        let mrc = MrcFile::from_bytes(&req.bytes)
+            .map_err(|e| crate::util::Error::msg(format!("parse: {e}")))?;
+        mrc.validate_for(&self.arts.meta, self.arts.backend_family())?;
+        let meta = &self.arts.meta;
+        let layout = Layout::generate(meta, mrc.layout_seed);
+        let t = crate::util::Timer::start();
+        let mut w = vec![0.0f32; meta.b * meta.s];
+        for b in 0..meta.b {
+            let row = decode_single_block(self.arts, &mrc, &layout, b)
+                .map_err(|e| e.context(format!("decode block {b}")))?;
+            w[b * meta.s..(b + 1) * meta.s].copy_from_slice(&row);
+        }
+        let bufs = self.upload_weights(&w, &layout.assemble_map)?;
+        self.mrc = mrc;
+        self.layout = layout;
+        self.w_blocks = w;
+        self.decoded = vec![true; meta.b];
+        self.decode_secs += t.secs();
+        Ok(bufs)
+    }
+
     /// Run the serve loop until the request channel closes. Returns stats.
     ///
-    /// Per-request failures (deadline, malformed input, lazy-decode or
-    /// backend errors) are answered with [`Response::Err`] and counted in
-    /// [`ServeStats::rejected`]; they never terminate the loop.
+    /// Per-request failures (overload, deadline, malformed input, decode,
+    /// backend or breaker errors) are answered with [`Response::Err`] and
+    /// counted; they never terminate the loop.
     pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
-        let meta = &self.arts.meta;
+        let arts = self.arts;
+        let meta = &arts.meta;
         let feat: usize = meta.input_shape.iter().product();
         let eb = meta.eval_batch;
         let max_batch = self.cfg.max_batch.min(eb).max(1);
+        let depth = self.cfg.queue_depth.max(1);
+        let shed = self.cfg.shed;
+        let retry = self.cfg.retry.clone();
+        let schedule = self.cfg.faults.schedule.clone();
+        let chaos = schedule.is_active();
+        let exec_delay = self.cfg.faults.exec_delay;
+        let mut fail_execs = self.cfg.faults.fail_execs;
+        let mut breaker = Breaker::new(self.cfg.breaker.clone());
+        let reload_rx = self.reload_rx.take();
+        let reload_poll = self.cfg.reload_poll.max(Duration::from_millis(1));
+        let deadline_cfg = self.cfg.deadline;
+        let batch_window = self.cfg.batch_window;
+
         // eager path decoded at construction; lazy path decodes inside the
         // loop so a corrupt block degrades to per-request errors
         let mut bufs: Option<(DeviceBuf, DeviceBuf)> =
@@ -271,48 +558,82 @@ impl<'a> Server<'a> {
         let wall = Instant::now();
         let mut latencies = Vec::new();
         let mut exec_times = Vec::new();
-        let mut served = 0usize;
-        let mut batches = 0usize;
-        let mut rejected = 0usize;
-        let mut pending: Vec<Request> = Vec::new();
-        loop {
+        let mut tally = Tally::default();
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        // batch tick: advances once per batch that passes the breaker gate;
+        // the chaos schedule is keyed by it, never by wall time
+        let mut tick: u64 = 0;
+        'serve: loop {
+            // apply pushed models before admitting more work
+            if let Some(rrx) = &reload_rx {
+                while let Ok(req) = rrx.try_recv() {
+                    match self.apply_reload(&req) {
+                        Ok(nb) => {
+                            bufs = Some(nb);
+                            tally.reloads += 1;
+                            info!("hot reload applied ({})", req.origin);
+                        }
+                        Err(e) => {
+                            tally.reloads_rejected += 1;
+                            info!(
+                                "hot reload REJECTED ({}): {e}; keeping last-known-good",
+                                req.origin
+                            );
+                        }
+                    }
+                }
+            }
             // block for the first request of a batch
-            if pending.is_empty() {
-                match rx.recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => break, // all senders dropped
+            if queue.is_empty() {
+                if reload_rx.is_some() {
+                    match rx.recv_timeout(reload_poll) {
+                        Ok(r) => admit(r, &mut queue, depth, shed, &mut tally),
+                        Err(RecvTimeoutError::Timeout) => continue 'serve,
+                        Err(RecvTimeoutError::Disconnected) => break 'serve,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(r) => admit(r, &mut queue, depth, shed, &mut tally),
+                        Err(_) => break 'serve, // all senders dropped
+                    }
                 }
             }
             // gather more within the window up to max_batch
-            let deadline = Instant::now() + self.cfg.batch_window;
-            while pending.len() < max_batch {
+            let gather_deadline = Instant::now() + batch_window;
+            while queue.len() < max_batch {
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= gather_deadline {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
+                match rx.recv_timeout(gather_deadline - now) {
+                    Ok(r) => admit(r, &mut queue, depth, shed, &mut tally),
                     Err(_) => break,
                 }
             }
-            // admission triage: shed stale requests, bounce malformed ones
+            // drain whatever else already arrived so queue pressure is
+            // observed (and shed) now, not hidden in the unbounded channel
+            while let Ok(r) = rx.try_recv() {
+                admit(r, &mut queue, depth, shed, &mut tally);
+            }
+            // triage the batch: shed stale requests, bounce malformed ones
             let now = Instant::now();
-            let mut batch: Vec<Request> = Vec::with_capacity(pending.len());
-            for r in pending.drain(..) {
+            let take = queue.len().min(max_batch);
+            let mut batch: Vec<Request> = Vec::with_capacity(take);
+            for r in queue.drain(..take) {
                 let waited = now.saturating_duration_since(r.submitted);
-                if waited > self.cfg.deadline {
+                if waited > deadline_cfg {
                     let _ = r.reply.send(Response::Err(
                         ServeError::DeadlineExceeded {
                             waited,
-                            deadline: self.cfg.deadline,
+                            deadline: deadline_cfg,
                         },
                     ));
-                    rejected += 1;
+                    tally.sheds.deadline += 1;
                 } else if r.x.len() != feat {
                     let _ = r.reply.send(Response::Err(ServeError::BadRequest(
                         format!("feature dim {} != {feat}", r.x.len()),
                     )));
-                    rejected += 1;
+                    tally.sheds.bad_request += 1;
                 } else {
                     batch.push(r);
                 }
@@ -320,14 +641,39 @@ impl<'a> Server<'a> {
             if batch.is_empty() {
                 continue;
             }
-            // lazy decode + one-time upload, degrading to per-request
-            // errors on failure (the next batch retries)
+            // breaker gate: while Open, fail fast instead of stalling
+            let gate_now = Instant::now();
+            if !breaker.allow(gate_now) {
+                let err = ServeError::BreakerOpen {
+                    retry_after: breaker.retry_after(gate_now).unwrap_or_default(),
+                };
+                tally.errors.breaker += batch.len();
+                for r in batch.drain(..) {
+                    let _ = r.reply.send(Response::Err(err.clone()));
+                }
+                continue;
+            }
+            let cur_tick = tick;
+            tick += 1;
+            // lazy decode + one-time upload under retry, degrading to
+            // per-request errors on exhaustion (the next batch retries)
             if bufs.is_none() {
-                match self.decode_all().and_then(|_| self.upload_model()) {
+                let (res, retries) = retry_with(
+                    &retry,
+                    0xDEC0_DE00 ^ cur_tick,
+                    std::thread::sleep,
+                    |_| {
+                        self.decode_all()?;
+                        self.upload_model()
+                    },
+                );
+                tally.retries += retries as u64;
+                match res {
                     Ok(b) => bufs = Some(b),
                     Err(e) => {
+                        breaker.record(Instant::now(), false);
                         let err = ServeError::DecodeFailed(e.to_string());
-                        rejected += batch.len();
+                        tally.errors.decode += batch.len();
                         for r in batch.drain(..) {
                             let _ = r.reply.send(Response::Err(err.clone()));
                         }
@@ -337,11 +683,16 @@ impl<'a> Server<'a> {
             }
             let (w_buf, amap_buf) =
                 bufs.as_ref().expect("uploaded above when absent");
-            // fault hook: simulate a slow backend
-            if !self.cfg.faults.exec_delay.is_zero() {
-                std::thread::sleep(self.cfg.faults.exec_delay);
+            // fault hooks: slow backend + scheduled latency spike
+            if !exec_delay.is_zero() {
+                std::thread::sleep(exec_delay);
             }
-            // assemble the padded batch
+            if chaos {
+                if let Some(spike) = schedule.latency(cur_tick) {
+                    std::thread::sleep(spike);
+                }
+            }
+            // assemble the padded batch once; retries reuse it
             let n = batch.len();
             let mut xb = vec![0f32; eb * feat];
             for (i, r) in batch.iter().enumerate() {
@@ -349,11 +700,38 @@ impl<'a> Server<'a> {
             }
             let mut shape = vec![eb];
             shape.extend_from_slice(&meta.input_shape);
+            let x_arg = match TensorF32::new(shape, xb).map(Arg::F32) {
+                Ok(a) => a,
+                Err(e) => {
+                    // unreachable by construction (we sized xb ourselves),
+                    // but the loop must degrade rather than die
+                    breaker.record(Instant::now(), false);
+                    let err = ServeError::ExecFailed(e.to_string());
+                    tally.errors.exec += n;
+                    for r in batch.drain(..) {
+                        let _ = r.reply.send(Response::Err(err.clone()));
+                    }
+                    continue;
+                }
+            };
             let t_exec = Instant::now();
-            let exec = TensorF32::new(shape, xb)
-                .map(Arg::F32)
-                .and_then(|x_arg| {
-                    self.arts.invoke_mixed(
+            let (exec, retries) = retry_with(
+                &retry,
+                0xE8EC_0000 ^ cur_tick,
+                std::thread::sleep,
+                |attempt| {
+                    if fail_execs > 0 {
+                        fail_execs -= 1;
+                        return err!(
+                            "injected exec fault (tick {cur_tick}, attempt {attempt})"
+                        );
+                    }
+                    if chaos && schedule.exec_fails(cur_tick, attempt) {
+                        return err!(
+                            "chaos exec fault (tick {cur_tick}, attempt {attempt})"
+                        );
+                    }
+                    arts.invoke_mixed(
                         "eval_batch",
                         &[
                             Input::Dev(w_buf),
@@ -361,12 +739,15 @@ impl<'a> Server<'a> {
                             Input::Host(&x_arg),
                         ],
                     )
-                });
+                },
+            );
+            tally.retries += retries as u64;
             let outs = match exec {
                 Ok(outs) => outs,
                 Err(e) => {
+                    breaker.record(Instant::now(), false);
                     let err = ServeError::ExecFailed(e.to_string());
-                    rejected += n;
+                    tally.errors.exec += n;
                     for r in batch.drain(..) {
                         let _ = r.reply.send(Response::Err(err.clone()));
                     }
@@ -377,14 +758,16 @@ impl<'a> Server<'a> {
             let logits = match outs[0].as_f32() {
                 Ok(l) => l,
                 Err(e) => {
+                    breaker.record(Instant::now(), false);
                     let err = ServeError::ExecFailed(e.to_string());
-                    rejected += n;
+                    tally.errors.exec += n;
                     for r in batch.drain(..) {
                         let _ = r.reply.send(Response::Err(err.clone()));
                     }
                     continue;
                 }
             };
+            breaker.record(Instant::now(), true);
             let done = Instant::now();
             for (i, r) in batch.drain(..).enumerate() {
                 let row = logits.row(i).to_vec();
@@ -397,18 +780,29 @@ impl<'a> Server<'a> {
                     latency,
                 }));
             }
-            served += n;
-            batches += 1;
+            tally.served += n;
+            tally.batches += 1;
         }
-        Ok(ServeStats {
-            served,
-            batches,
-            rejected,
+        let stats = ServeStats {
+            accepted: tally.accepted,
+            served: tally.served,
+            batches: tally.batches,
+            rejected: tally.sheds.total(),
+            errored: tally.errors.total(),
+            sheds: tally.sheds,
+            errors: tally.errors,
+            queue_high_water: tally.queue_high_water,
+            retries: tally.retries,
+            breaker_trips: breaker.trips(),
+            reloads: tally.reloads,
+            reloads_rejected: tally.reloads_rejected,
             latency: summarize(&latencies),
             exec_time: summarize(&exec_times),
             decode_secs: self.decode_secs,
             wall_secs: wall.elapsed().as_secs_f64(),
-        })
+        };
+        stats.check_invariant()?;
+        Ok(stats)
     }
 }
 
@@ -418,6 +812,37 @@ fn argmax(xs: &[f32]) -> usize {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Poll `path`'s mtime every `poll`; on change, read the file and push its
+/// bytes as a [`ReloadRequest`]. The thread exits when the receiver is gone
+/// (detected at the next change) — for a serving process that is process
+/// lifetime, which is the intent of `--reload-watch`.
+pub fn spawn_mtime_watcher(
+    path: PathBuf,
+    poll: Duration,
+) -> (Receiver<ReloadRequest>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = channel::<ReloadRequest>();
+    let handle = std::thread::spawn(move || {
+        let mtime = |p: &PathBuf| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+        let mut last = mtime(&path);
+        loop {
+            std::thread::sleep(poll);
+            let cur = mtime(&path);
+            if cur.is_some() && cur != last {
+                last = cur;
+                // read can race the writer; a torn read fails CRC validation
+                // in the serve loop and is retried at the next mtime change
+                if let Ok(bytes) = std::fs::read(&path) {
+                    let origin = format!("file:{}", path.display());
+                    if tx.send(ReloadRequest { bytes, origin }).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+    });
+    (rx, handle)
 }
 
 /// Client helper: spawn `n_clients` threads each sending `per_client`
@@ -477,8 +902,20 @@ mod tests {
         assert!(!c.lazy_decode);
         assert!(c.batch_window > Duration::ZERO);
         assert!(c.deadline > Duration::ZERO);
+        assert!(c.queue_depth > 0);
+        assert_eq!(c.shed, ShedPolicy::Reject);
+        assert!(c.retry.max_attempts >= 1);
         assert_eq!(c.faults.fail_decodes, 0);
+        assert_eq!(c.faults.fail_execs, 0);
         assert!(c.faults.exec_delay.is_zero());
+        assert!(!c.faults.schedule.is_active());
+    }
+
+    #[test]
+    fn shed_policy_parses() {
+        assert_eq!("reject".parse::<ShedPolicy>().unwrap(), ShedPolicy::Reject);
+        assert_eq!("oldest".parse::<ShedPolicy>().unwrap(), ShedPolicy::Oldest);
+        assert!("newest".parse::<ShedPolicy>().is_err());
     }
 
     #[test]
@@ -498,13 +935,89 @@ mod tests {
     }
 
     #[test]
-    fn serve_error_displays_one_line() {
-        let e = ServeError::DeadlineExceeded {
-            waited: Duration::from_millis(50),
-            deadline: Duration::from_millis(10),
+    fn serve_errors_display_one_line() {
+        let errs = [
+            ServeError::BadRequest("dim".into()),
+            ServeError::Overloaded { depth: 8 },
+            ServeError::DeadlineExceeded {
+                waited: Duration::from_millis(50),
+                deadline: Duration::from_millis(10),
+            },
+            ServeError::DecodeFailed("crc".into()),
+            ServeError::ExecFailed("backend".into()),
+            ServeError::BreakerOpen { retry_after: Duration::from_millis(75) },
+        ];
+        for e in errs {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+            assert!(!msg.contains('\n'), "{msg}");
+        }
+    }
+
+    fn req(reply: Sender<Response>) -> Request {
+        Request { x: vec![0.0; 4], submitted: Instant::now(), reply }
+    }
+
+    #[test]
+    fn admission_reject_sheds_the_arrival() {
+        let mut queue = VecDeque::new();
+        let mut tally = Tally::default();
+        let (tx, rx) = channel();
+        for _ in 0..3 {
+            admit(req(tx.clone()), &mut queue, 2, ShedPolicy::Reject, &mut tally);
+        }
+        assert_eq!(tally.accepted, 3);
+        assert_eq!(queue.len(), 2);
+        assert_eq!(tally.sheds.overloaded, 1);
+        assert_eq!(tally.queue_high_water, 2);
+        // the shed one already has its answer
+        let resp = rx.try_recv().unwrap();
+        assert!(matches!(resp.error(), Some(ServeError::Overloaded { depth: 2 })));
+    }
+
+    #[test]
+    fn admission_oldest_evicts_the_head() {
+        let mut queue = VecDeque::new();
+        let mut tally = Tally::default();
+        let (old_tx, old_rx) = channel();
+        let (new_tx, new_rx) = channel();
+        admit(req(old_tx), &mut queue, 1, ShedPolicy::Oldest, &mut tally);
+        admit(req(new_tx), &mut queue, 1, ShedPolicy::Oldest, &mut tally);
+        assert_eq!(queue.len(), 1, "newest kept");
+        assert_eq!(tally.sheds.overloaded, 1);
+        assert!(matches!(
+            old_rx.try_recv().unwrap().error(),
+            Some(ServeError::Overloaded { .. })
+        ), "head was evicted and answered");
+        assert!(new_rx.try_recv().is_err(), "arrival still queued");
+    }
+
+    #[test]
+    fn stats_invariant_checks() {
+        let ok = ServeStats {
+            accepted: 10,
+            served: 6,
+            batches: 2,
+            rejected: 3,
+            errored: 1,
+            sheds: ShedReasons { overloaded: 1, deadline: 1, bad_request: 1 },
+            errors: ErrorReasons { decode: 0, exec: 1, breaker: 0 },
+            queue_high_water: 4,
+            retries: 0,
+            breaker_trips: 0,
+            reloads: 0,
+            reloads_rejected: 0,
+            latency: summarize(&[]),
+            exec_time: summarize(&[]),
+            decode_secs: 0.0,
+            wall_secs: 0.0,
         };
-        let msg = e.to_string();
-        assert!(msg.contains("deadline"), "{msg}");
-        assert!(!msg.contains('\n'));
+        ok.check_invariant().unwrap();
+        let mut bad = ok.clone();
+        bad.served = 7;
+        assert!(bad.check_invariant().is_err());
+        let mut bad2 = ok;
+        bad2.rejected = 2;
+        assert!(bad2.check_invariant().is_err());
     }
 }

@@ -1,0 +1,323 @@
+//! Circuit breaker for the serve loop's backend calls.
+//!
+//! Classic three-state machine. **Closed**: calls flow; outcomes feed a
+//! rolling window and the breaker trips to Open when the failure ratio over
+//! at least `min_samples` recent calls reaches `trip_ratio`. **Open**: calls
+//! are refused instantly (the server degrades to a fast per-request error
+//! instead of burning a retry budget per request) until `cooldown` elapses.
+//! **HalfOpen**: up to `probes` trial calls are admitted; any failure
+//! re-trips to Open with a fresh cooldown, while `probes` consecutive
+//! successes close the breaker and clear the window.
+//!
+//! Time is always passed in as an [`Instant`] parameter — the breaker never
+//! reads the clock itself — so unit tests and the chaos harness drive the
+//! state machine with synthetic offsets instead of real sleeping.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Breaker state, observable for stats/diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// Normal operation; outcomes are being windowed.
+    Closed,
+    /// Tripped: all calls refused until the cooldown deadline.
+    Open,
+    /// Cooldown elapsed: admitting a limited number of probe calls.
+    HalfOpen,
+}
+
+/// Trip/recovery thresholds.
+#[derive(Debug, Clone)]
+pub struct BreakerCfg {
+    /// Rolling window length (outcomes remembered while Closed).
+    pub window: usize,
+    /// Minimum outcomes in the window before the ratio can trip.
+    pub min_samples: usize,
+    /// Failure ratio in `[0, 1]` that trips the breaker.
+    pub trip_ratio: f64,
+    /// How long Open refuses calls before moving to HalfOpen.
+    pub cooldown: Duration,
+    /// Consecutive probe successes required in HalfOpen to close.
+    pub probes: u32,
+}
+
+impl Default for BreakerCfg {
+    fn default() -> BreakerCfg {
+        BreakerCfg {
+            window: 16,
+            min_samples: 4,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(100),
+            probes: 2,
+        }
+    }
+}
+
+/// The state machine. Drive it with [`Breaker::allow`] before each guarded
+/// call and [`Breaker::record`] after.
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    cfg: BreakerCfg,
+    state: State,
+    window: VecDeque<bool>,
+    opened_at: Option<Instant>,
+    probe_successes: u32,
+    probes_in_flight: u32,
+    trips: u64,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerCfg) -> Breaker {
+        Breaker {
+            cfg,
+            state: State::Closed,
+            window: VecDeque::new(),
+            opened_at: None,
+            probe_successes: 0,
+            probes_in_flight: 0,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> State {
+        self.state
+    }
+
+    /// Times the breaker has transitioned into Open (including re-trips
+    /// from failed HalfOpen probes).
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Remaining cooldown if a call at `now` would be refused.
+    pub fn retry_after(&self, now: Instant) -> Option<Duration> {
+        match (self.state, self.opened_at) {
+            (State::Open, Some(at)) => {
+                let deadline = at + self.cfg.cooldown;
+                (now < deadline).then(|| deadline - now)
+            }
+            _ => None,
+        }
+    }
+
+    /// Should a call at `now` be attempted? Open flips to HalfOpen once the
+    /// cooldown has elapsed; HalfOpen admits at most `probes` in-flight
+    /// trial calls.
+    pub fn allow(&mut self, now: Instant) -> bool {
+        match self.state {
+            State::Closed => true,
+            State::Open => {
+                let elapsed = self
+                    .opened_at
+                    .map(|at| now.duration_since(at) >= self.cfg.cooldown)
+                    .unwrap_or(true);
+                if elapsed {
+                    self.state = State::HalfOpen;
+                    self.probe_successes = 0;
+                    self.probes_in_flight = 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            State::HalfOpen => {
+                if self.probes_in_flight < self.cfg.probes.max(1) {
+                    self.probes_in_flight += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Feed the outcome of a call that `allow` admitted.
+    pub fn record(&mut self, now: Instant, ok: bool) {
+        match self.state {
+            State::Closed => {
+                self.window.push_back(ok);
+                while self.window.len() > self.cfg.window.max(1) {
+                    self.window.pop_front();
+                }
+                if self.should_trip() {
+                    self.trip(now);
+                }
+            }
+            State::HalfOpen => {
+                self.probes_in_flight = self.probes_in_flight.saturating_sub(1);
+                if ok {
+                    self.probe_successes += 1;
+                    if self.probe_successes >= self.cfg.probes.max(1) {
+                        self.close();
+                    }
+                } else {
+                    self.trip(now);
+                }
+            }
+            // A straggler finishing after a concurrent trip: the window was
+            // already judged, so the late outcome is dropped.
+            State::Open => {}
+        }
+    }
+
+    fn should_trip(&self) -> bool {
+        let n = self.window.len();
+        if n < self.cfg.min_samples.max(1) {
+            return false;
+        }
+        let failures = self.window.iter().filter(|ok| !**ok).count();
+        failures as f64 / n as f64 >= self.cfg.trip_ratio
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = State::Open;
+        self.opened_at = Some(now);
+        self.window.clear();
+        self.probe_successes = 0;
+        self.probes_in_flight = 0;
+        self.trips += 1;
+    }
+
+    fn close(&mut self) {
+        self.state = State::Closed;
+        self.opened_at = None;
+        self.window.clear();
+        self.probe_successes = 0;
+        self.probes_in_flight = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerCfg {
+        BreakerCfg {
+            window: 8,
+            min_samples: 4,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(100),
+            probes: 2,
+        }
+    }
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn stays_closed_under_min_samples() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for _ in 0..3 {
+            assert!(b.allow(t0));
+            b.record(t0, false);
+        }
+        assert_eq!(b.state(), State::Closed, "3 < min_samples, no trip yet");
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn trips_at_failure_ratio_and_refuses_during_cooldown() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for i in 0..4 {
+            assert!(b.allow(t0));
+            b.record(t0, i % 2 == 0); // 2 ok, 2 fail => ratio 0.5
+        }
+        assert_eq!(b.state(), State::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow(t0 + ms(50)), "mid-cooldown calls refused");
+        let after = b.retry_after(t0 + ms(50)).unwrap();
+        assert_eq!(after, ms(50));
+    }
+
+    #[test]
+    fn mostly_ok_traffic_never_trips() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for i in 0..100 {
+            assert!(b.allow(t0));
+            b.record(t0, i % 4 != 0); // 25% failures < trip_ratio 0.5
+        }
+        assert_eq!(b.state(), State::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn half_open_probe_successes_close_the_breaker() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for _ in 0..4 {
+            b.allow(t0);
+            b.record(t0, false);
+        }
+        assert_eq!(b.state(), State::Open);
+
+        let t1 = t0 + ms(100); // cooldown elapsed
+        assert!(b.allow(t1), "first probe admitted");
+        assert_eq!(b.state(), State::HalfOpen);
+        assert!(b.allow(t1), "second probe admitted (probes = 2)");
+        assert!(!b.allow(t1), "third concurrent probe refused");
+        b.record(t1, true);
+        assert_eq!(b.state(), State::HalfOpen, "one success is not enough");
+        assert!(b.allow(t1), "slot freed by the recorded probe");
+        b.record(t1, true);
+        assert_eq!(b.state(), State::Closed, "probe quota met, closed");
+        assert_eq!(b.trips(), 1);
+        assert!(b.allow(t1 + ms(1)));
+    }
+
+    #[test]
+    fn half_open_probe_failure_retrips_with_fresh_cooldown() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for _ in 0..4 {
+            b.allow(t0);
+            b.record(t0, false);
+        }
+        let t1 = t0 + ms(100);
+        assert!(b.allow(t1));
+        b.record(t1, false); // probe fails
+        assert_eq!(b.state(), State::Open);
+        assert_eq!(b.trips(), 2);
+        assert!(!b.allow(t1 + ms(99)), "cooldown restarted at t1");
+        assert!(b.allow(t1 + ms(100)), "fresh cooldown elapses from t1");
+    }
+
+    #[test]
+    fn window_is_cleared_after_recovery() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for _ in 0..4 {
+            b.allow(t0);
+            b.record(t0, false);
+        }
+        let t1 = t0 + ms(100);
+        b.allow(t1);
+        b.record(t1, true);
+        b.allow(t1);
+        b.record(t1, true);
+        assert_eq!(b.state(), State::Closed);
+        // One failure right after recovery must not trip (window restarted).
+        b.allow(t1);
+        b.record(t1, false);
+        assert_eq!(b.state(), State::Closed);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn late_outcome_while_open_is_ignored() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(cfg());
+        for _ in 0..4 {
+            b.allow(t0);
+            b.record(t0, false);
+        }
+        assert_eq!(b.state(), State::Open);
+        b.record(t0, true); // straggler from before the trip
+        assert_eq!(b.state(), State::Open);
+        assert_eq!(b.trips(), 1);
+    }
+}

@@ -12,6 +12,8 @@
 //! Faults are never identity transforms: every [`Fault`] produced by
 //! [`sample`] yields bytes that differ from the input.
 
+use std::time::Duration;
+
 use crate::prng::Pcg64;
 
 /// One mutation of a byte buffer.
@@ -121,6 +123,72 @@ pub fn crash_plan(seed: u64, len: usize) -> Vec<Fault> {
     out
 }
 
+/// Time-based fault schedule for the serve loop, keyed by **batch tick**
+/// (the index of the executed batch), not wall time — so a given
+/// `(schedule, tick)` pair always produces the same fault regardless of
+/// machine speed, and `miracle chaos-serve --seed N` reproduces exactly.
+///
+/// Three independent seed-derived streams (distinct salts, so adding one
+/// knob never shifts another's decisions):
+/// - *intermittent exec failures*: each tick fails with probability
+///   `exec_fail_p`;
+/// - *hard outage*: every exec in the half-open tick window
+///   `[outage.0, outage.1)` fails — this is what drives the circuit breaker
+///   to trip, and its end is what lets HalfOpen probes recover;
+/// - *latency spikes*: each tick stalls the executor by `spike` with
+///   probability `spike_p` (drives deadline sheds under load).
+///
+/// [`sample`]'s byte-stable stream is deliberately untouched.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    /// Per-tick probability in `[0, 1]` of an injected exec failure.
+    pub exec_fail_p: f64,
+    /// Half-open tick window `[start, end)` of guaranteed exec failures.
+    pub outage: Option<(u64, u64)>,
+    /// Per-tick probability in `[0, 1]` of a latency spike.
+    pub spike_p: f64,
+    /// Stall applied when a spike fires.
+    pub spike: Duration,
+}
+
+impl ChaosSchedule {
+    fn coin(&self, salt: u64, tick: u64, sub: u64, p: f64) -> bool {
+        p > 0.0
+            && Pcg64::seed(self.seed)
+                .fold_in(salt)
+                .fold_in(tick)
+                .fold_in(sub)
+                .next_f64()
+                < p
+    }
+
+    /// Does the exec call at `tick`, retry `attempt`, fail? Inside the
+    /// outage window every attempt fails (defeating retries — this is what
+    /// trips the breaker); intermittent failures are an independent coin per
+    /// `(tick, attempt)` so a retry genuinely re-rolls, the way a transient
+    /// backend hiccup would.
+    pub fn exec_fails(&self, tick: u64, attempt: u32) -> bool {
+        if let Some((start, end)) = self.outage {
+            if tick >= start && tick < end {
+                return true;
+            }
+        }
+        self.coin(0xE4EC, tick, attempt as u64, self.exec_fail_p)
+    }
+
+    /// Latency spike to apply before executing `tick`, if any.
+    pub fn latency(&self, tick: u64) -> Option<Duration> {
+        self.coin(0x57A1, tick, 0, self.spike_p).then_some(self.spike)
+    }
+
+    /// Does the schedule inject anything at all? Lets the serve loop skip
+    /// chaos bookkeeping entirely when unconfigured.
+    pub fn is_active(&self) -> bool {
+        self.exec_fail_p > 0.0 || self.outage.is_some() || self.spike_p > 0.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +244,72 @@ mod tests {
                 Fault::TornWrite { len, .. } => assert_eq!(len, cut),
                 ref f => panic!("expected TornWrite, got {}", f.describe()),
             }
+        }
+    }
+
+    #[test]
+    fn chaos_schedule_is_deterministic_per_seed_and_tick() {
+        let s = ChaosSchedule {
+            seed: 7,
+            exec_fail_p: 0.3,
+            outage: None,
+            spike_p: 0.2,
+            spike: Duration::from_millis(5),
+        };
+        for tick in 0..200 {
+            assert_eq!(s.exec_fails(tick, 0), s.exec_fails(tick, 0));
+            assert_eq!(s.latency(tick), s.latency(tick));
+        }
+        let fails: Vec<u64> = (0..200).filter(|&t| s.exec_fails(t, 0)).collect();
+        assert!(!fails.is_empty(), "p=0.3 over 200 ticks must fire");
+        assert!(fails.len() < 150, "p=0.3 must not fire nearly always");
+        let other = ChaosSchedule { seed: 8, ..s.clone() };
+        let fails2: Vec<u64> =
+            (0..200).filter(|&t| other.exec_fails(t, 0)).collect();
+        assert_ne!(fails, fails2, "different seeds differ");
+        // a retry re-rolls: attempt is part of the key
+        let per_attempt: Vec<bool> = (0..4).map(|a| s.exec_fails(0, a)).collect();
+        let again: Vec<bool> = (0..4).map(|a| s.exec_fails(0, a)).collect();
+        assert_eq!(per_attempt, again);
+    }
+
+    #[test]
+    fn outage_window_is_total_and_half_open() {
+        let s = ChaosSchedule {
+            seed: 1,
+            outage: Some((10, 20)),
+            ..ChaosSchedule::default()
+        };
+        for t in 10..20 {
+            for a in 0..3 {
+                assert!(s.exec_fails(t, a), "tick {t} attempt {a} in outage");
+            }
+        }
+        assert!(!s.exec_fails(9, 0));
+        assert!(!s.exec_fails(20, 0), "end is exclusive");
+    }
+
+    #[test]
+    fn fail_and_spike_streams_are_independent() {
+        let s = ChaosSchedule {
+            seed: 3,
+            exec_fail_p: 0.5,
+            spike_p: 0.5,
+            spike: Duration::from_millis(1),
+            ..ChaosSchedule::default()
+        };
+        let fails: Vec<bool> = (0..256).map(|t| s.exec_fails(t, 0)).collect();
+        let spikes: Vec<bool> = (0..256).map(|t| s.latency(t).is_some()).collect();
+        assert_ne!(fails, spikes, "distinct salts => distinct streams");
+    }
+
+    #[test]
+    fn default_schedule_is_inert() {
+        let s = ChaosSchedule::default();
+        assert!(!s.is_active());
+        for t in 0..64 {
+            assert!(!s.exec_fails(t, 0));
+            assert!(s.latency(t).is_none());
         }
     }
 

@@ -1,14 +1,17 @@
 //! Shared utilities: error type, CLI args, JSON, stats, logging,
 //! prop-testing, the scoped-thread worker pool ([`pool`]), the SIMD
-//! dispatch policy ([`simd`]), CRC-32 ([`crc32`]) and the deterministic
-//! fault-injection harness ([`faultline`]).
+//! dispatch policy ([`simd`]), CRC-32 ([`crc32`]), the deterministic
+//! fault-injection harness ([`faultline`]) and the serving resilience
+//! primitives ([`retry`], [`breaker`]).
 
 pub mod args;
+pub mod breaker;
 pub mod crc32;
 pub mod faultline;
 pub mod json;
 pub mod pool;
 pub mod quickprop;
+pub mod retry;
 pub mod simd;
 pub mod stats;
 

@@ -1,0 +1,301 @@
+//! Retry with exponential backoff, deterministic seeded jitter and a hard
+//! sleep budget.
+//!
+//! The serve loop wraps its backend calls (batched `eval_batch`, lazy block
+//! decode) in [`retry_with`] so a *transient* fault — a worker hiccup, an
+//! injected chaos failure — costs a few milliseconds instead of a failed
+//! request, while a *persistent* fault still surfaces quickly: attempts are
+//! capped and the total time spent sleeping can never exceed
+//! [`RetryPolicy::budget`], so retries cannot stall the loop into missing
+//! every other request's deadline.
+//!
+//! Jitter is drawn from a seeded [`Pcg64`] stream, not the wall clock: the
+//! same `(policy, seed)` always produces the same delay sequence, which is
+//! what lets `rust/tests/server_resilience.rs` and `miracle chaos-serve`
+//! reproduce a failure from the seed alone.
+
+use std::time::Duration;
+
+use crate::prng::Pcg64;
+use crate::util::Result;
+
+/// Backoff shape shared by every retried operation.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first; `1` disables retries.
+    pub max_attempts: u32,
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Multiplier applied per retry (exponential growth).
+    pub factor: f64,
+    /// Cap on any single delay.
+    pub max_delay: Duration,
+    /// Hard cap on the *total* time slept across all retries of one
+    /// operation. Exhausting it ends retrying even if attempts remain.
+    pub budget: Duration,
+    /// Jitter fraction in `[0, 1]`: each delay is scaled by
+    /// `1 - jitter * u` with `u ~ U[0, 1)` from the seeded stream. `0.0`
+    /// makes the schedule exactly the exponential sequence.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(2),
+            factor: 2.0,
+            max_delay: Duration::from_millis(50),
+            budget: Duration::from_millis(200),
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (single attempt, zero sleeping).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base: Duration::ZERO,
+            factor: 1.0,
+            max_delay: Duration::ZERO,
+            budget: Duration::ZERO,
+            jitter: 0.0,
+        }
+    }
+}
+
+/// Backoff state for one logical operation: hands out the delay before each
+/// retry until attempts or the sleep budget run out.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    policy: RetryPolicy,
+    rng: Pcg64,
+    retries: u32,
+    slept: Duration,
+}
+
+impl Backoff {
+    /// A fresh schedule. The same `(policy, seed)` yields the same delays.
+    pub fn new(policy: &RetryPolicy, seed: u64) -> Backoff {
+        Backoff {
+            policy: policy.clone(),
+            rng: Pcg64::seed(seed ^ 0x5E7B_ACC0_FF5E_7B0F),
+            retries: 0,
+            slept: Duration::ZERO,
+        }
+    }
+
+    /// Retries handed out so far (== attempts beyond the first).
+    pub fn retries(&self) -> u32 {
+        self.retries
+    }
+
+    /// The delay to sleep before the next retry, or `None` once attempts or
+    /// the sleep budget are exhausted. The returned delay is already clamped
+    /// into the remaining budget.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.retries + 1 >= self.policy.max_attempts.max(1) {
+            return None;
+        }
+        let remaining = self.policy.budget.checked_sub(self.slept)?;
+        if remaining.is_zero() {
+            return None;
+        }
+        let exp = self.policy.base.as_secs_f64()
+            * self.policy.factor.powi(self.retries as i32);
+        let capped = exp.min(self.policy.max_delay.as_secs_f64()).max(0.0);
+        let scale = (1.0 - self.policy.jitter * self.rng.next_f64()).max(0.0);
+        let delay = Duration::from_secs_f64(capped * scale).min(remaining);
+        self.slept += delay;
+        self.retries += 1;
+        Some(delay)
+    }
+
+    /// Drain the whole schedule (test/diagnostic helper).
+    pub fn schedule(mut self) -> Vec<Duration> {
+        let mut out = Vec::new();
+        while let Some(d) = self.next_delay() {
+            out.push(d);
+        }
+        out
+    }
+}
+
+/// Run `op` under `policy`, sleeping through the injected `sleep` hook
+/// between attempts. Returns the final result plus the number of retries
+/// performed (0 = first attempt succeeded or retries were disabled).
+///
+/// `op` receives the 0-based attempt number. The `sleep` hook exists so the
+/// serve loop owns its own blocking and unit tests can record the schedule
+/// instead of actually waiting.
+pub fn retry_with<T, F, S>(
+    policy: &RetryPolicy,
+    seed: u64,
+    mut sleep: S,
+    mut op: F,
+) -> (Result<T>, u32)
+where
+    F: FnMut(u32) -> Result<T>,
+    S: FnMut(Duration),
+{
+    let mut backoff = Backoff::new(policy, seed);
+    loop {
+        let attempt = backoff.retries();
+        match op(attempt) {
+            Ok(v) => return (Ok(v), backoff.retries()),
+            Err(e) => match backoff.next_delay() {
+                Some(d) => sleep(d),
+                None => return (Err(e), backoff.retries()),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::err;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max_delay: Duration::from_millis(500),
+            budget: Duration::from_secs(5),
+            jitter: 0.5,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = Backoff::new(&policy(), 42).schedule();
+        let b = Backoff::new(&policy(), 42).schedule();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4, "max_attempts 5 => 4 retries");
+        let c = Backoff::new(&policy(), 43).schedule();
+        assert_ne!(a, c, "different seeds must jitter differently");
+    }
+
+    #[test]
+    fn zero_jitter_is_the_exact_exponential_sequence() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        let s = Backoff::new(&p, 7).schedule();
+        assert_eq!(
+            s,
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(40),
+                Duration::from_millis(80),
+            ]
+        );
+    }
+
+    #[test]
+    fn jitter_only_shrinks_delays() {
+        let jittered = Backoff::new(&policy(), 11).schedule();
+        let mut p = policy();
+        p.jitter = 0.0;
+        let exact = Backoff::new(&p, 11).schedule();
+        for (j, e) in jittered.iter().zip(&exact) {
+            assert!(j <= e, "jitter must never exceed the base delay");
+            assert!(*j >= Duration::from_millis(5), "jitter 0.5 halves at most");
+        }
+    }
+
+    #[test]
+    fn max_delay_caps_growth() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        p.max_attempts = 12;
+        p.max_delay = Duration::from_millis(25);
+        p.budget = Duration::from_secs(60);
+        let s = Backoff::new(&p, 1).schedule();
+        assert_eq!(s[0], Duration::from_millis(10));
+        assert_eq!(s[1], Duration::from_millis(20));
+        for d in &s[2..] {
+            assert_eq!(*d, Duration::from_millis(25));
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_stops_retrying() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        p.max_attempts = 100;
+        p.budget = Duration::from_millis(35);
+        let s = Backoff::new(&p, 9).schedule();
+        // 10 + 20 + (clamped 5) = 35ms, then nothing
+        assert_eq!(
+            s,
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(5),
+            ]
+        );
+        let total: Duration = s.iter().sum();
+        assert_eq!(total, p.budget, "total sleep equals the budget exactly");
+    }
+
+    #[test]
+    fn none_policy_never_sleeps() {
+        assert!(Backoff::new(&RetryPolicy::none(), 3).schedule().is_empty());
+    }
+
+    #[test]
+    fn retry_with_recovers_from_transient_failures() {
+        let mut failures_left = 2u32;
+        let mut slept = Vec::new();
+        let (res, retries) = retry_with(
+            &policy(),
+            17,
+            |d| slept.push(d),
+            |attempt| {
+                if failures_left > 0 {
+                    failures_left -= 1;
+                    err!("transient (attempt {attempt})")
+                } else {
+                    Ok(attempt)
+                }
+            },
+        );
+        assert_eq!(res.unwrap(), 2, "succeeded on the third attempt");
+        assert_eq!(retries, 2);
+        assert_eq!(slept.len(), 2);
+    }
+
+    #[test]
+    fn retry_with_gives_up_with_the_last_error() {
+        let (res, retries) = retry_with::<(), _, _>(
+            &policy(),
+            23,
+            |_| {},
+            |attempt| err!("always fails (attempt {attempt})"),
+        );
+        let msg = res.unwrap_err().to_string();
+        assert!(msg.contains("attempt 4"), "last error surfaces: {msg}");
+        assert_eq!(retries, 4);
+    }
+
+    #[test]
+    fn retry_with_none_policy_is_a_single_attempt() {
+        let mut calls = 0u32;
+        let (res, retries) = retry_with::<(), _, _>(
+            &RetryPolicy::none(),
+            0,
+            |_| panic!("must not sleep"),
+            |_| {
+                calls += 1;
+                err!("fails")
+            },
+        );
+        assert!(res.is_err());
+        assert_eq!(calls, 1);
+        assert_eq!(retries, 0);
+    }
+}

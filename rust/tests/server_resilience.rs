@@ -1,0 +1,386 @@
+//! Serve-loop resilience tests: overload shedding (both policies), circuit
+//! breaker trip + HalfOpen recovery, deadline storms, hot reload under
+//! traffic with last-known-good fallback, and completion under a
+//! deterministic chaos schedule. The common thread: the loop never exits
+//! early, every request gets exactly one answer, and
+//! [`ServeStats::check_invariant`] holds on every path.
+
+use miracle::codec::MrcFile;
+use miracle::data;
+use miracle::runtime::{self, Runtime};
+use miracle::server::{
+    ReloadRequest, Request, Response, Server, ServerCfg, ServerFaults,
+    ServeError, ShedPolicy,
+};
+use miracle::util::breaker::BreakerCfg;
+use miracle::util::faultline::ChaosSchedule;
+use miracle::util::retry::RetryPolicy;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+fn test_mrc(arts: &runtime::ModelArtifacts) -> MrcFile {
+    MrcFile {
+        model: "tiny_mlp".into(),
+        layout_seed: 0xABCD,
+        protocol_seed: 7,
+        backend: arts.backend_family(),
+        b: arts.meta.b,
+        s: arts.meta.s,
+        k_chunk: arts.meta.k_chunk,
+        c_loc_bits: 10,
+        lsp: vec![-2.0f32; arts.meta.n_layers],
+        indices: (0..arts.meta.b as u64).map(|i| i % 1024).collect(),
+    }
+}
+
+fn example() -> Vec<f32> {
+    let test = data::synth_protos(4, 16, 4, 11);
+    test.x[..16].to_vec()
+}
+
+fn send_and_wait(
+    tx: &std::sync::mpsc::Sender<Request>,
+    x: Vec<f32>,
+) -> Response {
+    let (rtx, rrx) = channel();
+    tx.send(Request { x, submitted: Instant::now(), reply: rtx })
+        .expect("server gone");
+    rrx.recv_timeout(Duration::from_secs(30)).expect("no answer")
+}
+
+#[test]
+fn overload_reject_sheds_excess_and_answers_everyone() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        max_batch: 2,
+        queue_depth: 2,
+        shed: ShedPolicy::Reject,
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    // the whole burst is queued before the loop starts, so admission is
+    // deterministic: 1 blocking recv + 1 gathered fill the depth-2 queue,
+    // the eager drain sheds the other 10
+    let (tx, rx) = channel::<Request>();
+    let mut replies: Vec<Receiver<Response>> = Vec::new();
+    for _ in 0..12 {
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+            .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+
+    let responses: Vec<Response> = replies
+        .iter()
+        .map(|r| r.recv_timeout(Duration::from_secs(5)).expect("unanswered"))
+        .collect();
+    let ok = responses.iter().filter(|r| r.is_ok()).count();
+    let shed = responses
+        .iter()
+        .filter(|r| {
+            matches!(r.error(), Some(ServeError::Overloaded { depth: 2 }))
+        })
+        .count();
+    assert_eq!(ok, 2, "exactly the bounded queue is served");
+    assert_eq!(shed, 10, "every overflow answered with Overloaded");
+    assert_eq!(stats.accepted, 12);
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.sheds.overloaded, 10);
+    assert_eq!(stats.queue_high_water, 2);
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn overload_oldest_evicts_stale_keeps_freshest() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        max_batch: 2,
+        queue_depth: 2,
+        shed: ShedPolicy::Oldest,
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let mut replies: Vec<Receiver<Response>> = Vec::new();
+    for _ in 0..6 {
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+            .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+
+    // freshest-wins: the last two arrivals survive, the four oldest are
+    // evicted (in order) with Overloaded answers
+    for (i, rrx) in replies.iter().enumerate() {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).expect("unanswered");
+        if i < 4 {
+            assert!(
+                matches!(resp.error(), Some(ServeError::Overloaded { .. })),
+                "old request {i} should be evicted, got {resp:?}"
+            );
+        } else {
+            assert!(resp.is_ok(), "fresh request {i} failed: {resp:?}");
+        }
+    }
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.sheds.overloaded, 4);
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn breaker_trips_after_repeated_exec_failures_and_fails_fast() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        retry: RetryPolicy::none(),
+        breaker: BreakerCfg {
+            window: 4,
+            min_samples: 2,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_secs(10), // never elapses in-test
+            probes: 1,
+        },
+        faults: ServerFaults { fail_execs: 100, ..Default::default() },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        let a = send_and_wait(&tx, example());
+        let b = send_and_wait(&tx, example());
+        let c = send_and_wait(&tx, example());
+        (a, b, c)
+    });
+    let stats = server.run(rx).unwrap();
+    let (a, b, c) = client.join().unwrap();
+    assert!(matches!(a.error(), Some(ServeError::ExecFailed(_))), "{a:?}");
+    assert!(matches!(b.error(), Some(ServeError::ExecFailed(_))), "{b:?}");
+    match c.error() {
+        Some(ServeError::BreakerOpen { retry_after }) => {
+            assert!(*retry_after > Duration::ZERO);
+            assert!(*retry_after <= Duration::from_secs(10));
+        }
+        other => panic!("expected fast BreakerOpen, got {other:?}"),
+    }
+    assert_eq!(stats.breaker_trips, 1);
+    assert_eq!(stats.errors.exec, 2);
+    assert_eq!(stats.errors.breaker, 1);
+    assert_eq!(stats.served, 0);
+    assert_eq!(stats.accepted, 3);
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn breaker_recovers_through_halfopen_probe() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        retry: RetryPolicy::none(),
+        breaker: BreakerCfg {
+            window: 4,
+            min_samples: 2,
+            trip_ratio: 0.5,
+            cooldown: Duration::from_millis(30),
+            probes: 1,
+        },
+        // exactly the two trip-inducing failures; the probe then succeeds
+        faults: ServerFaults { fail_execs: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        for _ in 0..2 {
+            let r = send_and_wait(&tx, example());
+            assert!(
+                matches!(r.error(), Some(ServeError::ExecFailed(_))),
+                "{r:?}"
+            );
+        }
+        // hammer until the probe closes the breaker again, honoring the
+        // retry_after hint instead of spinning
+        let mut fast_fails = 0usize;
+        for _ in 0..50 {
+            match send_and_wait(&tx, example()) {
+                Response::Ok(_) => return (fast_fails, true),
+                Response::Err(ServeError::BreakerOpen { retry_after }) => {
+                    fast_fails += 1;
+                    std::thread::sleep(retry_after + Duration::from_millis(1));
+                }
+                other => panic!("unexpected response: {other:?}"),
+            }
+        }
+        (fast_fails, false)
+    });
+    let stats = server.run(rx).unwrap();
+    let (fast_fails, recovered) = client.join().unwrap();
+    assert!(recovered, "breaker never recovered");
+    assert!(fast_fails >= 1, "expected at least one fast-fail while Open");
+    assert_eq!(stats.breaker_trips, 1);
+    assert_eq!(stats.errors.exec, 2);
+    assert_eq!(stats.errors.breaker, fast_fails);
+    assert!(stats.served >= 1);
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn deadline_storm_is_shed_without_killing_the_loop() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        deadline: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let mut stale: Vec<Receiver<Response>> = Vec::new();
+    for _ in 0..10 {
+        let (rtx, rrx) = channel();
+        tx.send(Request {
+            x: example(),
+            submitted: Instant::now() - Duration::from_secs(1),
+            reply: rtx,
+        })
+        .unwrap();
+        stale.push(rrx);
+    }
+    let (fresh_tx, fresh_rx) = channel();
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: fresh_tx })
+        .unwrap();
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    for rrx in stale {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).expect("unanswered");
+        assert!(
+            matches!(resp.error(), Some(ServeError::DeadlineExceeded { .. })),
+            "stale request must be shed, got {resp:?}"
+        );
+    }
+    assert!(fresh_rx.recv().unwrap().is_ok());
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.sheds.deadline, 10);
+    assert_eq!(stats.accepted, 11);
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn hot_reload_swaps_model_and_corrupt_push_keeps_last_known_good() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        reload_poll: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+    let (reload_tx, reload_rx) = channel::<ReloadRequest>();
+    server.set_reload(reload_rx);
+
+    let good_bytes = mrc.to_bytes();
+    // a truncated container cannot survive the CRC-protected parse
+    let corrupt = good_bytes[..good_bytes.len() / 2].to_vec();
+    let swapped = {
+        let mut next = mrc.clone();
+        let k = 1u64 << next.c_loc_bits;
+        next.indices[0] = (next.indices[0] + 1) % k;
+        next.to_bytes()
+    };
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        let logits = |r: &Response| -> Vec<f32> {
+            r.prediction().expect("request failed").logits.clone()
+        };
+        let before = logits(&send_and_wait(&tx, example()));
+        // corrupt push: must be rejected, serving must be unaffected
+        reload_tx
+            .send(ReloadRequest { bytes: corrupt, origin: "test:corrupt".into() })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let after_corrupt = logits(&send_and_wait(&tx, example()));
+        // valid push with different indices: must swap in atomically
+        reload_tx
+            .send(ReloadRequest { bytes: swapped, origin: "test:swap".into() })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let after_swap = logits(&send_and_wait(&tx, example()));
+        (before, after_corrupt, after_swap)
+    });
+    let stats = server.run(rx).unwrap();
+    let (before, after_corrupt, after_swap) = client.join().unwrap();
+    assert_eq!(
+        before, after_corrupt,
+        "a rejected push must leave the serving model bit-identical"
+    );
+    assert_ne!(
+        before, after_swap,
+        "an applied push must actually change the decoded model"
+    );
+    assert_eq!(stats.reloads, 1);
+    assert_eq!(stats.reloads_rejected, 1);
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.errored, 0, "no swap-attributable failures");
+    stats.check_invariant().unwrap();
+}
+
+#[test]
+fn chaos_schedule_runs_to_completion_with_exact_accounting() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    const N: usize = 40;
+    let cfg = ServerCfg {
+        faults: ServerFaults {
+            schedule: ChaosSchedule {
+                seed: 0xC4A0_5EED,
+                exec_fail_p: 0.10,
+                // ticks 5 and 6 fail ALL attempts: retries are defeated and
+                // two ExecFailed answers are guaranteed
+                outage: Some((5, 7)),
+                spike_p: 0.10,
+                spike: Duration::from_millis(1),
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+
+    let (tx, rx) = channel::<Request>();
+    let client = std::thread::spawn(move || {
+        // sequential: one request == one batch == one chaos tick
+        (0..N).map(|_| send_and_wait(&tx, example())).collect::<Vec<_>>()
+    });
+    let stats = server.run(rx).unwrap();
+    let responses = client.join().unwrap();
+    assert_eq!(responses.len(), N, "every request answered exactly once");
+    assert_eq!(stats.accepted, N);
+    assert!(
+        stats.errors.exec >= 2,
+        "the outage window must defeat the retry budget"
+    );
+    assert!(
+        stats.retries >= 4,
+        "each outage tick burns the full retry budget (got {})",
+        stats.retries
+    );
+    assert_eq!(stats.served + stats.errored, N);
+    assert_eq!(stats.rejected, 0);
+    stats.check_invariant().unwrap();
+}

@@ -7,6 +7,7 @@ use miracle::codec::MrcFile;
 use miracle::data;
 use miracle::runtime::{self, Runtime};
 use miracle::server::{Request, Server, ServerCfg, ServerFaults, ServeError};
+use miracle::util::retry::RetryPolicy;
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
@@ -59,6 +60,8 @@ fn dead_client_does_not_wedge_the_loop() {
     }
     assert_eq!(stats.served, 9, "dead client's request is still executed");
     assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.accepted, 9);
+    stats.check_invariant().unwrap();
 }
 
 #[test]
@@ -68,6 +71,9 @@ fn lazy_decode_failure_degrades_and_recovers() {
     let mrc = test_mrc(&arts);
     let cfg = ServerCfg {
         lazy_decode: true,
+        // no retry budget: the single injected fault must surface as a
+        // per-request DecodeFailed instead of being absorbed by backoff
+        retry: RetryPolicy::none(),
         faults: ServerFaults { fail_decodes: 1, ..Default::default() },
         ..Default::default()
     };
@@ -96,8 +102,40 @@ fn lazy_decode_failure_degrades_and_recovers() {
     );
     assert!(second.is_ok(), "decode must recover: {second:?}");
     assert_eq!(stats.served, 1);
-    assert_eq!(stats.rejected, 1);
+    // a decode failure is an execution-side error, not an admission shed
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.errored, 1);
+    assert_eq!(stats.errors.decode, 1);
+    assert_eq!(stats.accepted, 2);
+    stats.check_invariant().unwrap();
     assert_eq!(server.blocks_decoded(), arts.meta.b);
+}
+
+#[test]
+fn transient_decode_fault_is_absorbed_by_retry() {
+    let rt = Runtime::cpu().unwrap();
+    let arts = runtime::load(&rt, "tiny_mlp").unwrap();
+    let mrc = test_mrc(&arts);
+    let cfg = ServerCfg {
+        lazy_decode: true,
+        // default retry policy: 3 attempts — one injected per-attempt fault
+        // is invisible to the client and shows up only in the retry counter
+        faults: ServerFaults { fail_decodes: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let mut server = Server::new(&arts, &mrc, cfg).unwrap();
+    let (tx, rx) = channel::<Request>();
+    let (rtx, rrx) = channel();
+    tx.send(Request { x: example(), submitted: Instant::now(), reply: rtx })
+        .unwrap();
+    drop(tx);
+    let stats = server.run(rx).unwrap();
+    let resp = rrx.recv().unwrap();
+    assert!(resp.is_ok(), "retry must absorb the fault: {resp:?}");
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.errored, 0);
+    assert!(stats.retries >= 1, "the absorbed attempt must be counted");
+    stats.check_invariant().unwrap();
 }
 
 #[test]
@@ -127,6 +165,9 @@ fn malformed_request_is_bounced_not_fatal() {
     assert!(ok_rx.recv().unwrap().is_ok());
     assert_eq!(stats.served, 1);
     assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.sheds.bad_request, 1);
+    assert_eq!(stats.accepted, 2);
+    stats.check_invariant().unwrap();
 }
 
 #[test]
@@ -164,6 +205,9 @@ fn stale_requests_are_shed_with_deadline_exceeded() {
     assert!(fresh_rx.recv().unwrap().is_ok());
     assert_eq!(stats.served, 1);
     assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.sheds.deadline, 1);
+    assert_eq!(stats.accepted, 2);
+    stats.check_invariant().unwrap();
 }
 
 #[test]
@@ -204,6 +248,8 @@ fn slow_backend_requests_queued_past_deadline_are_shed() {
     );
     assert_eq!(stats.served, 1);
     assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.sheds.deadline, 1);
+    stats.check_invariant().unwrap();
 }
 
 #[test]
@@ -232,4 +278,5 @@ fn exec_delay_fault_is_observable_in_wall_time() {
         "injected 30ms exec delay not observed (wall {}s)",
         stats.wall_secs
     );
+    stats.check_invariant().unwrap();
 }
