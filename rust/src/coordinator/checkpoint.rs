@@ -504,6 +504,7 @@ impl Checkpoint {
         fn io_err(path: &str, e: std::io::Error) -> CkptError {
             CkptError::Io { path: path.to_string(), detail: e.to_string() }
         }
+        let _sp = crate::obs::span("checkpoint_write");
         let bytes = self.to_container_bytes(fingerprint);
         let tmp = format!("{path}.tmp");
         let mut f = std::fs::File::create(&tmp).map_err(|e| io_err(&tmp, e))?;
@@ -521,6 +522,12 @@ impl Checkpoint {
                 let _ = d.sync_all();
             }
         }
+        crate::obs::metrics().checkpoint_writes.inc();
+        crate::obs_event!(crate::obs::Level::Info, "checkpoint_write",
+            "path" => path,
+            "step" => self.step,
+            "encoded_blocks" => self.encoded_blocks(),
+            "bytes" => bytes.len());
         Ok(())
     }
 

@@ -110,6 +110,7 @@ pub fn encode_block(
     session: &mut super::Session,
     b: usize,
 ) -> Result<EncodeOutcome> {
+    let _sp = crate::obs::span("encode_block");
     let arts = session.arts;
     let meta = &arts.meta;
     let s = meta.s;
@@ -206,6 +207,7 @@ pub fn encode_blocks(
     if blocks.is_empty() {
         return Ok(Vec::new());
     }
+    let _sp = crate::obs::span("encode_blocks");
     let k_chunk = session.arts.meta.k_chunk;
     let (_, n_chunks) = candidate_geometry(session.cfg.c_loc_bits, k_chunk)?;
     let per = (n_chunks as usize).saturating_mul(k_chunk);

@@ -20,10 +20,12 @@ pub use session::{NonFinite, Session, StepMetrics};
 
 use crate::codec::MrcFile;
 use crate::data::Dataset;
+use crate::obs::{self, Level as Ev};
 use crate::prng::Pcg64;
 use crate::runtime::ModelArtifacts;
+use crate::util::json::Json;
 use crate::util::{Error, Result, Timer};
-use crate::{ensure, err, info};
+use crate::{ensure, err, info, obs_event};
 
 /// Hyper-parameters of a MIRACLE run (paper §3.3 / §4 defaults).
 #[derive(Debug, Clone)]
@@ -274,6 +276,11 @@ fn run_schedule<'a>(
                 let ck = Checkpoint::load_verified(path, fp)?;
                 indices = ck.restore(&mut session)?;
                 kl_bits_sum = ck.kl_bits_sum;
+                obs::metrics().checkpoint_resumes.inc();
+                obs_event!(Ev::Info, "checkpoint_resumed",
+                    "path" => path,
+                    "step" => ck.step,
+                    "encoded_blocks" => ck.encoded_blocks());
                 info!(
                     "resumed from {path}: step {}, {}/{} blocks encoded",
                     ck.step,
@@ -317,6 +324,15 @@ fn run_schedule<'a>(
         while (session.state.step as usize) < cfg.i0 {
             session.train_step(true)?;
             let s = session.state.step as usize;
+            obs::metrics_tick(|| {
+                vec![
+                    ("phase", Json::str("train")),
+                    ("step", Json::num(s as f64)),
+                    ("loss", Json::num(session.last_loss() as f64)),
+                    ("acc", Json::num(session.last_acc() as f64)),
+                    ("mean_kl_bits", Json::num(session.mean_kl_bits())),
+                ]
+            });
             if s % every_steps == 0 && s < cfg.i0 {
                 save(&session, &indices, kl_bits_sum)?;
             }
@@ -331,6 +347,12 @@ fn run_schedule<'a>(
         // p is frozen from here on: its stddevs travel in the .mrc header
         // and every block must be coded against the same encoding
         // distribution.
+        obs_event!(Ev::Info, "i0_done",
+            "steps" => cfg.i0,
+            "loss" => session.last_loss(),
+            "acc" => session.last_acc(),
+            "mean_kl_bits" => session.mean_kl_bits(),
+            "target_bits" => cfg.c_loc_bits as u32);
         info!(
             "I0 done: loss {:.4} acc {:.3} mean KL {:.2} bits (target {} bits)",
             session.last_loss(),
@@ -352,14 +374,30 @@ fn run_schedule<'a>(
         while done < order.len() {
             let take = every_blocks.min(order.len() - done);
             let group = order[done..done + take].to_vec();
+            obs_event!(Ev::Debug, "encode_group_start",
+                "first" => done, "take" => take);
             let t = Timer::start();
             let outcomes = encode_blocks(&mut session, &group)?;
             encode_secs += t.secs();
             for (&b, outcome) in group.iter().zip(&outcomes) {
                 kl_bits_sum += outcome.kl_bits;
                 indices[b] = outcome.index;
+                obs::metrics().blocks_encoded.inc();
+                obs_event!(Ev::Info, "encode_block",
+                    "block" => b,
+                    "index" => outcome.index,
+                    "kl_bits" => outcome.kl_bits,
+                    "is_gap_bits" => outcome.is_gap_bits);
             }
             done += take;
+            obs::metrics_tick(|| {
+                vec![
+                    ("phase", Json::str("encode")),
+                    ("blocks_done", Json::num(done as f64)),
+                    ("blocks_total", Json::num(order.len() as f64)),
+                    ("kl_bits_sum", Json::num(kl_bits_sum)),
+                ]
+            });
             if done < order.len() {
                 save(&session, &indices, kl_bits_sum)?;
             }
@@ -387,15 +425,30 @@ fn run_schedule<'a>(
     } else {
         for i in done0..order.len() {
             let b = order[i];
+            obs_event!(Ev::Debug, "encode_block_start", "block" => b);
             let t = Timer::start();
             let outcome = encode_block(&mut session, b)?;
             encode_secs += t.secs();
             kl_bits_sum += outcome.kl_bits;
             indices[b] = outcome.index;
+            obs::metrics().blocks_encoded.inc();
+            obs_event!(Ev::Info, "encode_block",
+                "block" => b,
+                "index" => outcome.index,
+                "kl_bits" => outcome.kl_bits,
+                "is_gap_bits" => outcome.is_gap_bits);
             for _ in 0..cfg.i_intermediate {
                 session.train_step(false)?;
             }
             let done = i + 1;
+            obs::metrics_tick(|| {
+                vec![
+                    ("phase", Json::str("encode")),
+                    ("blocks_done", Json::num(done as f64)),
+                    ("blocks_total", Json::num(order.len() as f64)),
+                    ("kl_bits_sum", Json::num(kl_bits_sum)),
+                ]
+            });
             if done % every_blocks == 0 && done < order.len() {
                 save(&session, &indices, kl_bits_sum)?;
             }

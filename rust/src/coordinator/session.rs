@@ -224,6 +224,17 @@ impl<'a> Session<'a> {
         self.betas.update(&self.last_kl, &self.frozen_mask);
 
         let mean_kl = unfrozen_mean(&self.last_kl, &self.frozen_mask);
+        crate::obs::metrics().train_steps.inc();
+        crate::obs_event!(crate::obs::Level::Debug, "train_step",
+            "step" => step,
+            "loss" => loss,
+            "ce" => ce,
+            "acc" => acc,
+            "mean_kl_nats" => mean_kl,
+            "beta_mean" => {
+                let n = self.betas.beta.len().max(1) as f32;
+                self.betas.beta.iter().copied().sum::<f32>() / n
+            });
         let m = StepMetrics { loss, ce, acc, mean_kl_nats: mean_kl };
         self.history.push(m);
         Ok(m)

@@ -28,6 +28,7 @@ pub mod data;
 pub mod grc;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod prng;
 pub mod runtime;
 pub mod server;

@@ -40,21 +40,71 @@ fn main() {
     }
 }
 
+fn print_usage() {
+    eprintln!(
+        "usage: miracle <compress|eval|info|serve|pareto> [options]\n\
+         \n\
+         subcommands:\n\
+         \x20 compress     run Algorithm 2 on a benchmark model, write .mrc\n\
+         \x20 eval         decode an .mrc and report test error\n\
+         \x20 info         print header + size accounting of an .mrc\n\
+         \x20 serve        batched inference server over an .mrc\n\
+         \x20 pareto       sweep C_loc, emit the (size, error) series as JSON\n\
+         \x20 fuzz-decode  (CI) deterministic corruption fuzzing of decode\n\
+         \x20 chaos-serve  (CI) deterministic chaos drive of the serve loop\n\
+         \n\
+         telemetry (accepted by every subcommand; no flag = no overhead):\n\
+         \x20 --events-out PATH     structured JSON-lines event log\n\
+         \x20 --events-level LVL    debug|info|warn (default info)\n\
+         \x20 --metrics-out PATH    live metrics snapshot, atomically rewritten\n\
+         \x20 --metrics-every N     snapshot every N batches/steps (default 32)\n\
+         \x20 --trace-out PATH      Chrome trace-event JSON (chrome://tracing)"
+    );
+}
+
+/// Bring up the process-wide telemetry sinks from the shared CLI flags
+/// (see `docs/observability.md`). Reading the flags here marks them used
+/// for every subcommand; with none present this configures nothing and
+/// instrumentation stays zero-cost.
+fn init_obs(cmd: &str, args: &Args) -> Result<()> {
+    use miracle::obs::{self, Level, ObsCfg, Value};
+    let cfg = ObsCfg {
+        events_out: args.opt_str("events-out").map(str::to_string),
+        events_level: Level::parse(&args.str("events-level", "info"))?,
+        metrics_out: args.opt_str("metrics-out").map(str::to_string),
+        metrics_every: args.u64("metrics-every", 32)?,
+        trace_out: args.opt_str("trace-out").map(str::to_string),
+    };
+    if !cfg.any_sink() {
+        return Ok(());
+    }
+    obs::init(
+        &cfg,
+        &[
+            ("cmd", Value::from(cmd)),
+            ("pid", Value::from(std::process::id() as u64)),
+        ],
+    )
+}
+
 fn run() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: miracle <compress|eval|info|serve> [options]");
+        print_usage();
         return Ok(());
     }
     let cmd = argv.remove(0);
     let args = Args::parse_from(argv, &["lazy", "half", "resume"])?;
+    // telemetry first, so every later decision (including the SIMD
+    // dispatch just below) lands in the event log
+    init_obs(&cmd, &args)?;
     // --simd {auto|scalar|avx2|neon}: pin the kernel dispatch path before
     // any runtime or kernel runs (CLI wins over the MIRACLE_SIMD env var;
     // both are strict — a typo or an unavailable path is a hard error)
     if let Some(v) = args.opt_str("simd") {
         simd::force(simd::parse(v)?)?;
     }
-    match cmd.as_str() {
+    let result = match cmd.as_str() {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
@@ -68,7 +118,11 @@ fn run() -> Result<()> {
             eprintln!("unknown command '{other}' (compress|eval|info|serve|pareto)");
             std::process::exit(2);
         }
-    }
+    };
+    // final metrics snapshot, event flush, trace-array close — idempotent,
+    // and a no-op when no sink was configured
+    miracle::obs::finish();
+    result
 }
 
 /// Sweep C_loc and emit the (size, error) series as JSON — the scriptable
@@ -358,6 +412,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shed: ShedPolicy = args.str("shed", "reject").parse()?;
     let reload_watch = args.opt_str("reload-watch").map(str::to_string);
     let lazy = args.flag("lazy");
+    let heartbeat_ms = args.u64("heartbeat-ms", 0)?;
     let _threads =
         miracle::util::pool::override_threads(args.usize("threads", 0)?);
     args.finish()?;
@@ -375,6 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline: std::time::Duration::from_millis(deadline_ms),
         queue_depth,
         shed,
+        heartbeat: std::time::Duration::from_millis(heartbeat_ms),
         ..Default::default()
     };
     let mut server = Server::new(&arts, &mrc, cfg)?;
@@ -827,6 +883,19 @@ fn cmd_chaos_serve(args: &Args) -> Result<()> {
     if !report.reload_survived {
         violations.push("requests around the reloads failed".into());
     }
+    // Telemetry reconcile: with `--events-out`, every resilience counter in
+    // the ledger must have an exactly matching event count — the log is
+    // only trustworthy if it never drops or double-counts an incident.
+    // (Requires the default `--events-level info`; sheds log at info.)
+    if let Some(path) = miracle::obs::events_path() {
+        miracle::obs::finish(); // flush before reading our own log
+        match reconcile_events(path, &stats) {
+            Ok(n) => println!(
+                "chaos-serve: event log reconciled ({n} counters match {path})"
+            ),
+            Err(e) => violations.push(format!("event log reconcile: {e}")),
+        }
+    }
 
     println!(
         "chaos-serve seed {seed}: {} accepted -> {} served / {} shed \
@@ -854,6 +923,42 @@ fn cmd_chaos_serve(args: &Args) -> Result<()> {
     }
     println!("chaos-serve: all resilience expectations held");
     Ok(())
+}
+
+/// Count events in a JSON-lines log and check the ones with an exact-match
+/// contract against the serve ledger. Returns how many counters matched.
+fn reconcile_events(
+    path: &str,
+    stats: &miracle::server::ServeStats,
+) -> Result<usize> {
+    use miracle::util::json::Json;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("read {path}: {e}")))?;
+    let mut counts = std::collections::BTreeMap::<String, usize>::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| Error::msg(format!("{path}:{}: {e}", i + 1)))?;
+        let ev = j.get("ev")?.as_str()?;
+        *counts.entry(ev.to_string()).or_default() += 1;
+    }
+    let want: [(&str, usize); 4] = [
+        ("shed", stats.rejected),
+        ("breaker_open", stats.breaker_trips as usize),
+        ("reload_applied", stats.reloads),
+        ("reload_rejected", stats.reloads_rejected),
+    ];
+    for (ev, expect) in want {
+        let got = counts.get(ev).copied().unwrap_or(0);
+        if got != expect {
+            return Err(Error::msg(format!(
+                "'{ev}' events: {got} logged, ledger says {expect}"
+            )));
+        }
+    }
+    Ok(want.len())
 }
 
 /// A fixed tiny_mlp-geometry MCK2 checkpoint for fuzzing without a runtime:

@@ -1,0 +1,224 @@
+//! Structured JSON-lines event log.
+//!
+//! One JSON object per line, built with the in-tree [`crate::util::json`]
+//! writer (no external crates). Every line carries a monotonic
+//! microsecond timestamp relative to process telemetry init (`ts_us`), a
+//! process-wide sequence number (`seq`), a level (`lvl`) and an event name
+//! (`ev`); remaining keys are event-specific fields. Schema:
+//! `docs/observability.md`.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// Event severity. `Debug` is per-step/per-attempt detail, `Info` is
+/// lifecycle milestones, `Warn` is degraded-mode transitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Level> {
+        match s {
+            "debug" => Ok(Level::Debug),
+            "info" => Ok(Level::Info),
+            "warn" => Ok(Level::Warn),
+            other => Err(Error::msg(format!(
+                "unknown event level {other:?} (expected debug|info|warn)"
+            ))),
+        }
+    }
+}
+
+/// Typed field value; `From` impls let call sites pass plain literals.
+#[derive(Debug, Clone)]
+pub enum Value {
+    U(u64),
+    I(i64),
+    F(f64),
+    S(String),
+    B(bool),
+}
+
+impl Value {
+    fn to_json(&self) -> Json {
+        match self {
+            Value::U(v) => Json::Num(*v as f64),
+            Value::I(v) => Json::Num(*v as f64),
+            Value::F(v) => Json::Num(*v),
+            Value::S(v) => Json::str(v),
+            Value::B(v) => Json::Bool(*v),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::U(v)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::U(v as u64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::U(v as u64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::I(v)
+    }
+}
+impl From<i32> for Value {
+    fn from(v: i32) -> Value {
+        Value::I(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Value {
+        Value::F(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::B(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::S(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::S(v)
+    }
+}
+
+/// Leveled JSON-lines sink. Cheap to share: `emit` takes `&self`.
+pub struct EventLog {
+    level: Level,
+    epoch: Instant,
+    seq: AtomicU64,
+    out: Mutex<BufWriter<File>>,
+    path: String,
+}
+
+impl EventLog {
+    pub fn create(path: &str, level: Level, epoch: Instant) -> Result<EventLog> {
+        let f = File::create(path)
+            .map_err(|e| Error::msg(format!("--events-out {path}: {e}")))?;
+        Ok(EventLog {
+            level,
+            epoch,
+            seq: AtomicU64::new(0),
+            out: Mutex::new(BufWriter::new(f)),
+            path: path.to_string(),
+        })
+    }
+
+    #[inline]
+    pub fn enabled(&self, l: Level) -> bool {
+        l >= self.level
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Write one event line. Field keys must not collide with the
+    /// reserved `ts_us`/`seq`/`lvl`/`ev` keys.
+    pub fn emit(&self, l: Level, ev: &str, fields: &[(&str, Value)]) {
+        if !self.enabled(l) {
+            return;
+        }
+        let ts = self.epoch.elapsed().as_micros() as u64;
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut pairs: Vec<(&str, Json)> = Vec::with_capacity(4 + fields.len());
+        pairs.push(("ts_us", Json::Num(ts as f64)));
+        pairs.push(("seq", Json::Num(seq as f64)));
+        pairs.push(("lvl", Json::str(l.name())));
+        pairs.push(("ev", Json::str(ev)));
+        for (k, v) in fields {
+            pairs.push((k, v.to_json()));
+        }
+        let line = Json::obj(pairs).to_string();
+        if let Ok(mut w) = self.out.lock() {
+            let _ = writeln!(w, "{line}");
+        }
+    }
+
+    pub fn flush(&self) {
+        if let Ok(mut w) = self.out.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Warn);
+        assert_eq!(Level::parse("warn").unwrap(), Level::Warn);
+        assert!(Level::parse("verbose").is_err());
+        assert_eq!(Level::Info.name(), "info");
+    }
+
+    #[test]
+    fn emits_parseable_lines_with_reserved_keys() {
+        let path = std::env::temp_dir().join(format!(
+            "miracle_events_test_{}.jsonl",
+            std::process::id()
+        ));
+        let log =
+            EventLog::create(path.to_str().unwrap(), Level::Info, Instant::now())
+                .unwrap();
+        log.emit(Level::Debug, "dropped", &[]); // below level: filtered
+        log.emit(
+            Level::Info,
+            "unit_test",
+            &[("k", Value::from(3u64)), ("s", Value::from("x"))],
+        );
+        log.emit(Level::Warn, "unit_warn", &[("flag", Value::from(true))]);
+        log.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "debug line must be filtered out");
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("ev").unwrap().as_str().unwrap(), "unit_test");
+        assert_eq!(j.get("lvl").unwrap().as_str().unwrap(), "info");
+        assert_eq!(j.get("k").unwrap().as_usize().unwrap(), 3);
+        assert!(j.get("ts_us").unwrap().as_f64().unwrap() >= 0.0);
+        let j2 = Json::parse(lines[1]).unwrap();
+        assert_eq!(j2.get("seq").unwrap().as_usize().unwrap(), 1);
+        assert!(j2.get("flag").unwrap().as_bool().unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+}

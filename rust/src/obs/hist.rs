@@ -1,0 +1,421 @@
+//! Fixed-bucket log₂-scale latency histograms.
+//!
+//! Values are recorded as `u64` microseconds into 65 power-of-two buckets:
+//! bucket 0 holds exact zeros, bucket `i` (1..=64) holds values in
+//! `[2^(i-1), 2^i - 1]`. The bucket index is a single `leading_zeros`
+//! instruction, so recording is branch-light and allocation-free.
+//!
+//! Percentiles use the same nearest-rank convention as
+//! [`crate::util::stats::summarize`] (rank `round(p·(n-1))`, 0-based) with
+//! linear interpolation inside the landing bucket, clamped to the observed
+//! `[min, max]` — exact for `n == 1` and for degenerate all-equal streams.
+//!
+//! [`Hist::merge`] is component-wise addition plus min/max folds, so it is
+//! exactly commutative and associative: recording a stream sequentially or
+//! sharded across threads and merged yields the identical histogram.
+//! [`AtomicHist`] provides the lock-free multi-thread variant: each thread
+//! records into one of a fixed set of shards (plain atomic adds, no locks)
+//! and [`AtomicHist::snapshot`] merges the shards into a [`Hist`].
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Bucket 0 for zero, buckets 1..=64 for each power-of-two magnitude.
+pub const BUCKETS: usize = 65;
+
+const SHARDS: usize = 8;
+
+/// Plain (single-writer) log₂ histogram over `u64` microsecond values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    n: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { counts: [0; BUCKETS], n: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `64 - leading_zeros(v)`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Smallest value that lands in bucket `i`.
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Largest value that lands in bucket `i`.
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.n += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration given in seconds (converted to whole microseconds).
+    #[inline]
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record(secs_to_us(secs));
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Exactly commutative and associative component-wise merge.
+    pub fn merge(&self, other: &Hist) -> Hist {
+        let mut out = Hist::new();
+        for i in 0..BUCKETS {
+            out.counts[i] = self.counts[i] + other.counts[i];
+        }
+        out.n = self.n + other.n;
+        out.sum = self.sum.saturating_add(other.sum);
+        out.min = self.min.min(other.min);
+        out.max = self.max.max(other.max);
+        out
+    }
+
+    /// Percentile in microseconds, `p` in `[0, 1]`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * (self.n - 1) as f64).round() as u64;
+        let mut before = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < before + c {
+                let lo = Self::bucket_lo(i) as f64;
+                let hi = Self::bucket_hi(i) as f64;
+                let frac = ((rank - before) as f64 + 0.5) / c as f64;
+                let v = lo + frac * (hi - lo);
+                let v = v.clamp(self.min as f64, self.max as f64);
+                return v.round() as u64;
+            }
+            before += c;
+        }
+        self.max
+    }
+
+    /// Summary in seconds, mirroring `util::stats::Summary` field names.
+    pub fn summary_secs(&self) -> HistSummary {
+        HistSummary {
+            n: self.n as usize,
+            mean: self.mean_us() / 1e6,
+            min: self.min_us() as f64 / 1e6,
+            max: self.max_us() as f64 / 1e6,
+            p50: self.percentile(0.50) as f64 / 1e6,
+            p95: self.percentile(0.95) as f64 / 1e6,
+            p99: self.percentile(0.99) as f64 / 1e6,
+        }
+    }
+}
+
+/// Percentile summary in seconds. Field names match the printed ledger and
+/// the old `util::stats::Summary` so downstream readers stay source-stable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSummary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+#[inline]
+fn secs_to_us(secs: f64) -> u64 {
+    let us = (secs * 1e6).round();
+    if !(us > 0.0) {
+        0
+    } else if us >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        us as u64
+    }
+}
+
+struct Shard {
+    counts: [AtomicU64; BUCKETS],
+    n: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            n: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free histogram: each thread records into its own shard (plain
+/// atomic adds), [`AtomicHist::snapshot`] merges shards into a [`Hist`].
+pub struct AtomicHist {
+    shards: [Shard; SHARDS],
+}
+
+impl Default for AtomicHist {
+    fn default() -> AtomicHist {
+        AtomicHist::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> AtomicHist {
+        AtomicHist { shards: std::array::from_fn(|_| Shard::new()) }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let s = &self.shards[shard_index()];
+        s.counts[Hist::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.n.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+        s.min.fetch_min(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        self.record(secs_to_us(secs));
+    }
+
+    pub fn snapshot(&self) -> Hist {
+        let mut out = Hist::new();
+        for s in &self.shards {
+            for i in 0..BUCKETS {
+                out.counts[i] += s.counts[i].load(Ordering::Relaxed);
+            }
+            out.n += s.n.load(Ordering::Relaxed);
+            out.sum = out.sum.saturating_add(s.sum.load(Ordering::Relaxed));
+            out.min = out.min.min(s.min.load(Ordering::Relaxed));
+            out.max = out.max.max(s.max.load(Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+/// Stable per-thread shard assignment (round-robin at first use).
+fn shard_index() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SHARD.with(|c| {
+        let mut i = c.get();
+        if i == usize::MAX {
+            i = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            c.set(i);
+        }
+        i
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(state: &mut u64) -> u64 {
+        *state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        *state >> 16
+    }
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(255), 8);
+        assert_eq!(Hist::bucket_of(256), 9);
+        assert_eq!(Hist::bucket_of(1u64 << 63), 64);
+        assert_eq!(Hist::bucket_of(u64::MAX), 64);
+        for i in 1..BUCKETS {
+            assert_eq!(Hist::bucket_of(Hist::bucket_lo(i)), i);
+            assert_eq!(Hist::bucket_of(Hist::bucket_hi(i)), i);
+            assert_eq!(Hist::bucket_hi(i - 1).wrapping_add(1), Hist::bucket_lo(i));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Hist::new();
+        let s = h.summary_secs();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(s.p99, 0.0);
+        assert_eq!(h.percentile(0.5), 0);
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exact() {
+        let mut h = Hist::new();
+        h.record(777);
+        assert_eq!(h.percentile(0.0), 777);
+        assert_eq!(h.percentile(0.5), 777);
+        assert_eq!(h.percentile(0.95), 777);
+        assert_eq!(h.percentile(1.0), 777);
+        assert_eq!(h.min_us(), 777);
+        assert_eq!(h.max_us(), 777);
+        assert!((h.summary_secs().p50 - 777e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_in_one_bucket_stays_within_min_max() {
+        let mut h = Hist::new();
+        for _ in 0..100 {
+            h.record(600);
+        }
+        // degenerate stream: every percentile is exactly the value
+        for p in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), 600);
+        }
+        // uniform fill of one bucket: interpolation is exact
+        let mut u = Hist::new();
+        for v in 512..=1023u64 {
+            u.record(v);
+        }
+        assert_eq!(u.percentile(0.5), 768);
+        assert!(u.percentile(0.99) >= 512 && u.percentile(0.99) <= 1023);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let (mut a, mut b, mut c) = (Hist::new(), Hist::new(), Hist::new());
+        let mut st = 42u64;
+        for _ in 0..500 {
+            a.record(lcg(&mut st) % 100_000);
+            b.record(lcg(&mut st) % 10);
+            c.record(lcg(&mut st));
+        }
+        assert_eq!(a.merge(&b), b.merge(&a));
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+        // identity
+        assert_eq!(a.merge(&Hist::new()), a);
+    }
+
+    #[test]
+    fn sequential_equals_merged_across_threads() {
+        let vals: Vec<u64> = {
+            let mut st = 7u64;
+            (0..4000).map(|_| lcg(&mut st) % 1_000_000).collect()
+        };
+        let mut seq = Hist::new();
+        for &v in &vals {
+            seq.record(v);
+        }
+        // shard by hand into 4 Hists, merge
+        let merged = std::thread::scope(|scope| {
+            let handles: Vec<_> = vals
+                .chunks(1000)
+                .map(|chunk| {
+                    scope.spawn(move || {
+                        let mut h = Hist::new();
+                        for &v in chunk {
+                            h.record(v);
+                        }
+                        h
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .fold(Hist::new(), |acc, h| acc.merge(&h))
+        });
+        assert_eq!(seq, merged);
+        // lock-free shard recording snapshots to the same histogram
+        let at = AtomicHist::new();
+        std::thread::scope(|scope| {
+            for chunk in vals.chunks(1000) {
+                let at = &at;
+                scope.spawn(move || {
+                    for &v in chunk {
+                        at.record(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(at.snapshot(), seq);
+    }
+
+    #[test]
+    fn record_secs_rounds_to_microseconds() {
+        let mut h = Hist::new();
+        h.record_secs(0.0015); // 1500 us
+        assert_eq!(h.max_us(), 1500);
+        h.record_secs(-1.0); // clamped to 0
+        assert_eq!(h.min_us(), 0);
+        h.record_secs(f64::NAN); // NaN clamps to 0, never panics
+        assert_eq!(h.n(), 3);
+    }
+}

@@ -1,0 +1,240 @@
+//! Always-on atomic counters/gauges and the periodic snapshot writer.
+//!
+//! The [`Metrics`] registry is a fixed set of named atomics — incrementing
+//! one is a single relaxed `fetch_add` whether or not any sink is
+//! configured, so instrumentation costs nothing beyond the atomic itself.
+//! When `--metrics-out PATH` is set, [`MetricsSink`] rewrites a JSON
+//! snapshot of the registry every N ticks using the same atomic
+//! tmp + fsync + rename discipline as `coordinator/checkpoint.rs`, so a
+//! reader never observes a torn file.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide metric registry. Names in snapshots match the struct
+/// fields; schema is documented in `docs/observability.md`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    // serve path
+    pub serve_accepted: Counter,
+    pub serve_served: Counter,
+    pub serve_shed: Counter,
+    pub serve_errored: Counter,
+    pub serve_batches: Counter,
+    pub serve_reloads: Counter,
+    pub serve_reloads_rejected: Counter,
+    pub breaker_trips: Counter,
+    // shared resilience plumbing
+    pub retries_absorbed: Counter,
+    pub retries_exhausted: Counter,
+    pub pool_worker_panics: Counter,
+    pub pool_worker_retries: Counter,
+    // compress path
+    pub train_steps: Counter,
+    pub blocks_encoded: Counter,
+    pub checkpoint_writes: Counter,
+    pub checkpoint_resumes: Counter,
+    // gauges
+    pub queue_depth: Gauge,
+    /// 0 = closed, 1 = open, 2 = half-open
+    pub breaker_state: Gauge,
+}
+
+impl Metrics {
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("serve_accepted", self.serve_accepted.get()),
+            ("serve_served", self.serve_served.get()),
+            ("serve_shed", self.serve_shed.get()),
+            ("serve_errored", self.serve_errored.get()),
+            ("serve_batches", self.serve_batches.get()),
+            ("serve_reloads", self.serve_reloads.get()),
+            ("serve_reloads_rejected", self.serve_reloads_rejected.get()),
+            ("breaker_trips", self.breaker_trips.get()),
+            ("retries_absorbed", self.retries_absorbed.get()),
+            ("retries_exhausted", self.retries_exhausted.get()),
+            ("pool_worker_panics", self.pool_worker_panics.get()),
+            ("pool_worker_retries", self.pool_worker_retries.get()),
+            ("train_steps", self.train_steps.get()),
+            ("blocks_encoded", self.blocks_encoded.get()),
+            ("checkpoint_writes", self.checkpoint_writes.get()),
+            ("checkpoint_resumes", self.checkpoint_resumes.get()),
+        ]
+    }
+
+    pub fn gauges(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("queue_depth", self.queue_depth.get()),
+            ("breaker_state", self.breaker_state.get()),
+        ]
+    }
+}
+
+/// The process-wide registry. Always available; costs one lazy init.
+pub fn metrics() -> &'static Metrics {
+    static M: OnceLock<Metrics> = OnceLock::new();
+    M.get_or_init(Metrics::default)
+}
+
+/// Periodic `--metrics-out` snapshot writer.
+pub struct MetricsSink {
+    path: String,
+    every: u64,
+    ticks: AtomicU64,
+    epoch: Instant,
+}
+
+impl MetricsSink {
+    pub fn new(path: &str, every: u64, epoch: Instant) -> MetricsSink {
+        MetricsSink {
+            path: path.to_string(),
+            every: every.max(1),
+            ticks: AtomicU64::new(0),
+            epoch,
+        }
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Count one unit of work (a serve batch, a training step, an encoded
+    /// block); every `every`-th tick rewrites the snapshot. `extras` is
+    /// only invoked when a snapshot is actually due.
+    pub fn tick_with<F>(&self, extras: F) -> bool
+    where
+        F: FnOnce() -> Vec<(&'static str, Json)>,
+    {
+        let t = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        if t % self.every != 0 {
+            return false;
+        }
+        self.write_snapshot(&extras());
+        true
+    }
+
+    /// Serialize the registry (+ live extras) and atomically replace the
+    /// snapshot file: write `{path}.tmp`, fsync, rename — the checkpoint
+    /// discipline, so readers never see a partial snapshot.
+    pub fn write_snapshot(&self, extras: &[(&'static str, Json)]) {
+        let m = metrics();
+        let counters = Json::Obj(
+            m.counters()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            m.gauges()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let live = Json::Obj(
+            extras.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        );
+        let snap = Json::obj(vec![
+            ("ts_us", Json::Num(self.epoch.elapsed().as_micros() as f64)),
+            ("ticks", Json::Num(self.ticks.load(Ordering::Relaxed) as f64)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("live", live),
+        ]);
+        let _ = atomic_write(&self.path, &snap.to_pretty());
+    }
+}
+
+fn atomic_write(path: &str, text: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(text.as_bytes())?;
+    f.write_all(b"\n")?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    // best-effort directory fsync so the rename itself is durable
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_are_plain_atomics() {
+        let m = Metrics::default();
+        m.serve_accepted.inc();
+        m.serve_accepted.add(2);
+        assert_eq!(m.serve_accepted.get(), 3);
+        m.queue_depth.set(7);
+        m.queue_depth.set(4);
+        assert_eq!(m.queue_depth.get(), 4);
+        assert!(m.counters().iter().any(|(k, v)| *k == "serve_accepted" && *v == 3));
+        assert!(m.gauges().iter().any(|(k, v)| *k == "queue_depth" && *v == 4));
+    }
+
+    #[test]
+    fn snapshot_is_atomic_and_parses() {
+        let path = std::env::temp_dir()
+            .join(format!("miracle_metrics_test_{}.json", std::process::id()));
+        let sink = MetricsSink::new(path.to_str().unwrap(), 2, Instant::now());
+        // tick 1: not due, extras must not be invoked
+        let ran = sink.tick_with(|| panic!("extras invoked before due tick"));
+        assert!(!ran);
+        // tick 2: due
+        let ran = sink.tick_with(|| vec![("qps", Json::num(12.5))]);
+        assert!(ran);
+        let j = Json::from_file(path.to_str().unwrap()).unwrap();
+        assert!(j.get("counters").unwrap().as_obj().unwrap().contains_key("serve_shed"));
+        assert!(j.get("gauges").unwrap().as_obj().unwrap().contains_key("breaker_state"));
+        assert_eq!(j.get("live").unwrap().get("qps").unwrap().as_f64().unwrap(), 12.5);
+        assert!(!std::path::Path::new(&format!("{}.tmp", path.display())).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+}

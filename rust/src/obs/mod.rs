@@ -1,0 +1,246 @@
+//! Zero-dependency telemetry: structured events, metrics, timing spans.
+//!
+//! Process-wide sinks are configured at most once (from `main`, before any
+//! work starts) via [`init`]; everything else in the codebase talks to
+//! telemetry through three cheap accessors:
+//!
+//! - [`events`] — the `--events-out` JSON-lines log (or `None`),
+//!   usually via the [`obs_event!`] macro which skips field construction
+//!   entirely when no sink is configured or the level is filtered;
+//! - [`span`] — a drop-guard that records a Chrome-trace complete event
+//!   to the `--trace-out` sink (inert `None` guard otherwise);
+//! - [`metrics`] — always-on atomic counters/gauges (plain relaxed
+//!   atomics; a periodic `--metrics-out` snapshot is driven by
+//!   [`metrics_tick`]).
+//!
+//! **Determinism contract:** telemetry is strictly write-only — no value
+//! read from a sink, counter, or clock ever feeds back into compression
+//! or serving decisions, so `.mrc` bytes and ledger counts are identical
+//! with telemetry on or off (`rust/tests/observability.rs` asserts this
+//! end to end). When [`init`] is never called (library use, unit tests)
+//! every accessor returns `None` and instrumentation reduces to a relaxed
+//! atomic load.
+
+pub mod events;
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+pub use events::{EventLog, Level, Value};
+pub use hist::{AtomicHist, Hist, HistSummary};
+pub use metrics::{metrics, Counter, Gauge, Metrics, MetricsSink};
+pub use trace::TraceSink;
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// Sink configuration, parsed from the shared CLI telemetry flags.
+#[derive(Debug, Clone)]
+pub struct ObsCfg {
+    /// `--events-out PATH` — JSON-lines event log.
+    pub events_out: Option<String>,
+    /// `--events-level {debug|info|warn}` (default info).
+    pub events_level: Level,
+    /// `--metrics-out PATH` — atomically rewritten JSON snapshot.
+    pub metrics_out: Option<String>,
+    /// `--metrics-every N` — snapshot every N ticks (default 32).
+    pub metrics_every: u64,
+    /// `--trace-out PATH` — Chrome trace-event JSON array.
+    pub trace_out: Option<String>,
+}
+
+impl Default for ObsCfg {
+    fn default() -> ObsCfg {
+        ObsCfg {
+            events_out: None,
+            events_level: Level::Info,
+            metrics_out: None,
+            metrics_every: 32,
+            trace_out: None,
+        }
+    }
+}
+
+impl ObsCfg {
+    pub fn any_sink(&self) -> bool {
+        self.events_out.is_some()
+            || self.metrics_out.is_some()
+            || self.trace_out.is_some()
+    }
+}
+
+static EVENTS: OnceLock<Option<EventLog>> = OnceLock::new();
+static TRACE: OnceLock<Option<TraceSink>> = OnceLock::new();
+static METRICS_SINK: OnceLock<Option<MetricsSink>> = OnceLock::new();
+
+/// Configure the process-wide sinks. Call at most once, before spawning
+/// any workers; `ctx` fields (command, seeds, pid) go into the initial
+/// `run_start` event. A second call is an error.
+pub fn init(cfg: &ObsCfg, ctx: &[(&str, Value)]) -> Result<()> {
+    let epoch = Instant::now();
+    let ev = match &cfg.events_out {
+        Some(p) => Some(EventLog::create(p, cfg.events_level, epoch)?),
+        None => None,
+    };
+    let tr = match &cfg.trace_out {
+        Some(p) => Some(TraceSink::create(p, epoch)?),
+        None => None,
+    };
+    let ms = cfg
+        .metrics_out
+        .as_ref()
+        .map(|p| MetricsSink::new(p, cfg.metrics_every, epoch));
+    if EVENTS.set(ev).is_err() {
+        return Err(Error::msg("telemetry already initialized for this process"));
+    }
+    let _ = TRACE.set(tr);
+    let _ = METRICS_SINK.set(ms);
+    if let Some(log) = self::events() {
+        log.emit(Level::Info, "run_start", ctx);
+    }
+    Ok(())
+}
+
+/// The event log, or `None` when `--events-out` was not configured.
+#[inline]
+pub fn events() -> Option<&'static EventLog> {
+    EVENTS.get().and_then(|o| o.as_ref())
+}
+
+/// The trace sink, or `None` when `--trace-out` was not configured.
+#[inline]
+pub fn trace() -> Option<&'static TraceSink> {
+    TRACE.get().and_then(|o| o.as_ref())
+}
+
+/// The metrics snapshot sink, or `None` when `--metrics-out` was not set.
+#[inline]
+pub fn metrics_sink() -> Option<&'static MetricsSink> {
+    METRICS_SINK.get().and_then(|o| o.as_ref())
+}
+
+/// Path of the configured event log (used by `chaos-serve` to reconcile
+/// its own event stream against `ServeStats`).
+pub fn events_path() -> Option<&'static str> {
+    events().map(|e| e.path())
+}
+
+/// Count one unit of work toward the periodic snapshot. The `extras`
+/// closure (live values like qps/p95) runs only when a snapshot is due,
+/// and nothing at all happens without a `--metrics-out` sink.
+pub fn metrics_tick<F>(extras: F)
+where
+    F: FnOnce() -> Vec<(&'static str, Json)>,
+{
+    if let Some(m) = metrics_sink() {
+        m.tick_with(extras);
+    }
+}
+
+/// Flush and finalize every configured sink: final metrics snapshot,
+/// event-log flush, trace-array close. Safe to call multiple times and
+/// with no sinks configured.
+pub fn finish() {
+    if let Some(m) = metrics_sink() {
+        m.write_snapshot(&[]);
+    }
+    if let Some(e) = events() {
+        e.flush();
+    }
+    if let Some(t) = trace() {
+        t.finish();
+    }
+}
+
+/// Drop-guard timing span. When no trace sink is configured this is an
+/// inert two-word struct and drop does nothing.
+pub struct Span {
+    name: &'static str,
+    start_us: u64,
+    active: bool,
+}
+
+/// Open a span named `name` on the current thread's trace lane; the
+/// complete event is written when the guard drops.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    match trace() {
+        Some(t) => Span { name, start_us: t.now_us(), active: true },
+        None => Span { name, start_us: 0, active: false },
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        if let Some(t) = trace() {
+            let end = t.now_us();
+            let lane = trace::thread_lane(t);
+            t.complete(self.name, lane, self.start_us, end.saturating_sub(self.start_us));
+        }
+    }
+}
+
+/// Emit a structured event iff an event sink is configured *and* the
+/// level passes its filter — field expressions are not evaluated
+/// otherwise, so instrumented hot paths pay nothing when disabled.
+///
+/// ```ignore
+/// obs_event!(Level::Info, "shed", "reason" => "overloaded", "depth" => depth);
+/// ```
+#[macro_export]
+macro_rules! obs_event {
+    ($lvl:expr, $ev:expr $(, $k:expr => $v:expr)* $(,)?) => {
+        if let Some(__obs_log) = $crate::obs::events() {
+            if __obs_log.enabled($lvl) {
+                __obs_log.emit(
+                    $lvl,
+                    $ev,
+                    &[$(($k, $crate::obs::Value::from($v))),*],
+                );
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these run in the library test binary where `init` is never
+    // called — they pin down the "free when disabled" contract.
+    #[test]
+    fn accessors_are_none_without_init() {
+        assert!(events().is_none());
+        assert!(trace().is_none());
+        assert!(metrics_sink().is_none());
+        assert!(events_path().is_none());
+    }
+
+    #[test]
+    fn span_and_macro_are_inert_without_sinks() {
+        let s = span("noop");
+        drop(s);
+        let mut evaluated = false;
+        // field expressions must not run when no sink is configured
+        obs_event!(Level::Warn, "noop", "x" => {
+            evaluated = true;
+            1u64
+        });
+        assert!(!evaluated);
+        metrics_tick(|| panic!("extras must not run without a sink"));
+        finish(); // no-op
+    }
+
+    #[test]
+    fn metrics_registry_always_works() {
+        let before = metrics().pool_worker_panics.get();
+        metrics().pool_worker_panics.inc();
+        assert_eq!(metrics().pool_worker_panics.get(), before + 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Chrome trace-event sink.
+//!
+//! Writes the JSON-array flavor of the Trace Event Format understood by
+//! `chrome://tracing` and Perfetto: complete events
+//! (`"ph":"X"`, microsecond `ts`/`dur`) plus `"ph":"M"` `thread_name`
+//! metadata so pool workers get their own lanes. The array is opened at
+//! create time and closed by [`TraceSink::finish`]; events stream out as
+//! they complete, so even an aborted run yields a recoverable prefix.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+pub struct TraceSink {
+    epoch: Instant,
+    out: Mutex<TraceOut>,
+    path: String,
+}
+
+struct TraceOut {
+    w: BufWriter<File>,
+    first: bool,
+    closed: bool,
+}
+
+impl TraceSink {
+    pub fn create(path: &str, epoch: Instant) -> Result<TraceSink> {
+        let mut f = BufWriter::new(
+            File::create(path)
+                .map_err(|e| Error::msg(format!("--trace-out {path}: {e}")))?,
+        );
+        let _ = f.write_all(b"[");
+        Ok(TraceSink {
+            epoch,
+            out: Mutex::new(TraceOut { w: f, first: true, closed: false }),
+            path: path.to_string(),
+        })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Microseconds since telemetry init (the trace time base).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn write_event(&self, j: Json) {
+        if let Ok(mut o) = self.out.lock() {
+            if o.closed {
+                return;
+            }
+            let sep = if o.first { "\n" } else { ",\n" };
+            o.first = false;
+            let line = j.to_string();
+            let _ = o.w.write_all(sep.as_bytes());
+            let _ = o.w.write_all(line.as_bytes());
+        }
+    }
+
+    /// A `"ph":"X"` complete event on thread lane `tid`.
+    pub fn complete(&self, name: &str, tid: u64, ts_us: u64, dur_us: u64) {
+        self.write_event(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("X")),
+            ("cat", Json::str("miracle")),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(ts_us as f64)),
+            ("dur", Json::Num(dur_us as f64)),
+        ]));
+    }
+
+    /// `thread_name` metadata so the viewer labels lane `tid`.
+    pub fn thread_meta(&self, tid: u64, name: &str) {
+        self.write_event(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    /// Close the JSON array and flush. Idempotent.
+    pub fn finish(&self) {
+        if let Ok(mut o) = self.out.lock() {
+            if o.closed {
+                return;
+            }
+            o.closed = true;
+            let _ = o.w.write_all(b"\n]\n");
+            let _ = o.w.flush();
+        }
+    }
+}
+
+/// Stable per-thread trace lane id; registers a `thread_name` metadata
+/// event the first time a thread touches the sink.
+pub fn thread_lane(t: &TraceSink) -> u64 {
+    use std::cell::Cell;
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    thread_local! {
+        static LANE: Cell<u64> = const { Cell::new(u64::MAX) };
+    }
+    LANE.with(|c| {
+        let mut id = c.get();
+        if id == u64::MAX {
+            id = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(id);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{id}"));
+            t.thread_meta(id, &name);
+        }
+        id
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_well_formed_json_array() {
+        let path = std::env::temp_dir()
+            .join(format!("miracle_trace_test_{}.json", std::process::id()));
+        let t = TraceSink::create(path.to_str().unwrap(), Instant::now())
+            .unwrap();
+        let lane = thread_lane(&t);
+        t.complete("unit_span", lane, 10, 5);
+        t.complete("unit_span2", lane, 20, 1);
+        t.finish();
+        t.finish(); // idempotent
+        let j = Json::from_file(path.to_str().unwrap()).unwrap();
+        let arr = j.as_arr().unwrap();
+        // thread_name metadata + 2 complete events
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(arr[1].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(arr[1].get("name").unwrap().as_str().unwrap(), "unit_span");
+        assert_eq!(arr[1].get("dur").unwrap().as_usize().unwrap(), 5);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let path = std::env::temp_dir()
+            .join(format!("miracle_trace_empty_{}.json", std::process::id()));
+        let t = TraceSink::create(path.to_str().unwrap(), Instant::now())
+            .unwrap();
+        t.finish();
+        let j = Json::from_file(path.to_str().unwrap()).unwrap();
+        assert!(j.as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

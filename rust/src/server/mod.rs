@@ -49,14 +49,15 @@ use std::time::{Duration, Instant};
 use crate::codec::MrcFile;
 use crate::coordinator::encoder::decode_single_block;
 use crate::model::Layout;
+use crate::obs::{self, Hist, HistSummary, Level as Ev};
 use crate::runtime::{DeviceBuf, Input, ModelArtifacts};
 use crate::tensor::{Arg, TensorF32, TensorI32};
-use crate::util::breaker::{Breaker, BreakerCfg};
+use crate::util::breaker::{Breaker, BreakerCfg, State as BreakerState};
 use crate::util::faultline::ChaosSchedule;
+use crate::util::json::Json;
 use crate::util::retry::{retry_with, RetryPolicy};
-use crate::util::stats::{summarize, Summary};
 use crate::util::Result;
-use crate::{ensure, err, info};
+use crate::{ensure, err, info, obs_event};
 
 /// One inference request: a flattened input example.
 pub struct Request {
@@ -224,6 +225,9 @@ pub struct ServerCfg {
     /// how often the loop checks the reload channel while idle (only
     /// matters once a reload channel is attached)
     pub reload_poll: Duration,
+    /// print a one-line heartbeat (qps, queue depth, p95, breaker state)
+    /// on this interval; `Duration::ZERO` (the default) disables it
+    pub heartbeat: Duration,
     /// fault injection hooks (inert by default)
     pub faults: ServerFaults,
 }
@@ -240,6 +244,7 @@ impl Default for ServerCfg {
             retry: RetryPolicy::default(),
             breaker: BreakerCfg::default(),
             reload_poll: Duration::from_millis(20),
+            heartbeat: Duration::ZERO,
             faults: ServerFaults::default(),
         }
     }
@@ -309,8 +314,10 @@ pub struct ServeStats {
     pub reloads: usize,
     /// hot reloads refused (kept last-known-good)
     pub reloads_rejected: usize,
-    pub latency: Summary,
-    pub exec_time: Summary,
+    /// end-to-end request latency percentiles (log₂-bucket histogram)
+    pub latency: HistSummary,
+    /// backend exec time per batch (log₂-bucket histogram)
+    pub exec_time: HistSummary,
     pub decode_secs: f64,
     pub wall_secs: f64,
 }
@@ -376,18 +383,27 @@ fn admit(
     tally: &mut Tally,
 ) {
     tally.accepted += 1;
+    obs::metrics().serve_accepted.inc();
     if queue.len() >= depth {
         let err = Response::Err(ServeError::Overloaded { depth });
         match shed {
             ShedPolicy::Reject => {
                 let _ = r.reply.send(err);
                 tally.sheds.overloaded += 1;
+                obs::metrics().serve_shed.inc();
+                obs_event!(Ev::Info, "shed",
+                    "reason" => "overloaded", "policy" => "reject",
+                    "depth" => depth);
                 return;
             }
             ShedPolicy::Oldest => {
                 if let Some(old) = queue.pop_front() {
                     let _ = old.reply.send(err);
                     tally.sheds.overloaded += 1;
+                    obs::metrics().serve_shed.inc();
+                    obs_event!(Ev::Info, "shed",
+                        "reason" => "overloaded", "policy" => "oldest",
+                        "depth" => depth);
                 }
             }
         }
@@ -555,9 +571,15 @@ impl<'a> Server<'a> {
                 None
             };
 
+        let heartbeat = self.cfg.heartbeat;
         let wall = Instant::now();
-        let mut latencies = Vec::new();
-        let mut exec_times = Vec::new();
+        // back-dated so the first completed batch always emits a heartbeat
+        // (deterministic for tests; a live operator sees signs of life
+        // immediately instead of one interval in)
+        let mut last_hb =
+            Instant::now().checked_sub(heartbeat).unwrap_or_else(Instant::now);
+        let mut lat_hist = Hist::new();
+        let mut exec_hist = Hist::new();
         let mut tally = Tally::default();
         let mut queue: VecDeque<Request> = VecDeque::new();
         // batch tick: advances once per batch that passes the breaker gate;
@@ -571,10 +593,18 @@ impl<'a> Server<'a> {
                         Ok(nb) => {
                             bufs = Some(nb);
                             tally.reloads += 1;
+                            obs::metrics().serve_reloads.inc();
+                            obs_event!(Ev::Info, "reload_applied",
+                                "origin" => req.origin.as_str(),
+                                "bytes" => req.bytes.len());
                             info!("hot reload applied ({})", req.origin);
                         }
                         Err(e) => {
                             tally.reloads_rejected += 1;
+                            obs::metrics().serve_reloads_rejected.inc();
+                            obs_event!(Ev::Warn, "reload_rejected",
+                                "origin" => req.origin.as_str(),
+                                "error" => e.to_string());
                             info!(
                                 "hot reload REJECTED ({}): {e}; keeping last-known-good",
                                 req.origin
@@ -629,11 +659,18 @@ impl<'a> Server<'a> {
                         },
                     ));
                     tally.sheds.deadline += 1;
+                    obs::metrics().serve_shed.inc();
+                    obs_event!(Ev::Info, "shed",
+                        "reason" => "deadline",
+                        "waited_us" => waited.as_micros() as u64);
                 } else if r.x.len() != feat {
                     let _ = r.reply.send(Response::Err(ServeError::BadRequest(
                         format!("feature dim {} != {feat}", r.x.len()),
                     )));
                     tally.sheds.bad_request += 1;
+                    obs::metrics().serve_shed.inc();
+                    obs_event!(Ev::Info, "shed",
+                        "reason" => "bad_request", "dim" => r.x.len());
                 } else {
                     batch.push(r);
                 }
@@ -648,6 +685,8 @@ impl<'a> Server<'a> {
                     retry_after: breaker.retry_after(gate_now).unwrap_or_default(),
                 };
                 tally.errors.breaker += batch.len();
+                obs::metrics().serve_errored.add(batch.len() as u64);
+                obs_event!(Ev::Debug, "breaker_fast_fail", "n" => batch.len());
                 for r in batch.drain(..) {
                     let _ = r.reply.send(Response::Err(err.clone()));
                 }
@@ -658,6 +697,7 @@ impl<'a> Server<'a> {
             // lazy decode + one-time upload under retry, degrading to
             // per-request errors on exhaustion (the next batch retries)
             if bufs.is_none() {
+                let sp = obs::span("serve_lazy_decode");
                 let (res, retries) = retry_with(
                     &retry,
                     0xDEC0_DE00 ^ cur_tick,
@@ -667,6 +707,7 @@ impl<'a> Server<'a> {
                         self.upload_model()
                     },
                 );
+                drop(sp);
                 tally.retries += retries as u64;
                 match res {
                     Ok(b) => bufs = Some(b),
@@ -674,6 +715,10 @@ impl<'a> Server<'a> {
                         breaker.record(Instant::now(), false);
                         let err = ServeError::DecodeFailed(e.to_string());
                         tally.errors.decode += batch.len();
+                        obs::metrics().serve_errored.add(batch.len() as u64);
+                        obs_event!(Ev::Warn, "decode_failed",
+                            "tick" => cur_tick, "n" => batch.len(),
+                            "error" => e.to_string());
                         for r in batch.drain(..) {
                             let _ = r.reply.send(Response::Err(err.clone()));
                         }
@@ -708,6 +753,7 @@ impl<'a> Server<'a> {
                     breaker.record(Instant::now(), false);
                     let err = ServeError::ExecFailed(e.to_string());
                     tally.errors.exec += n;
+                    obs::metrics().serve_errored.add(n as u64);
                     for r in batch.drain(..) {
                         let _ = r.reply.send(Response::Err(err.clone()));
                     }
@@ -715,6 +761,7 @@ impl<'a> Server<'a> {
                 }
             };
             let t_exec = Instant::now();
+            let sp_exec = obs::span("serve_exec");
             let (exec, retries) = retry_with(
                 &retry,
                 0xE8EC_0000 ^ cur_tick,
@@ -741,6 +788,7 @@ impl<'a> Server<'a> {
                     )
                 },
             );
+            drop(sp_exec);
             tally.retries += retries as u64;
             let outs = match exec {
                 Ok(outs) => outs,
@@ -748,19 +796,27 @@ impl<'a> Server<'a> {
                     breaker.record(Instant::now(), false);
                     let err = ServeError::ExecFailed(e.to_string());
                     tally.errors.exec += n;
+                    obs::metrics().serve_errored.add(n as u64);
+                    obs_event!(Ev::Warn, "exec_failed",
+                        "tick" => cur_tick, "n" => n,
+                        "error" => e.to_string());
                     for r in batch.drain(..) {
                         let _ = r.reply.send(Response::Err(err.clone()));
                     }
                     continue;
                 }
             };
-            exec_times.push(t_exec.elapsed().as_secs_f64());
+            exec_hist.record_secs(t_exec.elapsed().as_secs_f64());
             let logits = match outs[0].as_f32() {
                 Ok(l) => l,
                 Err(e) => {
                     breaker.record(Instant::now(), false);
                     let err = ServeError::ExecFailed(e.to_string());
                     tally.errors.exec += n;
+                    obs::metrics().serve_errored.add(n as u64);
+                    obs_event!(Ev::Warn, "exec_failed",
+                        "tick" => cur_tick, "n" => n,
+                        "error" => e.to_string());
                     for r in batch.drain(..) {
                         let _ = r.reply.send(Response::Err(err.clone()));
                     }
@@ -773,7 +829,7 @@ impl<'a> Server<'a> {
                 let row = logits.row(i).to_vec();
                 let pred = argmax(&row);
                 let latency = done - r.submitted;
-                latencies.push(latency.as_secs_f64());
+                lat_hist.record_secs(latency.as_secs_f64());
                 let _ = r.reply.send(Response::Ok(Prediction {
                     logits: row,
                     pred,
@@ -782,6 +838,42 @@ impl<'a> Server<'a> {
             }
             tally.served += n;
             tally.batches += 1;
+            let m = obs::metrics();
+            m.serve_served.add(n as u64);
+            m.serve_batches.inc();
+            m.queue_depth.set(queue.len() as u64);
+            m.breaker_state.set(match breaker.state() {
+                BreakerState::Closed => 0,
+                BreakerState::Open => 1,
+                BreakerState::HalfOpen => 2,
+            });
+            obs::metrics_tick(|| {
+                let s = lat_hist.summary_secs();
+                let secs = wall.elapsed().as_secs_f64().max(1e-9);
+                vec![
+                    ("phase", Json::str("serve")),
+                    ("qps", Json::num(tally.served as f64 / secs)),
+                    ("p50_ms", Json::num(s.p50 * 1e3)),
+                    ("p95_ms", Json::num(s.p95 * 1e3)),
+                    ("p99_ms", Json::num(s.p99 * 1e3)),
+                ]
+            });
+            if !heartbeat.is_zero() && last_hb.elapsed() >= heartbeat {
+                last_hb = Instant::now();
+                let s = lat_hist.summary_secs();
+                let secs = wall.elapsed().as_secs_f64().max(1e-9);
+                println!(
+                    "[serve] {} served ({:.0} req/s) | queue {} | p95 {:.2}ms | \
+                     breaker {:?} | shed {} | errored {}",
+                    tally.served,
+                    tally.served as f64 / secs,
+                    queue.len(),
+                    s.p95 * 1e3,
+                    breaker.state(),
+                    tally.sheds.total(),
+                    tally.errors.total()
+                );
+            }
         }
         let stats = ServeStats {
             accepted: tally.accepted,
@@ -796,8 +888,8 @@ impl<'a> Server<'a> {
             breaker_trips: breaker.trips(),
             reloads: tally.reloads,
             reloads_rejected: tally.reloads_rejected,
-            latency: summarize(&latencies),
-            exec_time: summarize(&exec_times),
+            latency: lat_hist.summary_secs(),
+            exec_time: exec_hist.summary_secs(),
             decode_secs: self.decode_secs,
             wall_secs: wall.elapsed().as_secs_f64(),
         };
@@ -904,6 +996,7 @@ mod tests {
         assert!(c.deadline > Duration::ZERO);
         assert!(c.queue_depth > 0);
         assert_eq!(c.shed, ShedPolicy::Reject);
+        assert!(c.heartbeat.is_zero(), "heartbeat must default to off");
         assert!(c.retry.max_attempts >= 1);
         assert_eq!(c.faults.fail_decodes, 0);
         assert_eq!(c.faults.fail_execs, 0);
@@ -1007,8 +1100,8 @@ mod tests {
             breaker_trips: 0,
             reloads: 0,
             reloads_rejected: 0,
-            latency: summarize(&[]),
-            exec_time: summarize(&[]),
+            latency: HistSummary::default(),
+            exec_time: HistSummary::default(),
             decode_secs: 0.0,
             wall_secs: 0.0,
         };

@@ -116,6 +116,8 @@ impl Breaker {
                     self.state = State::HalfOpen;
                     self.probe_successes = 0;
                     self.probes_in_flight = 1;
+                    crate::obs_event!(crate::obs::Level::Info, "breaker_half_open",
+                        "probes" => self.cfg.probes);
                     true
                 } else {
                     false
@@ -177,6 +179,12 @@ impl Breaker {
         self.probe_successes = 0;
         self.probes_in_flight = 0;
         self.trips += 1;
+        // exactly one event per trip, so event-log counts reconcile with
+        // `trips()` (asserted by chaos-serve --events-out)
+        crate::obs::metrics().breaker_trips.inc();
+        crate::obs_event!(crate::obs::Level::Warn, "breaker_open",
+            "trips" => self.trips,
+            "cooldown_ms" => self.cfg.cooldown.as_millis() as u64);
     }
 
     fn close(&mut self) {
@@ -185,6 +193,7 @@ impl Breaker {
         self.window.clear();
         self.probe_successes = 0;
         self.probes_in_flight = 0;
+        crate::obs_event!(crate::obs::Level::Info, "breaker_closed");
     }
 }
 

@@ -176,6 +176,7 @@ where
                 let (head, tail) = rest.split_at_mut(take * run_len);
                 rest = tail;
                 scope.spawn(move || {
+                    let _sp = crate::obs::span("pool_worker");
                     if let Err(p) =
                         catch_unwind(AssertUnwindSafe(|| f(start, head)))
                     {
@@ -189,6 +190,9 @@ where
     failures.sort_by(|a, b| a.0.cmp(&b.0));
     for (si, msg) in failures {
         let (start, take) = spans[si];
+        crate::obs::metrics().pool_worker_panics.inc();
+        crate::obs_event!(crate::obs::Level::Warn, "pool_worker_panic",
+            "first_run" => start, "runs" => take, "panic" => msg.as_str());
         crate::info!(
             "pool: worker for runs {start}..{} panicked ({msg}); \
              retrying once on the supervisor thread",
@@ -203,6 +207,9 @@ where
                 panic_message(p)
             )));
         }
+        crate::obs::metrics().pool_worker_retries.inc();
+        crate::obs_event!(crate::obs::Level::Info, "pool_worker_retry_ok",
+            "first_run" => start, "runs" => take);
     }
     Ok(())
 }

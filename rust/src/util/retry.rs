@@ -144,10 +144,34 @@ where
     loop {
         let attempt = backoff.retries();
         match op(attempt) {
-            Ok(v) => return (Ok(v), backoff.retries()),
+            Ok(v) => {
+                let retries = backoff.retries();
+                if retries > 0 {
+                    crate::obs::metrics().retries_absorbed.add(retries as u64);
+                    crate::obs_event!(crate::obs::Level::Info, "retry_absorbed",
+                        "seed" => seed, "retries" => retries);
+                }
+                return (Ok(v), retries);
+            }
             Err(e) => match backoff.next_delay() {
-                Some(d) => sleep(d),
-                None => return (Err(e), backoff.retries()),
+                Some(d) => {
+                    crate::obs_event!(crate::obs::Level::Debug, "retry_attempt",
+                        "seed" => seed,
+                        "attempt" => backoff.retries(),
+                        "delay_us" => d.as_micros() as u64,
+                        "error" => e.to_string());
+                    sleep(d)
+                }
+                None => {
+                    if backoff.retries() > 0 {
+                        crate::obs::metrics().retries_exhausted.inc();
+                        crate::obs_event!(crate::obs::Level::Warn, "retry_exhausted",
+                            "seed" => seed,
+                            "retries" => backoff.retries(),
+                            "error" => e.to_string());
+                    }
+                    return (Err(e), backoff.retries());
+                }
             },
         }
     }

@@ -132,10 +132,13 @@ pub fn selected() -> Result<SimdPath> {
     if let Some(p) = ACTIVE.get() {
         return Ok(*p);
     }
-    let p = parse(
-        std::env::var("MIRACLE_SIMD").unwrap_or_default().as_str(),
-    )?;
-    Ok(*ACTIVE.get_or_init(|| p))
+    let var = std::env::var("MIRACLE_SIMD").unwrap_or_default();
+    let p = parse(var.as_str())?;
+    let got = *ACTIVE.get_or_init(|| p);
+    crate::obs_event!(crate::obs::Level::Info, "simd_dispatch",
+        "path" => got.name(),
+        "source" => if var.is_empty() { "auto" } else { "env" });
+    Ok(got)
 }
 
 /// Pin the dispatch path from the CLI (`--simd`), before any kernel ran.
@@ -146,6 +149,8 @@ pub fn force(p: SimdPath) -> Result<()> {
         None => {
             let got = *ACTIVE.get_or_init(|| p);
             if got == p {
+                crate::obs_event!(crate::obs::Level::Info, "simd_dispatch",
+                    "path" => got.name(), "source" => "cli");
                 Ok(())
             } else {
                 err!(

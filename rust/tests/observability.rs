@@ -1,0 +1,241 @@
+//! End-to-end telemetry contract (PR 10, `docs/observability.md`):
+//!
+//! 1. **Determinism** — telemetry is write-only: the `.mrc` produced with
+//!    every sink enabled is byte-identical to one produced with none.
+//! 2. **Event log** — every line is valid JSON with the reserved keys
+//!    (`ts_us`, `seq`, `lvl`, `ev`), `seq` strictly increasing, and the
+//!    lifecycle events (`run_start`, `encode_block`, `checkpoint_write`,
+//!    `i0_done`, `simd_dispatch`) all present for a checkpointed compress.
+//! 3. **Metrics snapshot** — parses via `util/json.rs`, carries the
+//!    `counters`/`gauges` registries with sane values.
+//! 4. **Chrome trace** — a well-formed JSON array of complete (`ph: "X"`)
+//!    and metadata events.
+//!
+//! Everything drives the real binary as a subprocess, like
+//! `simd_parity.rs`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use miracle::util::json::Json;
+
+fn miracle_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_miracle"))
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("miracle_obs_{}_{tag}", std::process::id()))
+}
+
+/// Tiny deterministic compress (fixed seeds via defaults); `extra` carries
+/// the telemetry flags for the instrumented run.
+fn run_compress(out: &Path, extra: &[&str]) -> String {
+    let output = miracle_bin()
+        .args([
+            "compress",
+            "--model",
+            "tiny_mlp",
+            "--i0",
+            "2",
+            "--i",
+            "0",
+            "--c-loc-bits",
+            "6",
+            "--train-size",
+            "64",
+            "--test-size",
+            "64",
+            "--out",
+        ])
+        .arg(out)
+        .args(extra)
+        .output()
+        .expect("spawn miracle compress");
+    assert!(
+        output.status.success(),
+        "compress {extra:?} failed: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    String::from_utf8_lossy(&output.stdout).into_owned()
+}
+
+/// Parse a JSON-lines event log: validate reserved keys + seq order and
+/// return `ev` name -> count.
+fn event_counts(path: &Path) -> BTreeMap<String, usize> {
+    let text = std::fs::read_to_string(path).expect("read event log");
+    let mut counts = BTreeMap::new();
+    let mut last_seq = -1i64;
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate()
+    {
+        let j = Json::parse(line)
+            .unwrap_or_else(|e| panic!("event line {}: {e}\n{line}", i + 1));
+        assert!(j.get("ts_us").unwrap().as_f64().unwrap() >= 0.0);
+        let seq = j.get("seq").unwrap().as_i64().unwrap();
+        assert!(seq > last_seq, "seq not increasing at line {}", i + 1);
+        last_seq = seq;
+        let lvl = j.get("lvl").unwrap().as_str().unwrap().to_string();
+        assert!(
+            ["debug", "info", "warn"].contains(&lvl.as_str()),
+            "bad lvl '{lvl}'"
+        );
+        let ev = j.get("ev").unwrap().as_str().unwrap().to_string();
+        *counts.entry(ev).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn mrc_bytes_identical_with_and_without_telemetry() {
+    let plain = tmp_path("plain.mrc");
+    let instr = tmp_path("instr.mrc");
+    let events = tmp_path("events.jsonl");
+    let metrics = tmp_path("metrics.json");
+    let trace = tmp_path("trace.json");
+    let ckpt = tmp_path("instr.ckpt");
+
+    run_compress(&plain, &[]);
+    run_compress(
+        &instr,
+        &[
+            "--events-out",
+            events.to_str().unwrap(),
+            "--events-level",
+            "debug",
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--metrics-every",
+            "1",
+            "--trace-out",
+            trace.to_str().unwrap(),
+            "--checkpoint",
+            ckpt.to_str().unwrap(),
+            "--checkpoint-every",
+            "4",
+        ],
+    );
+
+    // 1. determinism: instrumentation must not perturb the artifact
+    let a = std::fs::read(&plain).expect("read plain mrc");
+    let b = std::fs::read(&instr).expect("read instrumented mrc");
+    assert_eq!(a, b, "telemetry changed the .mrc bytes");
+
+    // 2. event log: reserved keys, ordering, lifecycle coverage
+    let counts = event_counts(&events);
+    assert_eq!(counts.get("run_start"), Some(&1), "{counts:?}");
+    assert_eq!(counts.get("i0_done"), Some(&1), "{counts:?}");
+    assert!(counts.get("simd_dispatch").copied().unwrap_or(0) >= 1);
+    assert!(
+        counts.get("train_step").copied().unwrap_or(0) >= 2,
+        "debug level must include per-step training events: {counts:?}"
+    );
+    let blocks = counts.get("encode_block").copied().unwrap_or(0);
+    assert!(blocks >= 1, "no encode_block events: {counts:?}");
+    assert!(
+        counts.get("checkpoint_write").copied().unwrap_or(0) >= 1,
+        "checkpointed run logged no checkpoint_write: {counts:?}"
+    );
+
+    // 3. metrics snapshot: registries present, values reconcile
+    let m = Json::parse(
+        &std::fs::read_to_string(&metrics).expect("read metrics"),
+    )
+    .expect("metrics snapshot must parse");
+    assert!(m.get("ts_us").unwrap().as_f64().unwrap() >= 0.0);
+    let counters = m.get("counters").unwrap().as_obj().unwrap();
+    assert_eq!(
+        counters.get("blocks_encoded").unwrap().as_usize().unwrap(),
+        blocks,
+        "counter and event log disagree on blocks encoded"
+    );
+    assert!(counters.get("train_steps").unwrap().as_usize().unwrap() >= 2);
+    assert!(m.get("gauges").unwrap().as_obj().is_ok());
+
+    // 4. Chrome trace: a JSON array of named events, at least one complete
+    let t = Json::parse(&std::fs::read_to_string(&trace).expect("read trace"))
+        .expect("trace must be valid JSON");
+    let arr = t.as_arr().expect("trace must be a JSON array");
+    assert!(!arr.is_empty());
+    let mut complete = 0usize;
+    for e in arr {
+        assert!(e.get("ph").unwrap().as_str().is_ok());
+        assert!(e.get("name").unwrap().as_str().is_ok());
+        if e.get("ph").unwrap().as_str().unwrap() == "X" {
+            complete += 1;
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    assert!(complete >= 1, "no complete spans in the trace");
+
+    for p in [plain, instr, events, metrics, trace, ckpt] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn serve_runs_with_all_sinks() {
+    let mrc = tmp_path("serve.mrc");
+    let events = tmp_path("serve_events.jsonl");
+    let metrics = tmp_path("serve_metrics.json");
+    let trace = tmp_path("serve_trace.json");
+    run_compress(&mrc, &[]);
+
+    let output = miracle_bin()
+        .args(["serve", "--mrc"])
+        .arg(&mrc)
+        .args([
+            "--clients",
+            "2",
+            "--requests",
+            "8",
+            "--heartbeat-ms",
+            "1",
+            "--events-out",
+            events.to_str().unwrap(),
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--metrics-every",
+            "1",
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn miracle serve");
+    assert!(
+        output.status.success(),
+        "serve failed: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(stdout.contains("latency:"), "no ledger printed:\n{stdout}");
+    assert!(
+        stdout.contains("[serve]"),
+        "--heartbeat-ms 1 printed no heartbeat:\n{stdout}"
+    );
+
+    let counts = event_counts(&events);
+    assert_eq!(counts.get("run_start"), Some(&1), "{counts:?}");
+
+    let m = Json::parse(
+        &std::fs::read_to_string(&metrics).expect("read metrics"),
+    )
+    .expect("metrics snapshot must parse");
+    let counters = m.get("counters").unwrap().as_obj().unwrap();
+    assert_eq!(
+        counters.get("serve_served").unwrap().as_usize().unwrap(),
+        16,
+        "2 clients x 8 requests should all be served"
+    );
+    // the final snapshot (written by obs::finish) has empty `live` extras,
+    // but the registries must still reconcile
+    assert!(m.get("live").unwrap().as_obj().is_ok());
+
+    let t = Json::parse(&std::fs::read_to_string(&trace).expect("read trace"))
+        .expect("trace must be valid JSON");
+    assert!(!t.as_arr().unwrap().is_empty());
+
+    for p in [mrc, events, metrics, trace] {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -384,3 +384,55 @@ fn chaos_schedule_runs_to_completion_with_exact_accounting() {
     assert_eq!(stats.rejected, 0);
     stats.check_invariant().unwrap();
 }
+
+/// PR 10: the event log tells the truth under chaos. Run the full
+/// `chaos-serve` drive as a subprocess with `--events-out`; the binary's
+/// internal reconcile (exact counter<->event match) gates its exit code,
+/// and we independently re-count the shed / breaker / reload events here
+/// against the chaos geometry (DEPTH=4, BURST=20 => 16 overload sheds).
+#[test]
+fn chaos_serve_event_log_reconciles() {
+    let events = std::env::temp_dir().join(format!(
+        "miracle_chaos_events_{}.jsonl",
+        std::process::id()
+    ));
+    let output = std::process::Command::new(env!("CARGO_BIN_EXE_miracle"))
+        .args(["chaos-serve", "--seed", "7", "--iters", "40", "--events-out"])
+        .arg(&events)
+        .output()
+        .expect("spawn miracle chaos-serve");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(
+        output.status.success(),
+        "chaos-serve failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    assert!(
+        stdout.contains("event log reconciled"),
+        "internal reconcile did not run:\n{stdout}"
+    );
+
+    use miracle::util::json::Json;
+    let text = std::fs::read_to_string(&events).expect("read event log");
+    let mut counts = std::collections::BTreeMap::<String, usize>::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let j = Json::parse(line).expect("every event line parses");
+        *counts
+            .entry(j.get("ev").unwrap().as_str().unwrap().to_string())
+            .or_insert(0) += 1;
+    }
+    // geometry: the pre-queued burst of 20 against a depth-4 queue sheds
+    // exactly 16; phase 3 trips the breaker at least once; phase 4 pushes
+    // exactly one rejected and one applied reload
+    assert!(
+        counts.get("shed").copied().unwrap_or(0) >= 16,
+        "burst sheds missing from the log: {counts:?}"
+    );
+    assert!(
+        counts.get("breaker_open").copied().unwrap_or(0) >= 1,
+        "breaker trip not logged: {counts:?}"
+    );
+    assert_eq!(counts.get("reload_applied"), Some(&1), "{counts:?}");
+    assert_eq!(counts.get("reload_rejected"), Some(&1), "{counts:?}");
+    let _ = std::fs::remove_file(&events);
+}
